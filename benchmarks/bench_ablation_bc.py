@@ -1,0 +1,52 @@
+"""Ablation: reduced phase-b/c chain length (the paper's §4 future work —
+"reduce the number of samples for sub-blocks in phase (b) and (c)").
+
+Sweeps the phase-b/c sample count at fixed phase-a length and reports the
+RMSE / modeled-16-worker-wall trade-off.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.core import bmf as BMF
+from repro.core import pp as PP
+from repro.core.partition import partition, suggest_grid
+from repro.data import synthetic as SYN
+from repro.data.sparse import train_test_split
+
+from benchmarks.common import emit
+
+
+def run(dataset: str = "movielens", n_samples: int = 40):
+    coo, p = SYN.generate(dataset, seed=61)
+    train, test = train_test_split(coo, 0.1, seed=62)
+    K = min(p.K, 16)
+    I, J = suggest_grid(train.n_rows, train.n_cols, 4)
+    part = partition(train, I, J)
+
+    base = BMF.BMFConfig(K=K, n_samples=n_samples, burnin=n_samples // 3)
+    # warm the executables
+    PP.run_pp(jax.random.key(9), part, base._replace(n_samples=2, burnin=0),
+              test)
+
+    for frac, bc in [("1.00", None), ("0.50", n_samples // 2),
+                     ("0.25", n_samples // 4)]:
+        cfg = base._replace(phase_bc_samples=bc)
+        res = PP.run_pp(jax.random.key(0), part, cfg, test)
+        t16 = res.modeled_parallel_s(16)
+        emit(f"ablation_bc/{dataset}/bc_frac={frac}", t16,
+             f"rmse={res.rmse:.4f}")
+    return True
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="movielens")
+    args = ap.parse_args()
+    run(args.dataset)
+
+
+if __name__ == "__main__":
+    main()

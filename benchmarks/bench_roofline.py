@@ -1,0 +1,44 @@
+"""Assignment roofline table: reads the dry-run artifact JSON and emits one
+row per (arch × shape × mesh) with the three roofline terms + dominant."""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+DEFAULT = Path(__file__).resolve().parent / "dryrun_results.json"
+
+
+def run(path=DEFAULT, mesh: str = "single"):
+    recs = json.loads(Path(path).read_text())
+    rows = []
+    for r in recs:
+        if r.get("tag"):           # hillclimb variants reported in §Perf
+            continue
+        if r["status"] != "ok" or r["mesh"] != mesh:
+            continue
+        rf = r["roofline"]
+        step = rf["compute_s"] + rf["memory_s"] + rf["collective_s"]
+        emit(f"roofline/{r['arch']}/{r['shape']}/{mesh}", step,
+             f"dom={rf['dominant']};c={rf['compute_s']:.3e};"
+             f"m={rf['memory_s']:.3e};coll={rf['collective_s']:.3e};"
+             f"useful={r['useful_flops_ratio']:.2f}")
+        rows.append(r)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--path", default=str(DEFAULT))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    args = ap.parse_args()
+    if not Path(args.path).exists():
+        print("# no dryrun_results.json - run python -m repro.launch.dryrun --all first")
+        return
+    run(args.path, args.mesh)
+
+
+if __name__ == "__main__":
+    main()

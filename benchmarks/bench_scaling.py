@@ -1,0 +1,122 @@
+"""Paper Figures 4-5: strong scaling of D-BMF+PP.
+
+The container has one CPU core, so multi-node wall-clock cannot be
+measured directly. Methodology (documented in EXPERIMENTS §Scaling):
+
+  1. MEASURE the per-block Gibbs sweep time for each block of an I×J
+     partition on this host (real compute, real XLA).
+  2. MEASURE the within-block distributed-BMF communication volume
+     analytically (core.distributed.sweep_comm_bytes — it is exact) and
+     convert to seconds with the v5e ICI model (50 GB/s × 2 links).
+  3. MODEL the PP schedule exactly as the paper describes: phase a is
+     serial; phase b runs its I+J-2 blocks on min(nodes, I+J-2) groups;
+     phase c its (I-1)(J-1) blocks on min(nodes, ...) groups; within a
+     block, distributed BMF divides compute by the group size with the
+     comm term added per sweep.
+
+  T(nodes) = T_a(g) + ceil(n_b/G) · max_b T_b(g) + ceil(n_c/G) · max_c T_c(g)
+  where G = node groups, g = nodes per group.
+
+This reproduces the paper's qualitative findings: more blocks => more total
+compute but more parallelism; node counts aligned with I+J / I·J show
+step-downs; K=100-style compute-heavy blocks scale further than K=10.
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import time
+
+import jax
+import numpy as np
+
+from repro.core import bmf as BMF
+from repro.core import distributed as DIST
+from repro.core import gibbs as GIBBS
+from repro.core.partition import partition
+from repro.data import synthetic as SYN
+from repro.data.sparse import coo_to_padded_csr, train_test_split
+
+from benchmarks.common import emit
+
+ICI_BYTES_PER_S = 100e9     # 50 GB/s x 2 links
+
+
+def _block_sweep_seconds(blk, cfg, n_probe=6):
+    csr_r = coo_to_padded_csr(blk.coo)
+    csr_c = coo_to_padded_csr(blk.coo.transpose())
+    t = jax.random.key(0)
+    dummy = np.zeros(1, np.int32)
+    t0 = time.time()
+    GIBBS.run_gibbs(t, csr_r, csr_c, dummy, dummy,
+                    BMF.BMFConfig(K=cfg.K, n_samples=n_probe, burnin=0))
+    per_sweep = (time.time() - t0) / n_probe
+    return per_sweep, csr_r.n_cols
+
+
+def model_strong_scaling(part, cfg, nodes_list, n_samples):
+    """Returns {nodes: seconds} for the PP schedule model."""
+    I, J = part.I, part.J
+    # measure per-block sweep time (serial, this host)
+    t_a, D_a = _block_sweep_seconds(part.block(0, 0), cfg)
+    b_blocks = ([part.block(i, 0) for i in range(1, I)] +
+                [part.block(0, j) for j in range(1, J)])
+    c_blocks = [part.block(i, j) for i in range(1, I) for j in range(1, J)]
+    t_b = [_block_sweep_seconds(b, cfg) for b in b_blocks[:2]]
+    t_c = [_block_sweep_seconds(b, cfg) for b in c_blocks[:2]] if c_blocks else []
+    # use max of sampled blocks as the critical path block
+    tb_max = max((t for t, _ in t_b), default=0.0)
+    tc_max = max((t for t, _ in t_c), default=0.0)
+    Db = max((d for _, d in t_b), default=1)
+    Dc = max((d for _, d in t_c), default=1)
+
+    out = {}
+    for nodes in nodes_list:
+        def block_time(t_serial, D, g):
+            """distributed BMF inside a block on g nodes."""
+            comm = DIST.sweep_comm_bytes(D, cfg.K) / ICI_BYTES_PER_S
+            return n_samples * (t_serial / g + comm)
+
+        # phase a: all nodes on the single block
+        T = block_time(t_a, D_a, nodes)
+        # phase b: split nodes into G groups over n_b blocks
+        n_b = len(b_blocks)
+        if n_b:
+            G = min(nodes, n_b)
+            g = max(nodes // G, 1)
+            T += math.ceil(n_b / G) * block_time(tb_max, Db, g)
+        n_c = len(c_blocks)
+        if n_c:
+            G = min(nodes, n_c)
+            g = max(nodes // G, 1)
+            T += math.ceil(n_c / G) * block_time(tc_max, Dc, g)
+        out[nodes] = T
+    return out
+
+
+def run(dataset: str, grids=((1, 1), (4, 4), (8, 8)),
+        nodes=(1, 2, 4, 8, 16, 32, 64, 128, 256),
+        n_samples: int = 30):
+    coo, p = SYN.generate(dataset, seed=41)
+    train, _ = train_test_split(coo, 0.1, seed=42)
+    cfg = BMF.BMFConfig(K=min(p.K, 16), n_samples=n_samples,
+                        burnin=n_samples // 3)
+    for (I, J) in grids:
+        part = partition(train, I, J)
+        curve = model_strong_scaling(part, cfg, list(nodes), n_samples)
+        t1 = curve[nodes[0]]
+        for n, t in curve.items():
+            emit(f"fig45_scaling/{dataset}/{I}x{J}/nodes={n}", t,
+                 f"speedup={t1 / max(t, 1e-12):.2f}")
+    return True
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="movielens")
+    args = ap.parse_args()
+    run(args.dataset)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Paper Table 1 (bottom rows): rows/sec and ratings/sec of the Gibbs
+sampler per dataset — measured on this host, derived = both metrics."""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core import bmf as BMF
+from repro.core import gibbs as GIBBS
+from repro.data import synthetic as SYN
+from repro.data.sparse import coo_to_padded_csr, train_test_split
+
+from benchmarks.common import emit
+
+
+def run(dataset: str, n_probe: int = 8):
+    coo, p = SYN.generate(dataset, seed=51)
+    train, _ = train_test_split(coo, 0.1, seed=52)
+    csr_r = coo_to_padded_csr(train)
+    csr_c = coo_to_padded_csr(train.transpose())
+    K = min(p.K, 16)
+    cfg = BMF.BMFConfig(K=K, n_samples=n_probe, burnin=0)
+    dummy = np.zeros(1, np.int32)
+    # warmup + compile
+    GIBBS.run_gibbs(jax.random.key(0), csr_r, csr_c, dummy, dummy,
+                    BMF.BMFConfig(K=K, n_samples=1, burnin=0))
+    t0 = time.time()
+    GIBBS.run_gibbs(jax.random.key(0), csr_r, csr_c, dummy, dummy, cfg)
+    dt = (time.time() - t0) / n_probe
+    rows_per_s = (train.n_rows + train.n_cols) / dt
+    ratings_per_s = 2 * train.nnz / dt   # each rating visited in both factors
+    emit(f"table1_throughput/{dataset}", dt,
+         f"rows_per_s={rows_per_s:.0f};ratings_per_s={ratings_per_s:.0f};K={K}")
+    return rows_per_s, ratings_per_s
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--datasets", nargs="+", default=["movielens", "amazon"])
+    args = ap.parse_args()
+    for d in args.datasets:
+        run(d)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Paper Table 3: wall-clock of BMF+PP vs full BMF (single node).
+
+The paper's claim: PP cuts single-system wall-clock ~2× on movielens,
+~2.3× netflix, ~5.6× yahoo, ~3× amazon versus full BMF at the same
+per-block sample count (fewer data per Gibbs sweep, same #sweeps).
+derived = speedup (bmf / bmf_pp).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.core import bmf as BMF
+from repro.core import pp as PP
+from repro.core.partition import partition, suggest_grid
+from repro.data import synthetic as SYN
+from repro.data.sparse import train_test_split
+
+from benchmarks.common import emit
+
+
+def run(dataset: str, n_blocks: int = 4, n_samples: int = 30):
+    coo, p = SYN.generate(dataset, seed=21)
+    train, test = train_test_split(coo, 0.1, seed=22)
+    K = min(p.K, 16)
+    cfg = BMF.BMFConfig(K=K, n_samples=n_samples, burnin=n_samples // 3)
+
+    I, J = suggest_grid(train.n_rows, train.n_cols, n_blocks)
+    part = partition(train, I, J)
+
+    # warm-up pass: populate the jit caches (compile time is amortized in a
+    # production deployment; steady-state sweeps are what Table 3 compares)
+    warm = cfg._replace(n_samples=2, burnin=0)
+    PP.run_full_bmf(jax.random.key(9), train, test, warm)
+    PP.run_pp(jax.random.key(9), part, warm, test)
+
+    rmse_full, t_full, _ = PP.run_full_bmf(jax.random.key(0), train, test, cfg)
+    res = PP.run_pp(jax.random.key(1), part, cfg, test)
+
+    speedup = t_full / max(res.wall_time_s, 1e-9)
+    emit(f"table3_walltime/{dataset}/bmf", t_full, f"rmse={rmse_full:.4f}")
+    emit(f"table3_walltime/{dataset}/bmf_pp_{I}x{J}", res.wall_time_s,
+         f"rmse={res.rmse:.4f};speedup={speedup:.2f}")
+    # the paper's Table-3 deployment runs blocks of a phase concurrently on
+    # the node's cores; model that with the measured per-block times
+    t16 = res.modeled_parallel_s(16)
+    emit(f"table3_walltime/{dataset}/bmf_pp_{I}x{J}_16workers", t16,
+         f"rmse={res.rmse:.4f};speedup={t_full / max(t16, 1e-9):.2f}")
+
+    # beyond-paper: reduced phase-b/c chains (paper §4 future work)
+    cfg_red = cfg._replace(phase_bc_samples=max(8, n_samples // 2))
+    res_red = PP.run_pp(jax.random.key(1), part, cfg_red, test)
+    t16r = res_red.modeled_parallel_s(16)
+    emit(f"table3_walltime/{dataset}/bmf_pp_{I}x{J}_reduced_bc", t16r,
+         f"rmse={res_red.rmse:.4f};speedup={t_full / max(t16r, 1e-9):.2f}")
+    return t_full, res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--datasets", nargs="+", default=["movielens"])
+    args = ap.parse_args()
+    for d in args.datasets:
+        run(d)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Shared helpers for the benchmark harness.
+
+Output contract: every benchmark prints ``name,us_per_call,derived`` CSV
+rows (one per paper-table cell) where ``derived`` carries the table's
+metric (RMSE, speedup, bytes, ...).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+
+def timed(fn: Callable, *args, repeats: int = 1):
+    """Run fn, return (result, seconds). jax results are block_until_ready'd."""
+    import jax
+    t0 = time.time()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args)
+        jax.block_until_ready(out) if hasattr(out, "block_until_ready") or \
+            isinstance(out, (tuple, list, dict)) else None
+    return out, (time.time() - t0) / repeats
+
+
+def emit(name: str, seconds: float, derived):
+    print(f"{name},{seconds * 1e6:.1f},{derived}")

@@ -1,0 +1,51 @@
+"""Benchmark entrypoint: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Budget-friendly defaults; pass
+--full for the larger presets.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="larger datasets / paper K (slow on CPU)")
+    ap.add_argument("--only", nargs="*", default=None)
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import (bench_ablation_bc, bench_blocksize, bench_rmse,
+                            bench_roofline, bench_scaling, bench_throughput,
+                            bench_walltime)
+
+    suites = {
+        "table2_rmse": lambda: bench_rmse.run(
+            "movielens" if not args.full else "netflix"),
+        "table3_walltime": lambda: bench_walltime.run("movielens"),
+        "fig3_blocksize": lambda: bench_blocksize.run(
+            "netflix" if args.full else "movielens"),
+        "fig45_scaling": lambda: bench_scaling.run("movielens"),
+        "table1_throughput": lambda: bench_throughput.run("movielens"),
+        "ablation_bc": lambda: bench_ablation_bc.run("movielens"),
+        "roofline": lambda: bench_roofline.run(mesh="single"),
+    }
+    failed = []
+    for name, fn in suites.items():
+        if args.only and name not in args.only:
+            continue
+        print(f"# --- {name} ---")
+        try:
+            fn()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Host-side checkpointing: pytree <-> npz with a JSON manifest.
+
+Works for params, optimizer state, BMF posteriors — any pytree of arrays.
+Arrays are gathered to host (fine for the CPU container and for the
+single-host driver; a multi-host deployment would swap in a
+per-shard writer behind the same interface).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":   # npz has no bf16; manifest keeps dtype
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out, treedef
+
+
+def save(path: str | Path, tree: Any, step: int = 0, extra: Dict = None):
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    flat, _ = _flatten(tree)
+    np.savez(path.with_suffix(".npz"), **flat)
+    manifest = {
+        "step": step,
+        "keys": sorted(flat.keys()),
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        **(extra or {}),
+    }
+    path.with_suffix(".json").write_text(json.dumps(manifest, indent=1))
+
+
+def restore(path: str | Path, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shape-checked; cast to the
+    like-leaf dtype, which round-trips bf16 through the f32 npz storage)."""
+    import jax.numpy as jnp
+    path = Path(path)
+    data = np.load(path.with_suffix(".npz"))
+    flat, _ = jax.tree_util.tree_flatten_with_path(like)
+    rebuilt = []
+    for p, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in p)
+        arr = data[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        rebuilt.append(jnp.asarray(arr).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), rebuilt)
+
+
+def manifest(path: str | Path) -> Dict:
+    return json.loads(Path(path).with_suffix(".json").read_text())

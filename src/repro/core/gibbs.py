@@ -1,0 +1,154 @@
+"""Gibbs sampler for BMF — single-block (jit, lax.fori_loop) version.
+
+One sweep:
+  1. (optional) resample NW hyperparameters for U and V given current factors
+  2. sample all rows of U | V  (parallel across rows — batched einsums)
+  3. sample all rows of V | U
+
+Running accumulators (post-burn-in): predictive sums on the test entries
+(for RMSE of the posterior-mean predictor), factor means and outer-product
+sums (for Posterior Propagation summarization).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bmf as BMF
+from repro.core import posterior as POST
+from repro.core.posterior import NormalWishart, RowGaussians
+from repro.data.sparse import PaddedCSR
+
+
+class GibbsAccumulators(NamedTuple):
+    pred_sum: jnp.ndarray      # (n_test,) sum over kept samples of u·v
+    pred_cnt: jnp.ndarray      # scalar
+    U_sum: jnp.ndarray         # (N, K)
+    U_outer: jnp.ndarray       # (N, K, K)
+    V_sum: jnp.ndarray         # (D, K)
+    V_outer: jnp.ndarray       # (D, K, K)
+
+
+class GibbsResult(NamedTuple):
+    U: jnp.ndarray
+    V: jnp.ndarray
+    acc: GibbsAccumulators
+    U_post: RowGaussians       # summarized per-row posteriors
+    V_post: RowGaussians
+
+
+def _summarize(sum_, outer, cnt, ridge=1e-4):
+    mean = sum_ / cnt
+    cov = outer / cnt - jnp.einsum("nk,nl->nkl", mean, mean)
+    K = mean.shape[-1]
+    cov = cov + ridge * jnp.eye(K)
+    return POST.from_moments(mean, jnp.linalg.inv(cov))
+
+
+from functools import partial
+
+
+@partial(jax.jit, static_argnames=("cfg", "n_cols_r", "n_cols_c"))
+def _run_gibbs_jit(key, csr_rows_arrs, csr_cols_arrs, test_rows, test_cols,
+                   cfg, n_cols_r, n_cols_c, n_samples, burnin,
+                   U_prior, V_prior, U0, V0):
+    # n_samples/burnin are traced: one executable serves any chain length
+    # (warm-up runs, reduced phase-b/c chains, ...)
+    csr_rows = PaddedCSR(*csr_rows_arrs, n_cols=n_cols_r)
+    csr_cols = PaddedCSR(*csr_cols_arrs, n_cols=n_cols_c)
+    return _run_gibbs_impl(key, csr_rows, csr_cols, test_rows, test_cols,
+                           cfg, n_samples, burnin, U_prior, V_prior, U0, V0)
+
+
+def run_gibbs(key,
+              csr_rows: PaddedCSR,      # R rows:    users x items
+              csr_cols: PaddedCSR,      # R^T rows:  items x users
+              test_rows: jnp.ndarray,   # (n_test,) user ids
+              test_cols: jnp.ndarray,   # (n_test,) item ids
+              cfg: BMF.BMFConfig,
+              U_prior: Optional[RowGaussians] = None,
+              V_prior: Optional[RowGaussians] = None,
+              U0: Optional[jnp.ndarray] = None,
+              V0: Optional[jnp.ndarray] = None) -> GibbsResult:
+    """Run cfg.n_samples sweeps (cfg.burnin of them discarded).
+
+    U_prior / V_prior: propagated per-row priors (PP phases b/c). When None,
+    the factor gets the NW hierarchical prior resampled each sweep.
+
+    The whole chain is one cached jitted executable keyed on (shapes, cfg) —
+    the PP scheduler buckets all blocks to common shapes precisely so every
+    block reuses this compilation.
+    """
+    N, D, K = csr_rows.n_rows, csr_cols.n_rows, cfg.K
+    k0, key = jax.random.split(key)
+    if U0 is None or V0 is None:
+        U0_, V0_ = BMF.init_factors(k0, N, D, K)
+        U0 = U0 if U0 is not None else U0_
+        V0 = V0 if V0 is not None else V0_
+    cfg_key = cfg._replace(n_samples=0, burnin=0, phase_bc_samples=None)
+    return _run_gibbs_jit(key,
+                          (csr_rows.idx, csr_rows.val, csr_rows.mask),
+                          (csr_cols.idx, csr_cols.val, csr_cols.mask),
+                          test_rows, test_cols, cfg_key,
+                          csr_rows.n_cols, csr_cols.n_cols,
+                          jnp.asarray(cfg.n_samples, jnp.int32),
+                          jnp.asarray(cfg.burnin, jnp.int32),
+                          U_prior, V_prior, U0, V0)
+
+
+def _run_gibbs_impl(key, csr_rows, csr_cols, test_rows, test_cols, cfg,
+                    n_samples, burnin, U_prior, V_prior, U0, V0) -> GibbsResult:
+    N, D, K = csr_rows.n_rows, csr_cols.n_rows, cfg.K
+    nw = POST.default_nw(K)
+
+    acc0 = GibbsAccumulators(
+        pred_sum=jnp.zeros_like(test_rows, dtype=jnp.float32),
+        pred_cnt=jnp.zeros((), jnp.float32),
+        U_sum=jnp.zeros((N, K)), U_outer=jnp.zeros((N, K, K)),
+        V_sum=jnp.zeros((D, K)), V_outer=jnp.zeros((D, K, K)))
+
+    def sweep(i, carry):
+        key, U, V, acc = carry
+        key, kh1, kh2, ku, kv = jax.random.split(key, 5)
+
+        if U_prior is None:
+            muU, LamU = BMF.sample_hyper(kh1, U, nw)
+            u_prior = POST.broadcast_prior(muU, LamU, N)
+        else:
+            u_prior = U_prior
+        if V_prior is None:
+            muV, LamV = BMF.sample_hyper(kh2, V, nw)
+            v_prior = POST.broadcast_prior(muV, LamV, D)
+        else:
+            v_prior = V_prior
+
+        U = BMF.sample_factor(ku, csr_rows, V, cfg.tau, u_prior,
+                              cfg.use_kernel)
+        V = BMF.sample_factor(kv, csr_cols, U, cfg.tau, v_prior,
+                              cfg.use_kernel)
+
+        keep = (i >= burnin).astype(jnp.float32)
+        pred = BMF.predict(U, V, test_rows, test_cols)
+        acc = GibbsAccumulators(
+            pred_sum=acc.pred_sum + keep * pred,
+            pred_cnt=acc.pred_cnt + keep,
+            U_sum=acc.U_sum + keep * U,
+            U_outer=acc.U_outer + keep * jnp.einsum("nk,nl->nkl", U, U),
+            V_sum=acc.V_sum + keep * V,
+            V_outer=acc.V_outer + keep * jnp.einsum("nk,nl->nkl", V, V))
+        return (key, U, V, acc)
+
+    key, U, V, acc = jax.lax.fori_loop(
+        0, n_samples, sweep, (key, U0, V0, acc0))
+
+    cnt = jnp.maximum(acc.pred_cnt, 1.0)
+    U_post = _summarize(acc.U_sum, acc.U_outer, cnt)
+    V_post = _summarize(acc.V_sum, acc.V_outer, cnt)
+    return GibbsResult(U=U, V=V, acc=acc, U_post=U_post, V_post=V_post)
+
+
+def rmse_from_acc(acc: GibbsAccumulators, test_vals: jnp.ndarray) -> jnp.ndarray:
+    pred = acc.pred_sum / jnp.maximum(acc.pred_cnt, 1.0)
+    return jnp.sqrt(jnp.mean((pred - test_vals) ** 2))

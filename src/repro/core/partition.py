@@ -1,0 +1,109 @@
+"""I×J block partitioning of the rating matrix for Posterior Propagation.
+
+The paper (§3.3) finds approximately-square blocks give the best
+wall-clock/RMSE trade-off, with the block grid following the matrix aspect
+ratio. ``suggest_grid`` implements that heuristic; ``partition`` builds the
+per-block local COO with load-balancing row/col permutations (the
+fixed-shape-padding analogue of ref [16]'s sparsity-aware distribution).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.data.sparse import (COO, apply_permutation, balance_permutation)
+
+
+@dataclass
+class Block:
+    i: int
+    j: int
+    row_ids: np.ndarray       # global (permuted-space) row ids, sorted
+    col_ids: np.ndarray
+    coo: COO                  # local coordinates
+    phase: str                # 'a' | 'b_row' | 'b_col' | 'c'
+
+
+@dataclass
+class Partition:
+    I: int
+    J: int
+    row_perm: np.ndarray      # original -> permuted position
+    col_perm: np.ndarray
+    row_splits: np.ndarray    # (I+1,) boundaries in permuted space
+    col_splits: np.ndarray
+    blocks: List[List[Block]] # [i][j]
+
+    def block(self, i: int, j: int) -> Block:
+        return self.blocks[i][j]
+
+    def all_blocks(self):
+        for row in self.blocks:
+            yield from row
+
+
+def _phase(i: int, j: int) -> str:
+    if i == 0 and j == 0:
+        return "a"
+    if j == 0:
+        return "b_row"
+    if i == 0:
+        return "b_col"
+    return "c"
+
+
+def suggest_grid(n_rows: int, n_cols: int, n_blocks: int) -> Tuple[int, int]:
+    """Paper §3.3: blocks should be ~square => I/J ≈ n_rows/n_cols with
+    I·J ≈ n_blocks."""
+    best = (1, n_blocks)
+    best_err = float("inf")
+    for I in range(1, n_blocks + 1):
+        if n_blocks % I:
+            continue
+        J = n_blocks // I
+        # squareness: rows-per-block vs cols-per-block
+        err = abs(math.log((n_rows / I) / (n_cols / J)))
+        if err < best_err:
+            best_err, best = err, (I, J)
+    return best
+
+
+def partition(coo: COO, I: int, J: int, balance: bool = True,
+              seed: int = 0) -> Partition:
+    if balance:
+        row_perm = balance_permutation(coo, "row")
+        col_perm = balance_permutation(coo, "col")
+    else:
+        rng = np.random.default_rng(seed)
+        row_perm = rng.permutation(coo.n_rows)
+        col_perm = rng.permutation(coo.n_cols)
+    pc = apply_permutation(coo, row_perm, col_perm)
+
+    row_splits = np.linspace(0, coo.n_rows, I + 1).astype(np.int64)
+    col_splits = np.linspace(0, coo.n_cols, J + 1).astype(np.int64)
+
+    blocks: List[List[Block]] = []
+    for i in range(I):
+        row = []
+        r_ids = np.arange(row_splits[i], row_splits[i + 1])
+        for j in range(J):
+            c_ids = np.arange(col_splits[j], col_splits[j + 1])
+            sub = pc.submatrix(r_ids, c_ids)
+            row.append(Block(i=i, j=j, row_ids=r_ids, col_ids=c_ids,
+                             coo=sub, phase=_phase(i, j)))
+        blocks.append(row)
+    return Partition(I=I, J=J, row_perm=row_perm, col_perm=col_perm,
+                     row_splits=row_splits, col_splits=col_splits,
+                     blocks=blocks)
+
+
+def nnz_balance_stats(part: Partition) -> dict:
+    nnz = np.array([[b.coo.nnz for b in row] for row in part.blocks])
+    return {
+        "min": int(nnz.min()), "max": int(nnz.max()),
+        "mean": float(nnz.mean()),
+        "imbalance": float(nnz.max() / max(nnz.mean(), 1.0)),
+    }

@@ -1,0 +1,52 @@
+"""Synthetic token pipeline for the LLM drivers (offline container).
+
+Generates a deterministic mixture of structured sequences so the loss has
+learnable signal (repeats, arithmetic-progression tokens, local n-gram
+patterns) rather than pure noise — a ~100M model shows a clearly
+decreasing loss within tens of steps.
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+def synthetic_token_batches(cfg: ArchConfig, batch: int, seq: int,
+                            seed: int = 0) -> Iterator[dict]:
+    rng = np.random.default_rng(seed)
+    V = cfg.vocab_size
+
+    def make_seq():
+        kind = rng.integers(0, 3)
+        if kind == 0:        # periodic repeats
+            period = int(rng.integers(2, 8))
+            base = rng.integers(0, V, period)
+            return np.tile(base, seq // period + 1)[:seq]
+        if kind == 1:        # arithmetic progression mod V
+            start = int(rng.integers(0, V))
+            stride = int(rng.integers(1, 7))
+            return (start + stride * np.arange(seq)) % V
+        # Markov-ish bigram walk over a small alphabet slice
+        lo = int(rng.integers(0, max(V - 64, 1)))
+        out = [int(rng.integers(lo, lo + 64))]
+        for _ in range(seq - 1):
+            out.append(lo + (out[-1] - lo + int(rng.integers(0, 3))) % 64)
+        return np.asarray(out)
+
+    while True:
+        toks = np.stack([make_seq() for _ in range(batch)]).astype(np.int32)
+        b = {"tokens": jnp.asarray(toks)}
+        if cfg.family == "vlm":
+            b["image_embeds"] = jnp.asarray(
+                rng.normal(size=(batch, cfg.n_image_tokens, cfg.d_model)),
+                jnp.bfloat16)
+        if cfg.family == "audio":
+            b["audio_embeds"] = jnp.asarray(
+                rng.normal(size=(batch, cfg.n_audio_frames, cfg.d_model)),
+                jnp.bfloat16)
+        yield b

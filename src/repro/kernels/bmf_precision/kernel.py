@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: per-row precision/linear-term accumulation for the BMF
+Gibbs conditional — the paper's compute hot-spot (O(nnz·K²), §3.4 "compute
+intensity is O(K³) per row").
+
+TPU adaptation (vs the paper's CPU/MPI inner loop):
+  - K is padded to the 128-lane MXU width by the wrapper (ops.py); the
+    per-row rank-1 accumulation Σ_m v v^T becomes a (K, M_tile) × (M_tile, K)
+    matmul on the MXU, batched over a tile of TN rows held in VMEM.
+  - the grid is (N/TN, M/TM); the M axis is innermost so the (TN, K, K)
+    output block stays resident in VMEM and accumulates across M tiles
+    (revisited-output accumulation pattern).
+
+VMEM budget per step: TN·TM·K·4 (Vg tile) + TN·K·K·4 (acc) ≈
+8·256·128·4 + 8·128·128·4 = 1.6 MB — comfortably inside the ~16 MB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TN = 8      # rows per tile
+TM = 256    # nnz slots per tile
+
+
+def _kernel(v_ref, val_ref, mask_ref, lam_ref, eta_ref, *, tau: float,
+            n_m_tiles: int):
+    m_idx = pl.program_id(1)
+
+    @pl.when(m_idx == 0)
+    def _init():
+        lam_ref[...] = jnp.zeros_like(lam_ref)
+        eta_ref[...] = jnp.zeros_like(eta_ref)
+
+    v = v_ref[...].astype(jnp.float32)          # (TN, TM, K)
+    w = mask_ref[...].astype(jnp.float32)       # (TN, TM)
+    r = val_ref[...].astype(jnp.float32)        # (TN, TM)
+
+    vm = v * w[..., None]
+    # batched (K, TM) x (TM, K) matmuls on the MXU
+    lam_ref[...] += tau * jax.lax.dot_general(
+        vm, v, (((1,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+    eta_ref[...] += tau * jnp.einsum(
+        "nm,nmk->nk", r * w, v, preferred_element_type=jnp.float32)
+
+
+def precision_accum_padded(Vg, val, mask, tau: float, *, interpret=False):
+    """Vg: (N, M, K) with N % TN == 0, M % TM == 0, K % 128 == 0."""
+    N, M, K = Vg.shape
+    assert N % TN == 0 and M % TM == 0, (N, M)
+    grid = (N // TN, M // TM)
+    kernel = functools.partial(_kernel, tau=tau, n_m_tiles=grid[1])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TN, TM, K), lambda n, m: (n, m, 0)),
+            pl.BlockSpec((TN, TM), lambda n, m: (n, m)),
+            pl.BlockSpec((TN, TM), lambda n, m: (n, m)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TN, K, K), lambda n, m: (n, 0, 0)),
+            pl.BlockSpec((TN, K), lambda n, m: (n, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, K, K), jnp.float32),
+            jax.ShapeDtypeStruct((N, K), jnp.float32),
+        ],
+        interpret=interpret,
+    )(Vg, val, mask)

@@ -1,0 +1,44 @@
+"""Jit'd public wrapper for the bmf_precision kernel.
+
+Handles the gather (stays in XLA — it's HBM-bandwidth work), pads
+(N, M, K) to kernel tile multiples (K to the 128 MXU lanes), dispatches to
+the Pallas kernel (interpret=True off-TPU), and slices the padding away.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bmf_precision.kernel import TM, TN, precision_accum_padded
+from repro.kernels.bmf_precision.ref import precision_accum_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("tau",))
+def precision_accum(idx, val, mask, other, tau: float):
+    """idx/val/mask: padded CSR (N, M); other: (D, K) factor matrix.
+    Returns (Lam (N,K,K), eta (N,K)) likelihood contributions."""
+    N, M = idx.shape
+    K = other.shape[-1]
+    Vg = other[idx]                                   # (N, M, K) gather in XLA
+
+    Kp = ((K + 127) // 128) * 128
+    Np = ((N + TN - 1) // TN) * TN
+    Mp = ((M + TM - 1) // TM) * TM
+    Vp = jnp.zeros((Np, Mp, Kp), Vg.dtype).at[:N, :M, :K].set(Vg)
+    valp = jnp.zeros((Np, Mp), val.dtype).at[:N, :M].set(val)
+    maskp = jnp.zeros((Np, Mp), mask.dtype).at[:N, :M].set(mask)
+
+    Lam, eta = precision_accum_padded(Vp, valp, maskp, tau,
+                                      interpret=not _on_tpu())
+    return Lam[:N, :K, :K], eta[:N, :K]
+
+
+def precision_accum_reference(idx, val, mask, other, tau: float):
+    Vg = other[idx]
+    return precision_accum_ref(Vg, val, mask, tau)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the bmf_precision kernel.
+
+Given gathered factor rows Vg = V[idx] (N, M, K), mask (N, M) and ratings
+val (N, M), computes the per-row Gibbs conditional contributions
+
+    Lam[n] = tau * sum_m mask[n,m] * Vg[n,m] Vg[n,m]^T     (N, K, K)
+    eta[n] = tau * sum_m mask[n,m] * val[n,m] * Vg[n,m]    (N, K)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def precision_accum_ref(Vg, val, mask, tau: float):
+    Vm = Vg * mask[..., None]
+    Lam = tau * jnp.einsum("nmk,nml->nkl", Vm, Vg,
+                           preferred_element_type=jnp.float32)
+    eta = tau * jnp.einsum("nm,nmk->nk", val * mask, Vg,
+                           preferred_element_type=jnp.float32)
+    return Lam, eta

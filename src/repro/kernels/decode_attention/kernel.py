@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: single-token GQA decode attention over a (ring) KV
+cache — the serving hot-spot for decode_32k / long_500k.
+
+Design (flash-decode, TPU-adapted):
+  - grid = (B, Hkv, S/TS); the S axis is the innermost (sequential) grid
+    dim, so the f32 online-softmax state (m, l, acc) lives in VMEM scratch
+    and persists across S tiles; out is written on the last tile.
+  - each step loads a (TS, hd) K tile and V tile plus the (group, hd) query
+    slice for this KV head; scores are a (group, TS) matmul — group = H/Hkv
+    query heads share this KV head (GQA).
+  - masking uses per-slot absolute positions (ring caches are not
+    contiguous in time), so causal+sliding-window masks stay exact after
+    wrap-around.
+
+VMEM per step: TS·hd·2·2 (K,V bf16) + group·hd·4 + group·TS·4 ≈
+512·128·4 + small ≈ 0.3 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TS = 512   # kv slots per tile
+
+
+def _kernel(q_ref, k_ref, v_ref, pos_ref, qpos_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, window: int, n_s: int, scale: float):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale       # (group, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)            # (TS, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)            # (TS, hd)
+    kv_pos = pos_ref[...]                              # (TS,)
+    q_pos = qpos_ref[0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (group, TS)
+    valid = (kv_pos >= 0) & (kv_pos <= q_pos)
+    if window > 0:
+        valid = valid & (kv_pos > q_pos - window)
+    s = jnp.where(valid[None, :], s, -jnp.inf)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+    p = jnp.exp(s - m_safe[:, None])
+    p = jnp.where(valid[None, :], p, 0.0)
+    corr = jnp.where(jnp.isinf(m_prev), 0.0, jnp.exp(m_prev - m_safe))
+    l_scr[...] = l_scr[...] * corr + p.sum(-1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(s_idx == n_s - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)[:, None])
+
+
+def decode_attention_padded(q, k, v, kv_pos, q_pos, *, window: int = 0,
+                            interpret: bool = False):
+    """q: (B, Hkv, group, hd); k/v: (B, S, Hkv, hd); kv_pos: (S,) int32;
+    q_pos: (1,) int32. S % TS == 0. Returns (B, Hkv, group, hd) f32."""
+    B, Hkv, group, hd = q.shape
+    S = k.shape[1]
+    assert S % TS == 0, S
+    n_s = S // TS
+    scale = 1.0 / (hd ** 0.5)
+    kernel = functools.partial(_kernel, window=window, n_s=n_s, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, n_s),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, hd), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, TS, 1, hd), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((1, TS, 1, hd), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((TS,), lambda b, h, s: (s,)),
+            pl.BlockSpec((1,), lambda b, h, s: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, hd), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, group, hd), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((group,), jnp.float32),       # m (running max)
+            pltpu.VMEM((group,), jnp.float32),       # l (denominator)
+            pltpu.VMEM((group, hd), jnp.float32),    # acc (numerator)
+        ],
+        interpret=interpret,
+    )(q, k, v, kv_pos, q_pos)

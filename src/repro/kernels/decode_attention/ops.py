@@ -1,0 +1,42 @@
+"""Jit'd wrapper for the decode-attention kernel: pads S to tile multiples,
+reshapes GQA heads, dispatches (interpret off-TPU), restores shapes."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import TS, decode_attention_padded
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("window",))
+def decode_attention(q, k, v, kv_pos, q_pos, window: int = 0):
+    """q: (B, H, hd); k/v: (B, S, Hkv, hd); kv_pos: (S,) int32 absolute
+    positions (-1 empty); q_pos: scalar int32. Returns (B, H, hd) f32."""
+    B, H, hd = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    group = H // Hkv
+    qr = q.reshape(B, Hkv, group, hd)
+
+    Sp = ((S + TS - 1) // TS) * TS
+    if Sp != S:
+        pad = Sp - S
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, pad), constant_values=-1)
+
+    out = decode_attention_padded(
+        qr, k, v, kv_pos.astype(jnp.int32),
+        jnp.asarray(q_pos, jnp.int32).reshape(1), window=window,
+        interpret=not _on_tpu())
+    return out.reshape(B, H, hd)
+
+
+def decode_attention_reference(q, k, v, kv_pos, q_pos, window: int = 0):
+    return decode_attention_ref(q, k, v, kv_pos, q_pos, window)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the single-token GQA decode-attention kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, kv_pos, q_pos, window: int = 0):
+    """q: (B, H, hd); k/v: (B, S, Hkv, hd); kv_pos: (S,) absolute positions
+    (-1 = empty slot); q_pos: scalar int. Causal + optional sliding window.
+    Returns (B, H, hd) in f32."""
+    B, H, hd = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    group = H // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Hkv, group, hd)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    s = jnp.einsum("bhgd,bshd->bhgs", qf * scale, k.astype(jnp.float32))
+    valid = (kv_pos >= 0) & (kv_pos <= q_pos)
+    if window > 0:
+        valid = valid & (kv_pos > q_pos - window)
+    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(valid[None, None, None, :], p, 0.0)
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, hd)

@@ -1,0 +1,134 @@
+"""Pallas TPU kernel: q-tiled flash attention (prefill / training forward).
+
+Why (EXPERIMENTS §Perf H3b/H7): the pure-jnp chunked attention streams its
+(B, Sq, Hkv, group, TK) score tensors through HBM — at prefill_32k that is
+the dominant memory-roofline term for every attention arch (e.g. ~17 GB per
+shared-attn call for zamba2). Here each (TQ, TK) score tile lives in VMEM
+between the two MXU matmuls; HBM sees only the q/k/v/o streams.
+
+Grid = (B, H, Sq/TQ, Skv/TK); the KV axis is innermost/sequential so the
+online-softmax state (m, l, acc) persists in VMEM scratch across KV tiles;
+the output tile is finalized on the last KV step. GQA via index_map: the
+q-head h reads KV head h // group. Causal/SWA masks are computed from
+absolute tile offsets; fully-masked tiles short-circuit via pl.when.
+
+VMEM per step: TQ·hd (q) + 2·TK·hd (k,v) + TQ·TK (scores) + TQ·hd (acc)
+≈ (256+512)·128·4 + 256·512·4 ≈ 0.9 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TQ = 256
+TK = 512
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            causal: bool, window: int, n_k: int, scale: float,
+            lse_ref=None):
+    kt = pl.program_id(3)
+    qt = pl.program_id(2)
+
+    @pl.when(kt == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_lo = qt * TQ
+    k_lo = kt * TK
+    # tile-level skip: causal => no kv beyond the last q of this tile;
+    # window => no kv before the first q's window start
+    live = jnp.bool_(True)
+    if causal:
+        live = jnp.logical_and(live, k_lo <= q_lo + TQ - 1)
+    if window > 0:
+        live = jnp.logical_and(live, k_lo + TK - 1 > q_lo - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, :, 0].astype(jnp.float32) * scale    # (TQ, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)            # (TK, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (TQ,TK)
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (TQ, TK), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (TQ, TK), 1)
+        mask = jnp.ones((TQ, TK), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, -jnp.inf)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe[:, None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.where(jnp.isinf(m_prev), 0.0, jnp.exp(m_prev - m_safe))
+        l_scr[...] = l_scr[...] * corr + p.sum(-1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(kt == n_k - 1)
+    def _finalize():
+        o_ref[0, :, 0] = (acc_scr[...] /
+                          jnp.maximum(l_scr[...], 1e-30)[:, None])
+        if lse_ref is not None:
+            m_fin = jnp.where(jnp.isinf(m_scr[...]), 0.0, m_scr[...])
+            lse_ref[0, :, 0] = m_fin + jnp.log(
+                jnp.maximum(l_scr[...], 1e-30))
+
+
+def flash_attention_padded(q, k, v, *, causal=True, window=0,
+                           interpret=False, return_lse=False):
+    """q: (B, Sq, H, hd); k/v: (B, Skv, Hkv, hd); Sq % TQ == 0,
+    Skv % TK == 0. Returns (B, Sq, H, hd) f32 (and, with return_lse, the
+    per-row logsumexp (B, Sq, H) f32 the backward pass needs)."""
+    B, Sq, H, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    group = H // Hkv
+    n_q, n_k = Sq // TQ, Skv // TK
+    scale = 1.0 / (hd ** 0.5)
+
+    in_specs = [
+        pl.BlockSpec((1, TQ, 1, hd), lambda b, h, qt, kt: (b, qt, h, 0)),
+        pl.BlockSpec((1, TK, 1, hd),
+                     lambda b, h, qt, kt, grp=group: (b, kt, h // grp, 0)),
+        pl.BlockSpec((1, TK, 1, hd),
+                     lambda b, h, qt, kt, grp=group: (b, kt, h // grp, 0)),
+    ]
+    scratch = [
+        pltpu.VMEM((TQ,), jnp.float32),
+        pltpu.VMEM((TQ,), jnp.float32),
+        pltpu.VMEM((TQ, hd), jnp.float32),
+    ]
+    o_spec = pl.BlockSpec((1, TQ, 1, hd), lambda b, h, qt, kt: (b, qt, h, 0))
+    o_shape = jax.ShapeDtypeStruct((B, Sq, H, hd), jnp.float32)
+
+    if not return_lse:
+        kernel = functools.partial(_kernel, causal=causal, window=window,
+                                   n_k=n_k, scale=scale)
+        return pl.pallas_call(
+            kernel, grid=(B, H, n_q, n_k), in_specs=in_specs,
+            out_specs=o_spec, out_shape=o_shape, scratch_shapes=scratch,
+            interpret=interpret)(q, k, v)
+
+    def kernel_lse(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr):
+        _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                causal=causal, window=window, n_k=n_k, scale=scale,
+                lse_ref=lse_ref)
+
+    return pl.pallas_call(
+        kernel_lse, grid=(B, H, n_q, n_k), in_specs=in_specs,
+        out_specs=[o_spec,
+                   pl.BlockSpec((1, TQ, 1), lambda b, h, qt, kt: (b, qt, h))],
+        out_shape=[o_shape, jax.ShapeDtypeStruct((B, Sq, H), jnp.float32)],
+        scratch_shapes=scratch, interpret=interpret)(q, k, v)

@@ -1,0 +1,160 @@
+"""Pallas TPU kernels: flash-attention backward (dq and dk/dv passes).
+
+Standard flash-bwd formulation. The forward saves per-row logsumexp
+L = m + log(l); the backward recomputes each (TQ, TK) score tile in VMEM:
+
+    p  = exp(q·kᵀ·scale - L)                (exact softmax tile)
+    dv += pᵀ · do
+    dp = do · vᵀ
+    ds = p ⊙ (dp - D)        with D = rowsum(do ⊙ o)
+    dq += ds · k · scale
+    dk += dsᵀ · q · scale
+
+Two kernels because the reductions run along different axes:
+  - dq pass: grid (B, H, n_q, n_k), kv innermost, dq accumulates in scratch.
+  - dkv pass: grid (B, H, n_k, n_q), q innermost, dk/dv accumulate in scratch.
+GQA: dk/dv are produced per Q-head and summed over the group by the wrapper
+(ops.py) — keeps both kernels free of cross-head reductions.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.flash_attention.kernel import TK, TQ
+
+
+def _mask(q_lo, k_lo, causal, window):
+    qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (TQ, TK), 0)
+    kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (TQ, TK), 1)
+    m = jnp.ones((TQ, TK), bool)
+    if causal:
+        m &= kpos <= qpos
+    if window > 0:
+        m &= kpos > qpos - window
+    return m
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, L_ref, Dl_ref, dq_ref, acc,
+               *, causal, window, n_k, scale):
+    kt = pl.program_id(3)
+    qt = pl.program_id(2)
+
+    @pl.when(kt == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    q = q_ref[0, :, 0].astype(jnp.float32)
+    k = k_ref[0, :, 0].astype(jnp.float32)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    do = do_ref[0, :, 0].astype(jnp.float32)
+    L = L_ref[0, :, 0]
+    Dl = Dl_ref[0, :, 0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    m = _mask(qt * TQ, kt * TK, causal, window)
+    p = jnp.where(m, jnp.exp(s - L[:, None]), 0.0)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - Dl[:, None])
+    acc[...] += scale * jax.lax.dot_general(
+        ds, k, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(kt == n_k - 1)
+    def _fin():
+        dq_ref[0, :, 0] = acc[...]
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, L_ref, Dl_ref,
+                dk_ref, dv_ref, acck, accv, *, causal, window, n_q, scale):
+    qt = pl.program_id(3)
+    kt = pl.program_id(2)
+
+    @pl.when(qt == 0)
+    def _init():
+        acck[...] = jnp.zeros_like(acck)
+        accv[...] = jnp.zeros_like(accv)
+
+    q = q_ref[0, :, 0].astype(jnp.float32)
+    k = k_ref[0, :, 0].astype(jnp.float32)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    do = do_ref[0, :, 0].astype(jnp.float32)
+    L = L_ref[0, :, 0]
+    Dl = Dl_ref[0, :, 0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    m = _mask(qt * TQ, kt * TK, causal, window)
+    p = jnp.where(m, jnp.exp(s - L[:, None]), 0.0)          # (TQ, TK)
+    accv[...] += jax.lax.dot_general(
+        p, do, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - Dl[:, None])
+    acck[...] += scale * jax.lax.dot_general(
+        ds, q, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(qt == n_q - 1)
+    def _fin():
+        dk_ref[0, :, 0] = acck[...]
+        dv_ref[0, :, 0] = accv[...]
+
+
+def flash_bwd_padded(q, k, v, do, L, Dl, *, causal, window, interpret=False):
+    """All per-Q-head: q/do (B, Sq, H, hd); k/v (B, Skv, H, hd) (kv already
+    repeated to Q heads by the wrapper); L/Dl (B, Sq, H) f32.
+    Returns dq, dk, dv (f32, same shapes as q/k/v)."""
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    n_q, n_k = Sq // TQ, Skv // TK
+    scale = 1.0 / (hd ** 0.5)
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, causal=causal, window=window,
+                          n_k=n_k, scale=scale),
+        grid=(B, H, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, TQ, 1, hd), lambda b, h, qt, kt: (b, qt, h, 0)),
+            pl.BlockSpec((1, TK, 1, hd), lambda b, h, qt, kt: (b, kt, h, 0)),
+            pl.BlockSpec((1, TK, 1, hd), lambda b, h, qt, kt: (b, kt, h, 0)),
+            pl.BlockSpec((1, TQ, 1, hd), lambda b, h, qt, kt: (b, qt, h, 0)),
+            pl.BlockSpec((1, TQ, 1), lambda b, h, qt, kt: (b, qt, h)),
+            pl.BlockSpec((1, TQ, 1), lambda b, h, qt, kt: (b, qt, h)),
+        ],
+        out_specs=pl.BlockSpec((1, TQ, 1, hd),
+                               lambda b, h, qt, kt: (b, qt, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, H, hd), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((TQ, hd), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, L, Dl)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, causal=causal, window=window,
+                          n_q=n_q, scale=scale),
+        grid=(B, H, n_k, n_q),
+        in_specs=[
+            pl.BlockSpec((1, TQ, 1, hd), lambda b, h, kt, qt: (b, qt, h, 0)),
+            pl.BlockSpec((1, TK, 1, hd), lambda b, h, kt, qt: (b, kt, h, 0)),
+            pl.BlockSpec((1, TK, 1, hd), lambda b, h, kt, qt: (b, kt, h, 0)),
+            pl.BlockSpec((1, TQ, 1, hd), lambda b, h, kt, qt: (b, qt, h, 0)),
+            pl.BlockSpec((1, TQ, 1), lambda b, h, kt, qt: (b, qt, h)),
+            pl.BlockSpec((1, TQ, 1), lambda b, h, kt, qt: (b, qt, h)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, TK, 1, hd), lambda b, h, kt, qt: (b, kt, h, 0)),
+            pl.BlockSpec((1, TK, 1, hd), lambda b, h, kt, qt: (b, kt, h, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Skv, H, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, Skv, H, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((TK, hd), jnp.float32),
+                        pltpu.VMEM((TK, hd), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, L, Dl)
+    return dq, dk, dv

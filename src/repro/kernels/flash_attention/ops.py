@@ -1,0 +1,86 @@
+"""Jit'd wrapper for the prefill flash-attention kernel: pads Sq/Skv to tile
+multiples (mask handles the padding), dispatches interpret off-TPU."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import (TK, TQ,
+                                                  flash_attention_padded)
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window"))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0):
+    """q: (B, Sq, H, hd); k/v: (B, Skv, Hkv, hd). Returns (B, Sq, H, hd) f32.
+
+    Padding note: padded q rows produce garbage rows that are sliced away;
+    padded kv columns are masked out by the causal test (their positions
+    exceed every real q position) — for non-causal use the caller must pad
+    kv to the tile size itself.
+    """
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    Sq_p = ((Sq + TQ - 1) // TQ) * TQ
+    Skv_p = ((Skv + TK - 1) // TK) * TK
+    if Sq_p != Sq:
+        q = jnp.pad(q, ((0, 0), (0, Sq_p - Sq), (0, 0), (0, 0)))
+    if Skv_p != Skv:
+        k = jnp.pad(k, ((0, 0), (0, Skv_p - Skv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Skv_p - Skv), (0, 0), (0, 0)))
+    out = flash_attention_padded(q, k, v, causal=causal, window=window,
+                                 interpret=not _on_tpu())
+    return out[:, :Sq]
+
+
+def flash_attention_reference(q, k, v, causal: bool = True, window: int = 0):
+    return flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable variant (custom VJP; backward = two Pallas kernels)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention_trainable(q, k, v, causal: bool = True, window: int = 0):
+    """Like flash_attention but with a Pallas backward pass (kernel_bwd.py),
+    so REPRO_PALLAS_ATTN can serve training too. Requires Sq % TQ == 0 and
+    Skv % TK == 0 (the train/prefill shapes satisfy this)."""
+    out, _ = _fa_fwd(q, k, v, causal, window)
+    return out
+
+
+def _fa_fwd(q, k, v, causal, window):
+    from repro.kernels.flash_attention.kernel import flash_attention_padded
+    o, lse = flash_attention_padded(q, k, v, causal=causal, window=window,
+                                    interpret=not _on_tpu(), return_lse=True)
+    return o, (q, k, v, o, lse)
+
+
+def _fa_bwd(causal, window, res, do):
+    from repro.kernels.flash_attention.kernel_bwd import flash_bwd_padded
+    q, k, v, o, lse = res
+    B, Sq, H, hd = q.shape
+    Hkv = k.shape[2]
+    group = H // Hkv
+    # expand kv to Q heads; fold group gradients back afterwards
+    k_r = jnp.repeat(k, group, axis=2)
+    v_r = jnp.repeat(v, group, axis=2)
+    Dl = jnp.sum(do.astype(jnp.float32) * o, axis=-1)        # (B, Sq, H)
+    dq, dk, dv = flash_bwd_padded(q, k_r, v_r, do.astype(jnp.float32),
+                                  lse, Dl, causal=causal, window=window,
+                                  interpret=not _on_tpu())
+    Skv = k.shape[1]
+    dk = dk.reshape(B, Skv, Hkv, group, hd).sum(3)
+    dv = dv.reshape(B, Skv, Hkv, group, hd).sum(3)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention_trainable.defvjp(_fa_fwd, _fa_bwd)

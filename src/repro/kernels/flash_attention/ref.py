@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the prefill flash-attention kernel: full masked
+softmax attention with GQA, causal and sliding-window options."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (B, Sq, H, hd); k/v: (B, Skv, Hkv, hd). q position i attends to kv
+    position j iff (not causal or j <= i) and (window == 0 or j > i - window),
+    with q offset so the last q aligns with the last kv (Sq == Skv here).
+    Returns (B, Sq, H, hd) f32."""
+    B, Sq, H, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    group = H // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, group, hd)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qf * scale, k.astype(jnp.float32))
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isinf(m), 0.0, m)
+    p = jnp.exp(s - m)
+    p = jnp.where(mask[None, :, None, None, :], p, 0.0)
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bqhgk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, hd)

@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: one Mamba2 SSD chunk per (batch, head) grid cell.
+
+Why a kernel: the chunk-parallel identity materializes pairwise (C×C)
+decay/score tensors per head. In the jnp path those roundtrip HBM —
+for zamba2 prefill_32k that is ~300 GB of traffic per step (the dominant
+roofline term, see EXPERIMENTS §Perf H3). Here they live in VMEM: HBM sees
+only the (C,P)/(C,N) streams and the (P,N) state.
+
+Math (scalar per-head decay a_t = log-decay < 0, L = cumsum(a)):
+    y_inter = exp(L_t) · (C_t · state)
+    y_intra = Σ_{j<=t} (C_t·B_j) exp(L_t - L_j) xdt_j
+    state'  = exp(L_C) state + Σ_j exp(L_C - L_j) xdt_j ⊗ B_j
+
+VMEM per cell: C·P + 2·C·N + 2·C·C + P·N floats ≈ 0.2 MB (C=128, N=P=64).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, a_ref, b_ref, c_ref, s_ref, y_ref, sout_ref):
+    x = x_ref[0, :, 0].astype(jnp.float32)        # (C, P)  xdt
+    a = a_ref[0, :, 0].astype(jnp.float32)        # (C,)
+    B_ = b_ref[0].astype(jnp.float32)             # (C, N)
+    C_ = c_ref[0].astype(jnp.float32)             # (C, N)
+    S = s_ref[0, 0].astype(jnp.float32)           # (P, N)
+
+    Cn = x.shape[0]
+    L = jnp.cumsum(a)                             # (C,)
+    # inter-chunk: y_t += exp(L_t) * state @ C_t   -> (C, P)
+    y_inter = jnp.exp(L)[:, None] * jax.lax.dot_general(
+        C_, S, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    # intra-chunk
+    G = jax.lax.dot_general(C_, B_, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (C, C)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Cn, Cn), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Cn, Cn), 1)
+    mask = jj <= ii
+    D = L[:, None] - L[None, :]
+    Dexp = jnp.exp(jnp.where(mask, D, 0.0)) * mask  # stays in VMEM
+    A = G * Dexp
+    y_intra = jax.lax.dot_general(A, x, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    y_ref[0, :, 0] = y_inter + y_intra
+
+    LC = L[-1]
+    w_tail = jnp.exp(LC - L)                      # (C,)
+    xw = x * w_tail[:, None]                      # (C, P)
+    S_new = jnp.exp(LC) * S + jax.lax.dot_general(
+        xw, B_, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    sout_ref[0, 0] = S_new
+
+
+def ssd_chunk_padded(xdt, a, B_, C_, state0, *, interpret=False):
+    """xdt: (Bb, C, H, P); a: (Bb, C, H); B_/C_: (Bb, C, N);
+    state0: (Bb, H, P, N). Returns (y (Bb,C,H,P) f32, state)."""
+    Bb, C, H, P = xdt.shape
+    N = B_.shape[-1]
+    return pl.pallas_call(
+        _kernel,
+        grid=(Bb, H),
+        in_specs=[
+            pl.BlockSpec((1, C, 1, P), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, C, 1), lambda b, h: (b, 0, h)),
+            pl.BlockSpec((1, C, N), lambda b, h: (b, 0, 0)),
+            pl.BlockSpec((1, C, N), lambda b, h: (b, 0, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, C, 1, P), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bb, C, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((Bb, H, P, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xdt, a, B_, C_, state0)

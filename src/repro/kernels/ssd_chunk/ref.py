@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the Mamba2 SSD chunk kernel: sequential recurrence.
+
+    h_t = exp(a_t) h_{t-1} + xdt_t ⊗ B_t ;   y_t = h_t C_t
+(xdt = dt·x already folded in by the caller; D-residual applied outside.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(xdt, a, B_, C_, state0):
+    """xdt: (C, P); a: (C,) log decay; B_/C_: (C, N); state0: (P, N).
+    Returns y (C, P), state (P, N)."""
+    def step(h, inp):
+        x_t, a_t, b_t, c_t = inp
+        h = jnp.exp(a_t) * h + jnp.outer(x_t, b_t)
+        y = h @ c_t
+        return h, y
+
+    h, ys = jax.lax.scan(step, state0, (xdt, a, B_, C_))
+    return ys, h
+
+
+def ssd_chunk_ref_batched(xdt, a, B_, C_, state0):
+    """xdt: (Bb, C, H, P); a: (Bb, C, H); B_/C_: (Bb, C, N);
+    state0: (Bb, H, P, N)."""
+    # inner vmap over heads: per-batch shapes xdt (C,H,P), a (C,H),
+    # B_/C_ (C,N) shared, state (H,P,N)
+    f = jax.vmap(jax.vmap(ssd_chunk_ref, in_axes=(1, 1, None, None, 0),
+                          out_axes=(1, 0)),
+                 in_axes=(0, 0, 0, 0, 0), out_axes=(0, 0))
+    return f(xdt, a, B_, C_, state0)

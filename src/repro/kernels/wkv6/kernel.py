@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: one WKV6 chunk (intra-chunk parallel form).
+
+Implements the chunked linear-attention identity used by
+repro.models.rwkv6.wkv_chunked, per (batch, head) grid cell:
+
+    L_t   = Σ_{s<=t} log w_s                 (cumsum over the chunk)
+    y_t   = (r_t e^{L_{t-1}}) · S_in
+          + Σ_{j<t} [(r_t e^{L_{t-1}-c}) · (k_j e^{c-L_j})] v_j
+          + (r_t ⊙ u ⊙ k_t)·v_t
+    S_out = diag(e^{L_C}) S_in + Σ_j diag(e^{L_C - L_j}) k_j v_j^T
+
+with the mid-chunk stabilizer c = L_C/2 (both factorized exponents stay
+≤ |L_C|/2). All operands for one (b, h) cell — (C, N) tiles with C = 128,
+N = 64 — fit in VMEM; the matmuls (C×N · N×C and C×C · C×N) run on the MXU.
+The cross-chunk sequential dependency stays a lax.scan at the JAX level
+(ops.py), carrying the (N, N) state.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s_ref, y_ref, sout_ref):
+    r = r_ref[0, :, 0].astype(jnp.float32)       # (C, N)
+    k = k_ref[0, :, 0].astype(jnp.float32)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    w = w_ref[0, :, 0].astype(jnp.float32)       # log-decay, < 0
+    u = u_ref[0].astype(jnp.float32)             # (N,)
+    S = s_ref[0, 0].astype(jnp.float32)          # (N, N)
+
+    C = r.shape[0]
+    L = jnp.cumsum(w, axis=0)                    # (C, N)
+    Lm1 = L - w
+    c = L[-1] * 0.5
+
+    r_dec = r * jnp.exp(Lm1)                     # inter-chunk factor
+    y_inter = jax.lax.dot_general(r_dec, S, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    r_dec2 = r * jnp.exp(Lm1 - c)
+    k_dec = k * jnp.exp(c - L)
+    A = jax.lax.dot_general(r_dec2, k_dec, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (C, C)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    A = jnp.where(jj < ii, A, 0.0)               # strict lower triangle
+    y_intra = jax.lax.dot_general(A, v, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    bonus = jnp.sum(r * u[None, :] * k, axis=1, keepdims=True) * v
+    y_ref[0, :, 0] = y_inter + y_intra + bonus
+
+    LC = L[-1]
+    k_tail = k * jnp.exp(LC[None, :] - L)
+    S_new = jnp.exp(LC)[:, None] * S + jax.lax.dot_general(
+        k_tail, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    sout_ref[0, 0] = S_new
+
+
+def wkv_chunk_padded(r, k, v, logw, u, state0, *, interpret=False):
+    """One chunk for all (B, H): r,k,v,logw (B, C, H, N); u (H, N);
+    state0 (B, H, N, N). Returns y (B, C, H, N) f32, state (B, H, N, N)."""
+    B, C, H, N = r.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(B, H),
+        in_specs=[
+            pl.BlockSpec((1, C, 1, N), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, C, 1, N), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, C, 1, N), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, C, 1, N), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, N), lambda b, h: (h, 0)),
+            pl.BlockSpec((1, 1, N, N), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, C, 1, N), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, 1, N, N), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, C, H, N), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, N, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(r, k, v, logw, u, state0)

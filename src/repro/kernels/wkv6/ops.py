@@ -1,0 +1,43 @@
+"""Jit'd wrapper: full-sequence WKV6 via lax.scan over Pallas chunk calls."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv6.kernel import wkv_chunk_padded
+from repro.kernels.wkv6.ref import wkv_chunk_ref_batched
+
+CHUNK = 128
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@jax.jit
+def wkv6(r, k, v, logw, u, state0):
+    """r,k,v,logw: (B, S, H, N) with S % CHUNK == 0; u: (H, N);
+    state0: (B, H, N, N). Returns (y (B,S,H,N) f32, state)."""
+    B, S, H, N = r.shape
+    nc = S // CHUNK
+    interp = not _on_tpu()
+
+    def body(state, xs):
+        rc, kc, vc, wc = xs
+        y, state = wkv_chunk_padded(rc, kc, vc, wc, u, state,
+                                    interpret=interp)
+        return state, y
+
+    rs = jnp.moveaxis(r.reshape(B, nc, CHUNK, H, N), 1, 0)
+    ks = jnp.moveaxis(k.reshape(B, nc, CHUNK, H, N), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, nc, CHUNK, H, N), 1, 0)
+    ws = jnp.moveaxis(logw.reshape(B, nc, CHUNK, H, N), 1, 0)
+    state, ys = jax.lax.scan(body, state0, (rs, ks, vs, ws))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, N)
+    return y, state
+
+
+def wkv6_reference(r, k, v, logw, u, state0):
+    return wkv_chunk_ref_batched(r, k, v, logw, u, state0)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the wkv6 chunk kernel: the sequential recurrence.
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t^T S_{t-1} + (r_t ⊙ u ⊙ k_t)·v_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_chunk_ref(r, k, v, logw, u, state0):
+    """r,k,v,logw: (C, N) one head, one chunk; u: (N,); state0: (N, N).
+    Returns y (C, N), state (N, N). Sequential scan — ground truth."""
+    def step(S, inp):
+        rt, kt, vt, wt = inp
+        y = rt @ S + (rt * u * kt).sum() * vt
+        S = jnp.exp(wt)[:, None] * S + jnp.outer(kt, vt)
+        return S, y
+
+    S, ys = jax.lax.scan(step, state0, (r, k, v, logw))
+    return ys, S
+
+
+def wkv_chunk_ref_batched(r, k, v, logw, u, state0):
+    """r,k,v,logw: (B, C, H, N); u: (H, N); state0: (B, H, N, N)."""
+    f = jax.vmap(jax.vmap(wkv_chunk_ref, in_axes=(1, 1, 1, 1, 0, 0),
+                          out_axes=(1, 0)),
+                 in_axes=(0, 0, 0, 0, None, 0), out_axes=(0, 0))
+    return f(r, k, v, logw, u, state0)

@@ -1,0 +1,25 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax
+init and only then calls these.
+
+Topology (TPU v5e target):
+  single pod : 16 × 16 = 256 chips, axes ('data', 'model')
+  multi-pod  : 2 × 16 × 16 = 512 chips, axes ('pod', 'data', 'model')
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 4, n_model: int = 2):
+    """Small mesh for CI-scale integration tests (8 host devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

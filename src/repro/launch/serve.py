@@ -1,0 +1,75 @@
+"""Serving driver: prefill a batch of prompts, then batched greedy decode.
+
+Usage (smoke scale, CPU):
+  PYTHONPATH=src python -m repro.launch.serve --arch mixtral_8x7b --smoke \
+      --batch 2 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.models import model as MODEL
+from repro.models import steps as STEPS
+from repro.models.kvcache import serve_cache_init
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS), required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke_variant()
+
+    key = jax.random.key(args.seed)
+    params = MODEL.init_params(key, cfg)
+    max_len = args.prompt_len + args.gen + 8
+    cache = serve_cache_init(cfg, args.batch, max_len)
+
+    prompts = jax.random.randint(jax.random.key(1),
+                                 (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    batch = {"tokens": prompts}
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jnp.zeros(
+            (args.batch, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "audio":
+        batch["audio_embeds"] = jnp.zeros(
+            (args.batch, cfg.n_audio_frames, cfg.d_model), jnp.bfloat16)
+
+    t0 = time.time()
+    logits, cache = MODEL.prefill(params, cfg, batch, cache)
+    t_prefill = time.time() - t0
+    print(f"prefill {args.batch}x{args.prompt_len}: {t_prefill:.2f}s")
+
+    decode = jax.jit(STEPS.make_serve_step(cfg))
+    tok = jnp.argmax(logits[:, -1, :], -1, keepdims=True).astype(jnp.int32)
+    generated = [tok]
+    t0 = time.time()
+    for _ in range(args.gen - 1):
+        logits, cache = decode(params, cache, tok)
+        tok = jnp.argmax(logits[:, -1, :], -1, keepdims=True).astype(jnp.int32)
+        generated.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    toks = np.concatenate([np.asarray(t) for t in generated], 1)
+    print(f"decoded {args.gen} tokens/seq in {dt:.2f}s "
+          f"({args.gen * args.batch / max(dt, 1e-9):.1f} tok/s)")
+    print("sample:", toks[0][:16].tolist())
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+if __name__ == "__main__":
+    main()

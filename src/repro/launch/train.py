@@ -1,0 +1,79 @@
+"""LLM training driver for the architecture zoo.
+
+Usage (smoke scale, CPU):
+  PYTHONPATH=src python -m repro.launch.train --arch llama3_8b --smoke \
+      --steps 20 --batch 2 --seq 128
+
+Production scale uses the same code path under the dry-run mesh; the
+container has one device, so full configs are exercised via
+repro.launch.dryrun (lower+compile only).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.configs.base import ARCH_IDS, TrainConfig, get_config
+from repro.data.tokens import synthetic_token_batches
+from repro.models import model as MODEL
+from repro.models import steps as STEPS
+from repro.optim import adamw
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS), required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (2 layers, d<=256)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke_variant()
+    tcfg = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
+                       warmup_steps=max(2, args.steps // 10), remat=True)
+
+    key = jax.random.key(args.seed)
+    params = MODEL.init_params(key, cfg)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
+          f"(analytic {cfg.param_count()/1e6:.1f}M full)")
+    opt = adamw.init(params)
+    step_fn = jax.jit(STEPS.make_train_step(cfg, tcfg), donate_argnums=(0, 1))
+
+    batches = synthetic_token_batches(cfg, args.batch, args.seq,
+                                      seed=args.seed)
+    losses = []
+    t0 = time.time()
+    for i, batch in zip(range(args.steps), batches):
+        params, opt, metrics = step_fn(params, opt, batch)
+        losses.append(float(metrics["loss"]))
+        if i % args.log_every == 0 or i == args.steps - 1:
+            dt = time.time() - t0
+            print(f"step {i:4d}  loss {losses[-1]:.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}  "
+                  f"lr {float(metrics['lr']):.2e}  {dt:.1f}s")
+    first = np.mean(losses[:5]) if len(losses) >= 10 else losses[0]
+    last = np.mean(losses[-5:])
+    print(f"loss {first:.4f} -> {last:.4f} "
+          f"({'improved' if last < first else 'NOT improved'})")
+
+    if args.ckpt:
+        ckpt.save(args.ckpt, params, step=args.steps)
+        print("checkpoint ->", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""KV-cache / recurrent-state containers for serving.
+
+Dense / MoE / enc-dec attention layers use a (possibly ring-buffered) KV
+cache; SSM / hybrid layers carry recurrent state. The cache is a plain
+pytree so it shards with NamedSharding like any other step input.
+
+Ring buffer (sliding-window): ``max_len == window``; slot ``pos % window`` is
+overwritten and per-slot absolute positions are tracked in ``kv_pos`` so the
+flash-attention mask stays correct after wrap-around.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def attn_cache_init(cfg: ArchConfig, n_layers: int, batch: int, max_len: int,
+                    dtype=jnp.bfloat16, quant: bool = False):
+    hd = cfg.resolved_head_dim
+    if quant:
+        # int8 cache with per (slot, head) scales — halves the decode
+        # memory term, which dominates full-attention serving (§Perf H2)
+        return {
+            "k": jnp.zeros((n_layers, batch, max_len, cfg.n_kv_heads, hd),
+                           jnp.int8),
+            "v": jnp.zeros((n_layers, batch, max_len, cfg.n_kv_heads, hd),
+                           jnp.int8),
+            "k_scale": jnp.zeros((n_layers, batch, max_len, cfg.n_kv_heads),
+                                 jnp.float32),
+            "v_scale": jnp.zeros((n_layers, batch, max_len, cfg.n_kv_heads),
+                                 jnp.float32),
+            "kv_pos": jnp.full((n_layers, max_len), -1, jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((n_layers, batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((n_layers, batch, max_len, cfg.n_kv_heads, hd), dtype),
+        # absolute position stored in each slot; -1 = empty
+        "kv_pos": jnp.full((n_layers, max_len), -1, jnp.int32),
+    }
+
+
+def quantize_kv(x):
+    """x: (B, 1, Hkv, hd) -> (int8 values, (B, 1, Hkv) f32 scales)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def attn_cache_update(cache_layer_k, cache_layer_v, kv_pos, k_new, v_new, pos,
+                      ring: bool, k_scale=None, v_scale=None):
+    """Write one token (k_new/v_new: (B, 1, Hkv, hd)) at absolute position
+    ``pos``; returns updated (k, v, kv_pos[, k_scale, v_scale])."""
+    max_len = cache_layer_k.shape[1]
+    slot = jnp.where(ring, pos % max_len, pos)
+    if cache_layer_k.dtype == jnp.int8:
+        kq, ks = quantize_kv(k_new)
+        vq, vs = quantize_kv(v_new)
+        k = jax.lax.dynamic_update_slice_in_dim(cache_layer_k, kq, slot, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(cache_layer_v, vq, slot, axis=1)
+        k_scale = jax.lax.dynamic_update_slice_in_dim(k_scale, ks, slot, axis=1)
+        v_scale = jax.lax.dynamic_update_slice_in_dim(v_scale, vs, slot, axis=1)
+        kv_pos = jax.lax.dynamic_update_slice_in_dim(
+            kv_pos, jnp.full((1,), pos, jnp.int32), slot, axis=0)
+        return k, v, kv_pos, k_scale, v_scale
+    k = jax.lax.dynamic_update_slice_in_dim(cache_layer_k, k_new, slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache_layer_v, v_new, slot, axis=1)
+    kv_pos = jax.lax.dynamic_update_slice_in_dim(
+        kv_pos, jnp.full((1,), pos, jnp.int32), slot, axis=0)
+    return k, v, kv_pos
+
+
+def cache_view(cache, layer_idx):
+    k = cache["k"][layer_idx]
+    v = cache["v"][layer_idx]
+    kv_pos = cache["kv_pos"][layer_idx]
+    valid = kv_pos >= 0
+    return k, v, kv_pos, valid
+
+
+def serve_cache_init(cfg: ArchConfig, batch: int, seq_len: int,
+                     dtype=jnp.bfloat16, window_override: Optional[int] = None,
+                     kv_quant: bool = False):
+    """Build the full serving state pytree for one architecture.
+
+    ``seq_len`` is the context the cache must represent. For sliding-window
+    attention the buffer is only ``window`` slots; for SSM/hybrid, constant
+    state. ``pos`` is the number of tokens already consumed.
+    """
+    from repro.models.mamba2 import mamba2_state_init  # cycle-free local import
+
+    window = window_override if window_override is not None else cfg.sliding_window
+    state = {"pos": jnp.zeros((), jnp.int32)}
+
+    if cfg.family == "ssm":  # rwkv6
+        d = cfg.d_model
+        H = d // cfg.wkv_head_dim
+        N = cfg.wkv_head_dim
+        state["wkv"] = jnp.zeros((cfg.n_layers, batch, H, N, N), jnp.float32)
+        state["shift_att"] = jnp.zeros((cfg.n_layers, batch, d), dtype)
+        state["shift_ffn"] = jnp.zeros((cfg.n_layers, batch, d), dtype)
+        return state
+
+    if cfg.family == "hybrid":  # zamba2
+        per_layer = mamba2_state_init(cfg, batch, dtype)
+        state["mamba"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape).copy(),
+            per_layer)
+        n_attn = (cfg.n_layers + cfg.shared_attn_period - 1) // cfg.shared_attn_period
+        eff_window = window if window > 0 else min(seq_len, 4096)
+        # ring-buffer size doubles as the attention window (static shape)
+        state["attn"] = attn_cache_init(cfg, n_attn, batch, eff_window, dtype)
+        return state
+
+    # dense / moe / vlm / enc-dec decoder
+    max_len = window if window > 0 else seq_len
+    state["attn"] = attn_cache_init(cfg, cfg.n_layers, batch, max_len, dtype,
+                                    quant=kv_quant)
+    if cfg.is_encdec:
+        hd = cfg.resolved_head_dim
+        state["cross_k"] = jnp.zeros(
+            (cfg.n_layers, batch, cfg.n_audio_frames, cfg.n_kv_heads, hd), dtype)
+        state["cross_v"] = jnp.zeros_like(state["cross_k"])
+    return state

@@ -1,0 +1,371 @@
+"""Core transformer layers as pure init/apply functions.
+
+Conventions
+-----------
+- Params are nested dicts of jnp arrays. Layer stacks store params with a
+  leading ``(L, ...)`` axis and are applied with ``jax.lax.scan`` so the HLO
+  (and compile time) stays O(1) in depth.
+- Params are kept in float32 (master weights); activations/compute default to
+  bfloat16 (``cfg.dtype``); logits and softmax statistics are float32.
+- Attention is computed with a chunked online-softmax ("flash" style) scan
+  over KV blocks so the S×S score matrix is never materialized — required
+  for the 32k-prefill and 4k×256-batch train shapes to fit in VMEM/HBM.
+"""
+from __future__ import annotations
+
+import math
+import os
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.sharding.constraints import batch_axes, constrain
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, shape, scale: Optional[float] = None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale)
+
+
+def _embed_init(key, shape):
+    return jax.random.normal(key, shape, dtype=jnp.float32) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps: float):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"]).astype(x.dtype)
+
+
+def layernorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(params, x, eps: float):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(x.dtype)
+
+
+def make_norm(cfg: ArchConfig):
+    """Whisper uses LayerNorm; the rest of the zoo uses RMSNorm."""
+    if cfg.family == "audio":
+        return layernorm_init, layernorm
+    return rmsnorm_init, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# RoPE (incl. ChatGLM partial / "2d" variant via rope_partial < 1)
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, rope_partial: float, theta: float):
+    rot_dim = int(head_dim * rope_partial)
+    rot_dim -= rot_dim % 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+    return inv_freq, rot_dim
+
+
+def apply_rope(x, positions, inv_freq, rot_dim: int):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    if rot_dim == 0:
+        return x
+    x_rot, x_pass = x[..., :rot_dim], x[..., rot_dim:]
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # (..., S, rot/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x_rot.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), x_pass], axis=-1)
+
+
+def sinusoidal_positions(n_pos: int, d: int):
+    pos = jnp.arange(n_pos, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10_000.0, dim / d)
+    pe = jnp.zeros((n_pos, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def attention_init(key, cfg: ArchConfig):
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(kq, (d, cfg.n_heads * hd)),
+        "wk": _dense_init(kk, (d, cfg.n_kv_heads * hd)),
+        "wv": _dense_init(kv, (d, cfg.n_kv_heads * hd)),
+        "wo": _dense_init(ko, (cfg.n_heads * hd, d)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd)
+        p["k_norm"] = rmsnorm_init(hd)
+    return p
+
+
+def _flash_attend(q, k, v, *, causal: bool, window: int, q_offset, kv_positions=None,
+                  kv_valid=None, chunk: int = 1024, k_scale=None, v_scale=None):
+    """Chunked online-softmax attention.
+
+    q: (B, Sq, H, hd); k/v: (B, Skv, Hkv, hd). GQA by head repeat-grouping.
+    window > 0 => sliding-window causal attention.
+    kv_positions: (Skv,) absolute positions of kv slots (for ring caches);
+    kv_valid: (Skv,) bool mask of filled slots. q positions are
+    q_offset + arange(Sq).
+    Returns (B, Sq, H, hd).
+    """
+    B, Sq, H, hd = q.shape
+    _, Skv, Hkv, _ = k.shape
+    group = H // Hkv
+    scale = 1.0 / math.sqrt(hd)
+
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Sq, Hkv, group, hd)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    if kv_positions is None:
+        kv_positions = jnp.arange(Skv)
+    if kv_valid is None:
+        kv_valid = jnp.ones((Skv,), bool)
+
+    n_chunks = max(1, (Skv + chunk - 1) // chunk)
+    pad = n_chunks * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, (0, pad))
+        kv_valid = jnp.pad(kv_valid, (0, pad))
+        if k_scale is not None:
+            k_scale = jnp.pad(k_scale, ((0, 0), (0, pad), (0, 0)))
+            v_scale = jnp.pad(v_scale, ((0, 0), (0, pad), (0, 0)))
+
+    kc = k.reshape(B, n_chunks, chunk, Hkv, hd)
+    vc = v.reshape(B, n_chunks, chunk, Hkv, hd)
+    pc = kv_positions.reshape(n_chunks, chunk)
+    mc = kv_valid.reshape(n_chunks, chunk)
+    quant = k_scale is not None
+    if quant:
+        ksc = jnp.moveaxis(k_scale.reshape(B, n_chunks, chunk, Hkv), 1, 0)
+        vsc = jnp.moveaxis(v_scale.reshape(B, n_chunks, chunk, Hkv), 1, 0)
+    else:  # dummy streams keep the scan signature uniform
+        ksc = vsc = jnp.zeros((n_chunks, 1, 1, 1), jnp.float32)
+
+    def step(carry, inputs):
+        m_run, l_run, acc = carry
+        kb, vb, pb, vb_mask, ksb, vsb = inputs
+        if quant:
+            # dequantize int8 cache chunk-wise (fused, never materialized)
+            kb = kb.astype(jnp.float32) * ksb[..., None]
+            vb = vb.astype(jnp.float32) * vsb[..., None]
+        # scores: (B, Sq, Hkv, group, chunk)
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qf, kb.astype(jnp.float32))
+        mask = vb_mask[None, None, :]
+        if causal:
+            mask = mask & (pb[None, None, :] <= q_pos[None, :, None])
+        if window > 0:
+            mask = mask & (pb[None, None, :] > q_pos[None, :, None] - window)
+        s = jnp.where(mask[:, :, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        # guard: rows with no valid key yet keep m=-inf; exp(-inf - -inf) nan
+        m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[:, :, None, None, :], p, 0.0)
+        corr = jnp.where(jnp.isinf(m_run), 0.0, jnp.exp(m_run - m_safe))
+        l_new = l_run * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bqhgk,bkhd->bqhgd", p, vb.astype(jnp.float32))
+        acc = acc * corr[..., None] + pv
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, Sq, Hkv, group), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, group), jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hkv, group, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), pc, mc, ksc, vsc))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def attention_apply(params, cfg: ArchConfig, x, *, positions, causal=True,
+                    window=0, kv=None, kv_positions=None, kv_valid=None,
+                    cross_kv=None, chunk=1024):
+    """Self- or cross-attention.
+
+    x: (B, S, d). positions: (S,) absolute positions of x tokens.
+    cross_kv: optional (k, v) from an encoder — used instead of self kv.
+    kv: optional externally provided (k, v, kv_positions, kv_valid) — the
+    decode path passes the cache here (already rotated at write time).
+    Returns (out, (k_new, v_new)) where k_new/v_new are this call's
+    rotated K/V (for cache writes); None for cross-attention.
+    """
+    B, S, d = x.shape
+    hd = cfg.resolved_head_dim
+    inv_freq, rot_dim = rope_frequencies(hd, cfg.rope_partial, cfg.rope_theta)
+    use_rope = cfg.family != "audio"  # whisper uses absolute sinusoidal pos
+
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"].astype(x.dtype))
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    # pin batch over data + heads over model (tensor-parallel attention)
+    q = constrain(q, batch_axes(), None, "model", None)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+    if use_rope:
+        q = apply_rope(q, jnp.broadcast_to(positions, (B, S)), inv_freq, rot_dim)
+
+    if cross_kv is not None:
+        # cross attention: no mask, q positions irrelevant
+        k_x, v_x = cross_kv
+        out = _flash_attend(q, k_x, v_x, causal=False, window=0, q_offset=0,
+                            chunk=chunk)
+        out = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, -1), params["wo"].astype(x.dtype))
+        return out, None
+
+    k = jnp.einsum("bsd,dh->bsh", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dh->bsh", x, params["wv"].astype(x.dtype))
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    k = constrain(k, batch_axes(), None, "model", None)
+    v = constrain(v, batch_axes(), None, "model", None)
+    if cfg.qk_norm:
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    if use_rope:
+        k = apply_rope(k, jnp.broadcast_to(positions, (B, S)), inv_freq, rot_dim)
+
+    # opt-in Pallas flash-attention for the self-attention (no-cache) path
+    # (§Perf H7/H10). Tile-aligned shapes use the differentiable variant
+    # (custom VJP backed by the two Pallas backward kernels) so training
+    # goes through the kernel too; ragged shapes use the padded fwd-only
+    # version (prefill/serve).
+    if (kv is None and os.environ.get("REPRO_PALLAS_ATTN", "0") == "1"
+            and S > 1):
+        from repro.kernels.flash_attention import ops as FAK
+        from repro.kernels.flash_attention.kernel import TK, TQ
+        if S % TQ == 0 and S % TK == 0:
+            o = FAK.flash_attention_trainable(q, k, v, causal, window)
+        else:
+            o = FAK.flash_attention(q, k, v, causal=causal, window=window)
+        out = jnp.einsum("bsh,hd->bsd", o.astype(x.dtype).reshape(B, S, -1),
+                         params["wo"].astype(x.dtype))
+        return out, (k, v)
+
+    if kv is not None:
+        if len(kv) == 6:   # quantized cache: (k, v, pos, valid, k_scale, v_scale)
+            k_all, v_all, kv_pos, kv_val, ks, vs = kv
+        else:
+            k_all, v_all, kv_pos, kv_val = kv
+            ks = vs = None
+        if (S == 1 and ks is None
+                and os.environ.get("REPRO_PALLAS_DECODE_ATTN", "0") == "1"):
+            # Pallas flash-decode kernel over the (ring) cache (§Perf)
+            from repro.kernels.decode_attention import ops as DAK
+            o = DAK.decode_attention(q[:, 0], k_all, v_all, kv_pos,
+                                     positions[0], window=window)
+            out = o[:, None].astype(x.dtype)
+        else:
+            out = _flash_attend(q, k_all, v_all, causal=causal, window=window,
+                                q_offset=positions[0], kv_positions=kv_pos,
+                                kv_valid=kv_val, chunk=chunk, k_scale=ks,
+                                v_scale=vs)
+    else:
+        out = _flash_attend(q, k, v, causal=causal, window=window,
+                            q_offset=0, chunk=chunk)
+    out = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, -1), params["wo"].astype(x.dtype))
+    return out, (k, v)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def swiglu_init(key, d: int, f: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": _dense_init(k1, (d, f)),
+        "w_up": _dense_init(k2, (d, f)),
+        "w_down": _dense_init(k3, (f, d)),
+    }
+
+
+def swiglu_apply(params, x):
+    g = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"].astype(x.dtype))
+
+
+def gelu_mlp_init(key, d: int, f: int):
+    k1, k2 = jax.random.split(key, 2)
+    return {
+        "w_in": _dense_init(k1, (d, f)),
+        "b_in": jnp.zeros((f,), jnp.float32),
+        "w_out": _dense_init(k2, (f, d)),
+        "b_out": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def gelu_mlp_apply(params, x):
+    h = jnp.einsum("bsd,df->bsf", x, params["w_in"].astype(x.dtype))
+    h = h + params["b_in"].astype(x.dtype)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    o = jnp.einsum("bsf,fd->bsd", h, params["w_out"].astype(x.dtype))
+    return o + params["b_out"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embedding_init(key, cfg: ArchConfig):
+    """Tables use the *padded* vocab so the vocab dim shards evenly over the
+    model axis; unembed masks the padding logits to a large negative."""
+    ke, ko = jax.random.split(key)
+    V = cfg.padded_vocab_size
+    p = {"table": _embed_init(ke, (V, cfg.d_model))}
+    if not cfg.tie_embeddings:
+        p["unembed"] = _dense_init(ko, (cfg.d_model, V))
+    return p
+
+
+def embed(params, tokens, dtype):
+    return params["table"].astype(dtype)[tokens]
+
+
+def unembed(params, x, cfg: ArchConfig):
+    if cfg.tie_embeddings:
+        w = params["table"].astype(x.dtype).T
+    else:
+        w = params["unembed"].astype(x.dtype)
+    logits = jnp.einsum("bsd,dv->bsv", x, w).astype(jnp.float32)
+    V, Vp = cfg.vocab_size, cfg.padded_vocab_size
+    if Vp != V:
+        pad_mask = jax.lax.broadcasted_iota(jnp.int32, (Vp,), 0) >= V
+        logits = jnp.where(pad_mask, -1e9, logits)
+    return logits

@@ -1,0 +1,202 @@
+"""Mamba2 (SSD) block — selective state-space with scalar per-head decay.
+
+Per head h (P = ssm_head_dim channels, N = ssm_state):
+
+    h_t = exp(a_t) · h_{t-1} + dt_t · x_t ⊗ B_t        h ∈ R^{P×N}
+    y_t = h_t C_t + D ⊙ x_t                            a_t = -exp(A_log)·dt_t
+
+Same chunked-scan structure as rwkv6.wkv_chunked but with a *scalar* decay
+per head per step (the SSD simplification), which is what makes Mamba2
+matmul-friendly on MXU hardware.
+
+TPU-sharding note: the reference implementation fuses [z|x|B|C|dt] into one
+``in_proj``; we keep them as separate matrices so the d_inner/head dims can
+be cleanly sharded over the 'model' mesh axis (the fused concat dim is not
+divisible by 16 for the zamba2-7b config). Mathematically identical.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+import os
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import _dense_init, rmsnorm, rmsnorm_init
+
+CHUNK = 128
+
+
+def _use_pallas_ssd() -> bool:
+    """Route the chunked scan through the Pallas SSD kernel (fwd-only paths:
+    prefill/serve — the kernel has no custom VJP yet). §Perf H3."""
+    return os.environ.get("REPRO_PALLAS_SSD", "0") == "1"
+
+
+def mamba2_dims(cfg: ArchConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_state, cfg.ssm_head_dim
+
+
+def mamba2_init(key, cfg: ArchConfig):
+    d = cfg.d_model
+    d_in, H, N, P = mamba2_dims(cfg)
+    ks = jax.random.split(key, 9)
+    W = cfg.ssm_conv_width
+    return {
+        "w_z": _dense_init(ks[0], (d, d_in)),
+        "w_x": _dense_init(ks[1], (d, d_in)),
+        "w_B": _dense_init(ks[2], (d, N)),
+        "w_C": _dense_init(ks[3], (d, N)),
+        "w_dt": _dense_init(ks[4], (d, H)),
+        "conv_x": jax.random.normal(ks[5], (W, d_in), dtype=jnp.float32) * 0.2,
+        "conv_B": jax.random.normal(ks[6], (W, N), dtype=jnp.float32) * 0.2,
+        "conv_C": jax.random.normal(ks[7], (W, N), dtype=jnp.float32) * 0.2,
+        "conv_bias_x": jnp.zeros((d_in,), jnp.float32),
+        "conv_bias_B": jnp.zeros((N,), jnp.float32),
+        "conv_bias_C": jnp.zeros((N,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),
+        "norm": rmsnorm_init(d_in),
+        "out_proj": _dense_init(ks[8], (d_in, d)),
+    }
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv + SiLU. x: (B,S,C); w: (W,C); conv_state:
+    (B,W-1,C) history from the previous segment (decode) or None (zeros).
+    Returns (y, new_conv_state)."""
+    B, S, C = x.shape
+    W = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((B, W - 1, C), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)           # (B, S+W-1, C)
+    y = sum(xp[:, i:i + S, :] * w[i].astype(x.dtype) for i in range(W))
+    y = y + b.astype(x.dtype)
+    return jax.nn.silu(y.astype(jnp.float32)).astype(x.dtype), xp[:, -(W - 1):, :]
+
+
+def ssd_chunked(x, dt, A_log, B_, C_, state0):
+    """Chunked SSD scan.
+
+    x: (B,S,H,P); dt: (B,S,H); B_,C_: (B,S,N); state0: (B,H,P,N).
+    Returns y (B,S,H,P), state (B,H,P,N). S multiple of CHUNK.
+    """
+    Bb, S, H, P = x.shape
+    N = B_.shape[-1]
+    nc = S // CHUNK
+    a = -jnp.exp(A_log)[None, None, :] * dt                 # (B,S,H) log-decay < 0
+    xdt = x * dt[..., None]
+
+    xc = xdt.reshape(Bb, nc, CHUNK, H, P)
+    ac = a.reshape(Bb, nc, CHUNK, H)
+    bc = B_.reshape(Bb, nc, CHUNK, N)
+    cc = C_.reshape(Bb, nc, CHUNK, N)
+
+    def chunk_step(state, inp):
+        xb, ab, bb, cb = inp
+        L = jnp.cumsum(ab, axis=1)                          # (B,C,H)
+        # inter-chunk: y_t reads h_t (post-update) => carried state decayed
+        # by exp(L_t) (decay steps 1..t applied).
+        y_inter = jnp.exp(L)[..., None] * jnp.einsum(
+            "bhpn,bcn->bchp", state, cb)
+        # intra-chunk: h contribution of step j at step t (j<=t):
+        # exp(L_t - L_j) dt_j x_j ⊗ B_j  (diagonal j=t enters undecayed)
+        G = jnp.einsum("bcn,bjn->bcj", cb, bb)              # C_t · B_j
+        D = L[:, :, None, :] - L[:, None, :, :]             # (B,C,J,H) = L_t - L_j
+        mask = jnp.tril(jnp.ones((CHUNK, CHUNK), bool))[None, :, :, None]
+        # mask the *exponent* (not the exponential): exp overflows at the
+        # masked j>t positions and 0*inf => NaN in the VJP otherwise.
+        Dexp = jnp.exp(jnp.where(mask, D, 0.0)) * mask
+        y_intra = jnp.einsum("bcj,bcjh,bjhp->bchp", G, Dexp, xb)
+        y = y_inter + y_intra
+        # state update: state' = exp(L_C) state + sum_j exp(L_C - L_j) x_j ⊗ B_j
+        LC = L[:, -1]                                       # (B,H)
+        w_tail = jnp.exp(LC[:, None, :] - L)                # (B,C,H)
+        state_new = jnp.exp(LC)[..., None, None] * state + jnp.einsum(
+            "bjh,bjhp,bjn->bhpn", w_tail, xb, bb)
+        return state_new, y
+
+    state, ys = jax.lax.scan(
+        jax.checkpoint(chunk_step),  # don't save per-chunk intermediates
+        state0,
+        (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(ac, 1, 0),
+         jnp.moveaxis(bc, 1, 0), jnp.moveaxis(cc, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bb, S, H, P)
+    return y, state
+
+
+def ssd_step(x, dt, A_log, B_, C_, state):
+    """Single decode step. x: (B,H,P); dt: (B,H); B_,C_: (B,N); state (B,H,P,N)."""
+    a = jnp.exp(-jnp.exp(A_log)[None, :] * dt)              # (B,H)
+    upd = jnp.einsum("bhp,bn->bhpn", x * dt[..., None], B_)
+    state = a[..., None, None] * state + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, C_)
+    return y, state
+
+
+def mamba2_apply(params, cfg: ArchConfig, x, state):
+    """x: (B,S,d); state: dict(conv_x/conv_B/conv_C histories, ssm=(B,H,P,N)).
+
+    Returns (y, new_state)."""
+    B, S, d = x.shape
+    d_in, H, N, P = mamba2_dims(cfg)
+    z = jnp.einsum("bsd,de->bse", x, params["w_z"].astype(x.dtype))
+    xin = jnp.einsum("bsd,de->bse", x, params["w_x"].astype(x.dtype))
+    B_ = jnp.einsum("bsd,dn->bsn", x, params["w_B"].astype(x.dtype))
+    C_ = jnp.einsum("bsd,dn->bsn", x, params["w_C"].astype(x.dtype))
+    dt = jnp.einsum("bsd,dh->bsh", x, params["w_dt"].astype(x.dtype))
+
+    xin, st_x = _causal_conv(xin, params["conv_x"], params["conv_bias_x"],
+                             state["conv_x"])
+    B_, st_B = _causal_conv(B_, params["conv_B"], params["conv_bias_B"],
+                            state["conv_B"])
+    C_, st_C = _causal_conv(C_, params["conv_C"], params["conv_bias_C"],
+                            state["conv_C"])
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    xh = xin.astype(jnp.float32).reshape(B, S, H, P)
+    Bf = B_.astype(jnp.float32)
+    Cf = C_.astype(jnp.float32)
+
+    if S == 1:
+        y, ssm_state = ssd_step(xh[:, 0], dt[:, 0], params["A_log"],
+                                Bf[:, 0], Cf[:, 0], state["ssm"])
+        y = y[:, None]
+    else:
+        pad = (-S) % CHUNK
+        if pad:
+            xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            Bf = jnp.pad(Bf, ((0, 0), (0, pad), (0, 0)))
+            Cf = jnp.pad(Cf, ((0, 0), (0, pad), (0, 0)))
+        if _use_pallas_ssd():
+            from repro.kernels.ssd_chunk import ops as SSDK
+            a = -jnp.exp(params["A_log"])[None, None, :] * dt
+            y, ssm_state = SSDK.ssd_scan(xh * dt[..., None], a, Bf, Cf,
+                                         state["ssm"])
+        else:
+            y, ssm_state = ssd_chunked(xh, dt, params["A_log"], Bf, Cf,
+                                       state["ssm"])
+        y = y[:, :S]
+
+    y = y + params["D"][None, None, :, None] * xh[:, :S]
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(x.dtype))
+    new_state = {"conv_x": st_x, "conv_B": st_B, "conv_C": st_C, "ssm": ssm_state}
+    return out, new_state
+
+
+def mamba2_state_init(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    d_in, H, N, P = mamba2_dims(cfg)
+    W = cfg.ssm_conv_width
+    return {
+        "conv_x": jnp.zeros((batch, W - 1, d_in), dtype),
+        "conv_B": jnp.zeros((batch, W - 1, N), dtype),
+        "conv_C": jnp.zeros((batch, W - 1, N), dtype),
+        "ssm": jnp.zeros((batch, H, P, N), jnp.float32),
+    }

@@ -1,0 +1,655 @@
+"""Model assembly: init / forward / prefill / decode for every family.
+
+Families
+--------
+dense, vlm   : embed -> scan(attn + swiglu blocks) -> norm -> unembed
+moe          : embed -> scan(attn + MoE blocks)    -> norm -> unembed
+ssm (rwkv6)  : embed -> scan(timemix + channelmix) -> norm -> unembed
+hybrid       : embed -> [6×mamba2 scan + shared attn block] × groups -> ...
+audio        : stub-frontend encoder stack + autoregressive decoder stack
+
+Layer stacks are stored with a leading (L, ...) axis and applied with
+``jax.lax.scan`` so compile time is depth-independent. Activation
+checkpointing (``remat=True``) wraps the per-layer body with
+``jax.checkpoint`` — the standard memory/recompute trade for the train
+shapes.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.models import moe as MOE
+from repro.models import rwkv6 as R6
+from repro.models.kvcache import attn_cache_update
+from repro.sharding.constraints import batch_axes, constrain
+
+# Sliding-window used when a *full-attention* dense arch runs long_500k
+# (the documented SWA variant, DESIGN.md §4).
+LONG_CONTEXT_WINDOW = 8192
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _stacked(init_fn, key, n):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def _cast_tree(tree, dtype):
+    """Cast large float matmul weights to the compute dtype ONCE, before the
+    layer scan — FSDP-sharded weights then all-gather in bf16 (half the ICI
+    bytes and half the transient footprint vs gathering f32 and casting
+    after). Small/1-D params (norm scales, decays, biases) stay f32."""
+    def cast(a):
+        if (hasattr(a, "dtype") and a.dtype == jnp.float32
+                and a.ndim >= 2 and a.size > 16384):
+            return a.astype(dtype)
+        return a
+    return jax.tree.map(cast, tree)
+
+
+def _dense_block_init(key, cfg: ArchConfig, moe: bool):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    norm_init, _ = L.make_norm(cfg)
+    return {
+        "ln1": norm_init(cfg.d_model),
+        "attn": L.attention_init(k1, cfg),
+        "ln2": norm_init(cfg.d_model),
+        "mlp": MOE.moe_init(k2, cfg) if moe else L.swiglu_init(k3, cfg.d_model, cfg.d_ff),
+    }
+
+
+def _rwkv_block_init(key, cfg: ArchConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model),
+        "att": R6.timemix_init(k1, cfg),
+        "ln2": L.rmsnorm_init(cfg.d_model),
+        "ffn": R6.channelmix_init(k2, cfg),
+    }
+
+
+def _mamba_block_init(key, cfg: ArchConfig):
+    return {
+        "ln": L.rmsnorm_init(cfg.d_model),
+        "mixer": M2.mamba2_init(key, cfg),
+    }
+
+
+def _encoder_block_init(key, cfg: ArchConfig):
+    k1, k2 = jax.random.split(key)
+    norm_init, _ = L.make_norm(cfg)
+    return {
+        "ln1": norm_init(cfg.d_model),
+        "attn": L.attention_init(k1, cfg),
+        "ln2": norm_init(cfg.d_model),
+        "mlp": L.gelu_mlp_init(k2, cfg.d_model, cfg.d_ff),
+    }
+
+
+def _decoder_block_init(key, cfg: ArchConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    norm_init, _ = L.make_norm(cfg)
+    return {
+        "ln1": norm_init(cfg.d_model),
+        "self_attn": L.attention_init(k1, cfg),
+        "ln_x": norm_init(cfg.d_model),
+        "cross_attn": L.attention_init(k2, cfg),
+        "ln2": norm_init(cfg.d_model),
+        "mlp": L.gelu_mlp_init(k3, cfg.d_model, cfg.d_ff),
+    }
+
+
+def init_params(key, cfg: ArchConfig) -> Dict[str, Any]:
+    ke, kb, ks, kf = jax.random.split(key, 4)
+    norm_init, _ = L.make_norm(cfg)
+    params: Dict[str, Any] = {
+        "embed": L.embedding_init(ke, cfg),
+        "final_norm": norm_init(cfg.d_model),
+    }
+    if cfg.family in ("dense", "vlm"):
+        params["blocks"] = _stacked(
+            lambda k: _dense_block_init(k, cfg, moe=False), kb, cfg.n_layers)
+    elif cfg.family == "moe":
+        params["blocks"] = _stacked(
+            lambda k: _dense_block_init(k, cfg, moe=True), kb, cfg.n_layers)
+    elif cfg.family == "ssm":
+        params["blocks"] = _stacked(
+            lambda k: _rwkv_block_init(k, cfg), kb, cfg.n_layers)
+    elif cfg.family == "hybrid":
+        params["blocks"] = _stacked(
+            lambda k: _mamba_block_init(k, cfg), kb, cfg.n_layers)
+        params["shared_attn"] = _dense_block_init(ks, cfg, moe=False)
+    elif cfg.family == "audio":
+        params["enc_blocks"] = _stacked(
+            lambda k: _encoder_block_init(k, cfg), kb, cfg.n_encoder_layers)
+        params["blocks"] = _stacked(
+            lambda k: _decoder_block_init(k, cfg), ks, cfg.n_layers)
+        params["enc_final_norm"] = norm_init(cfg.d_model)
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / full-sequence) paths
+# ---------------------------------------------------------------------------
+
+
+def _dense_block_apply(block, cfg: ArchConfig, x, positions, *, window, moe,
+                       cross=None, causal=True):
+    _, norm = L.make_norm(cfg)
+    h = norm(block["ln1"], x, cfg.norm_eps)
+    a, kv = L.attention_apply(
+        block["attn"] if "attn" in block else block["self_attn"],
+        cfg, h, positions=positions, causal=causal, window=window)
+    x = x + a
+    aux = {}
+    if cross is not None:
+        h = norm(block["ln_x"], x, cfg.norm_eps)
+        c, _ = L.attention_apply(block["cross_attn"], cfg, h,
+                                 positions=positions, cross_kv=cross)
+        x = x + c
+    h = norm(block["ln2"], x, cfg.norm_eps)
+    if moe:
+        m, aux = MOE.moe_apply(block["mlp"], cfg, h)
+    elif cfg.family == "audio":
+        m = L.gelu_mlp_apply(block["mlp"], h)
+    else:
+        m = L.swiglu_apply(block["mlp"], h)
+    return x + m, aux, kv
+
+
+def _remat_policy(name):
+    if name in (None, "full"):
+        return None
+    if name == "dots":
+        # save MXU (dot) outputs; recompute only cheap elementwise chains —
+        # trades ~HBM for the remat third of the compute term (§Perf H5)
+        return jax.checkpoint_policies.dots_saveable
+    raise ValueError(name)
+
+
+def _stack_scan(blocks, body, x, remat: bool, policy: str = "full"):
+    """Scan ``body(x, block_params) -> (x, aux)`` over stacked blocks.
+
+    The carry is re-constrained to batch-sharded at every block boundary:
+    without this GSPMD can flip the activations to d_model-sharded /
+    batch-replicated (propagated from the tensor-parallel weights), which
+    replicates the remat-saved (L, B, S, d) stack on every device.
+    """
+    fn = jax.checkpoint(body, policy=_remat_policy(policy)) if remat else body
+
+    def step(carry, block):
+        carry = constrain(carry, batch_axes(), None, None)
+        # barrier: stops XLA hoisting the body's first f32 upcast (rmsnorm)
+        # out of the while loop — the LICM otherwise converts the whole
+        # remat-saved bf16 (L,B,S,d) stack to f32, doubling its footprint
+        carry = jax.lax.optimization_barrier(carry)
+        y, aux = fn(carry, block)
+        return y, aux
+
+    x, auxs = jax.lax.scan(step, x, blocks)
+    return constrain(x, batch_axes(), None, None), auxs
+
+
+def forward(params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray], *,
+            remat: bool = True, remat_policy: str = "full",
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Full-sequence forward returning (logits_f32, aux).
+
+    batch: {"tokens": (B, S)} plus family extras:
+      vlm   -> {"image_embeds": (B, n_img, d)}
+      audio -> {"audio_embeds": (B, n_frames, d)}
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    params = _cast_tree(params, dtype)
+    tokens = batch["tokens"]
+    B, S_text = tokens.shape
+    x = L.embed(params["embed"], tokens, dtype)
+
+    if cfg.family == "vlm":
+        img = batch["image_embeds"].astype(dtype)
+        x = jnp.concatenate([img, x], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+
+    aux: Dict[str, jnp.ndarray] = {}
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        moe = cfg.is_moe
+
+        def body(h, block):
+            h, a, _ = _dense_block_apply(block, cfg, h, positions,
+                                         window=cfg.sliding_window, moe=moe)
+            return h, a
+
+        x, auxs = _stack_scan(params["blocks"], body, x, remat, remat_policy)
+        if moe:
+            aux["moe_aux"] = jnp.mean(auxs["moe_aux"])
+            aux["moe_dropped"] = jnp.mean(auxs["moe_dropped"])
+
+    elif cfg.family == "ssm":
+        zero_prev = jnp.zeros((B, cfg.d_model), dtype)
+        H = cfg.d_model // cfg.wkv_head_dim
+        state0 = jnp.zeros((B, H, cfg.wkv_head_dim, cfg.wkv_head_dim), jnp.float32)
+
+        def body(h, block):
+            a, _, _ = R6.timemix_apply(block["att"],
+                                       cfg,
+                                       L.rmsnorm(block["ln1"], h, cfg.norm_eps),
+                                       zero_prev, state0)
+            h = h + a
+            f, _ = R6.channelmix_apply(block["ffn"], cfg,
+                                       L.rmsnorm(block["ln2"], h, cfg.norm_eps),
+                                       zero_prev)
+            return h + f, 0.0
+
+        x, _ = _stack_scan(params["blocks"], body, x, remat, remat_policy)
+
+    elif cfg.family == "hybrid":
+        x = _hybrid_forward(params, cfg, x, positions, remat, remat_policy)
+
+    elif cfg.family == "audio":
+        enc = _encode_audio(params, cfg, batch["audio_embeds"].astype(dtype), remat)
+
+        def body(h, block):
+            cr = _cross_kv(block, cfg, enc)
+            h, a, _ = _dense_block_apply(block, cfg, h, positions, window=0,
+                                         moe=False, cross=cr)
+            return h, a
+
+        x = x + L.sinusoidal_positions(S, cfg.d_model)[None].astype(dtype)
+        x, _ = _stack_scan(params["blocks"], body, x, remat, remat_policy)
+    else:
+        raise ValueError(cfg.family)
+
+    _, norm = L.make_norm(cfg)
+    x = norm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits, aux
+
+
+def _encode_audio(params, cfg: ArchConfig, audio_embeds, remat):
+    """Stub-frontend encoder: frame embeddings -> bidirectional stack.
+    Returns (k_cross, v_cross) producer input = encoded states."""
+    B, F, d = audio_embeds.shape
+    x = audio_embeds + L.sinusoidal_positions(F, d)[None].astype(audio_embeds.dtype)
+    positions = jnp.arange(F)
+
+    def body(h, block):
+        h, _, _ = _dense_block_apply(block, cfg, h, positions, window=0,
+                                     moe=False, causal=False)
+        return h, 0.0
+
+    x, _ = _stack_scan(params["enc_blocks"], body, x, remat)
+    _, norm = L.make_norm(cfg)
+    x = norm(params["enc_final_norm"], x, cfg.norm_eps)
+    return x
+
+
+def _cross_kv(block, cfg: ArchConfig, enc_out):
+    """Project encoder output to this decoder layer's cross K/V."""
+    B, F, d = enc_out.shape
+    hd = cfg.resolved_head_dim
+    p = block["cross_attn"]
+    k = jnp.einsum("bfd,dh->bfh", enc_out, p["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("bfd,dh->bfh", enc_out, p["wv"].astype(enc_out.dtype))
+    return (k.reshape(B, F, cfg.n_kv_heads, hd), v.reshape(B, F, cfg.n_kv_heads, hd))
+
+
+def _hybrid_forward(params, cfg: ArchConfig, x, positions, remat, remat_policy="full"):
+    """Zamba2: groups of ``shared_attn_period`` mamba2 layers, a weight-tied
+    shared attention block after each full group."""
+    B = x.shape[0]
+    period = cfg.shared_attn_period
+    n_layers = cfg.n_layers
+    state = M2.mamba2_state_init(cfg, B, x.dtype)
+
+    def mamba_body(h, block):
+        a, _ = M2.mamba2_apply(block["mixer"], cfg,
+                               L.rmsnorm(block["ln"], h, cfg.norm_eps), state)
+        return h + a, 0.0
+
+    def run_group(h, blocks_slice):
+        return _stack_scan(blocks_slice, mamba_body, h, remat, remat_policy)[0]
+
+    n_full = n_layers // period
+    rem = n_layers - n_full * period
+    blocks = params["blocks"]
+    for g in range(n_full):
+        sl = jax.tree.map(lambda a: a[g * period:(g + 1) * period], blocks)
+        x = run_group(x, sl)
+        x, _, _ = _dense_block_apply(params["shared_attn"], cfg, x, positions,
+                                     window=cfg.sliding_window, moe=False)
+    if rem:
+        sl = jax.tree.map(lambda a: a[n_full * period:], blocks)
+        x = run_group(x, sl)
+    return x
+
+
+# NOTE on the ssm/hybrid *training* paths: states start at zero and the
+# full sequence is processed by the chunked scans inside the mixers, so the
+# per-layer "state" passed above is only the zero initial state.
+
+# ---------------------------------------------------------------------------
+# Decode (single-token serve) paths
+# ---------------------------------------------------------------------------
+
+
+def decode_step(params, cfg: ArchConfig, cache, tokens,
+                window_override: Optional[int] = None):
+    """One autoregressive step.
+
+    tokens: (B, 1) int32. cache: pytree from kvcache.serve_cache_init
+    (pos already = number of consumed tokens). Returns (logits (B, 1, V) f32,
+    new cache).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    params = _cast_tree(params, dtype)
+    pos = cache["pos"]
+    x = L.embed(params["embed"], tokens, dtype)
+    positions = pos + jnp.arange(1)
+    _, norm = L.make_norm(cfg)
+    window = window_override if window_override is not None else cfg.sliding_window
+
+    new_cache = dict(cache)
+
+    if cfg.family in ("dense", "vlm", "moe", "audio"):
+        attn = cache["attn"]
+        ring = window > 0 and attn["k"].shape[2] <= window
+        is_encdec = cfg.is_encdec
+        quant = attn["k"].dtype == jnp.int8
+
+        def body(h, xs):
+            if is_encdec:
+                block, ck, cv, kv_pos, cross_k, cross_v = xs
+            elif quant:
+                block, ck, cv, kv_pos, ksc, vsc = xs
+            else:
+                block, ck, cv, kv_pos = xs
+            hn = norm(block["ln1"], h, cfg.norm_eps)
+            attn_p = block["self_attn"] if is_encdec else block["attn"]
+            # project + rotate this token's k/v
+            _, kv_new = L.attention_apply(
+                attn_p, cfg, hn, positions=positions, causal=True,
+                window=window, kv=None)
+            k1, v1 = kv_new
+            if quant:
+                ck2, cv2, kvp2, ks2, vs2 = attn_cache_update(
+                    ck, cv, kv_pos, k1, v1, pos, ring, ksc, vsc)
+                kv_in = (ck2, cv2, kvp2, kvp2 >= 0, ks2, vs2)
+            else:
+                ck2, cv2, kvp2 = attn_cache_update(
+                    ck, cv, kv_pos, k1.astype(ck.dtype),
+                    v1.astype(cv.dtype), pos, ring)
+                kv_in = (ck2, cv2, kvp2, kvp2 >= 0)
+            a, _ = L.attention_apply(
+                attn_p, cfg, hn, positions=positions, causal=True, window=window,
+                kv=kv_in)
+            h = h + a
+            if is_encdec:
+                hx = norm(block["ln_x"], h, cfg.norm_eps)
+                c, _ = L.attention_apply(block["cross_attn"], cfg, hx,
+                                         positions=positions,
+                                         cross_kv=(cross_k, cross_v))
+                h = h + c
+            hn = norm(block["ln2"], h, cfg.norm_eps)
+            if cfg.is_moe:
+                m, _ = MOE.moe_apply(block["mlp"], cfg, hn)
+            elif cfg.family == "audio":
+                m = L.gelu_mlp_apply(block["mlp"], hn)
+            else:
+                m = L.swiglu_apply(block["mlp"], hn)
+            if quant:
+                return h + m, (ck2, cv2, kvp2, ks2, vs2)
+            return h + m, (ck2, cv2, kvp2)
+
+        xs = (params["blocks"], attn["k"], attn["v"], attn["kv_pos"])
+        if is_encdec:
+            xs = xs + (cache["cross_k"], cache["cross_v"])
+        elif quant:
+            xs = xs + (attn["k_scale"], attn["v_scale"])
+        if quant:
+            x, (k_new, v_new, kvp_new, ks_new, vs_new) = jax.lax.scan(body, x, xs)
+            new_cache["attn"] = {"k": k_new, "v": v_new, "kv_pos": kvp_new,
+                                 "k_scale": ks_new, "v_scale": vs_new}
+        else:
+            x, (k_new, v_new, kvp_new) = jax.lax.scan(body, x, xs)
+            new_cache["attn"] = {"k": k_new, "v": v_new, "kv_pos": kvp_new}
+
+    elif cfg.family == "ssm":
+        def body(h, xs):
+            block, wkv, sh_a, sh_f = xs
+            a, sh_a2, wkv2 = R6.timemix_apply(
+                block["att"], cfg, L.rmsnorm(block["ln1"], h, cfg.norm_eps),
+                sh_a, wkv)
+            h = h + a
+            f, sh_f2 = R6.channelmix_apply(
+                block["ffn"], cfg, L.rmsnorm(block["ln2"], h, cfg.norm_eps), sh_f)
+            return h + f, (wkv2, sh_a2.astype(sh_a.dtype), sh_f2.astype(sh_f.dtype))
+
+        xs = (params["blocks"], cache["wkv"], cache["shift_att"], cache["shift_ffn"])
+        x, (wkv2, sa2, sf2) = jax.lax.scan(body, x, xs)
+        new_cache.update(wkv=wkv2, shift_att=sa2, shift_ffn=sf2)
+
+    elif cfg.family == "hybrid":
+        x, new_cache = _hybrid_decode(params, cfg, cache, x, positions, pos)
+
+    else:
+        raise ValueError(cfg.family)
+
+    x = norm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg)
+    new_cache["pos"] = pos + 1
+    return logits, new_cache
+
+
+def _hybrid_decode(params, cfg: ArchConfig, cache, x, positions, pos):
+    period = cfg.shared_attn_period
+    n_layers = cfg.n_layers
+    n_full = n_layers // period
+    rem = n_layers - n_full * period
+    # ring-buffer size == window (static shape, not a traced cache leaf)
+    window = cache["attn"]["k"].shape[2]
+    _, norm = L.make_norm(cfg)
+    new_cache = dict(cache)
+
+    def mamba_body(h, xs):
+        block, st = xs
+        a, st2 = M2.mamba2_apply(block["mixer"], cfg,
+                                 L.rmsnorm(block["ln"], h, cfg.norm_eps), st)
+        return h + a, st2
+
+    mamba_states = cache["mamba"]
+    attn = cache["attn"]
+    new_states = []
+    attn_k, attn_v, attn_pos = attn["k"], attn["v"], attn["kv_pos"]
+    ks, vs, ps = [], [], []
+    for g in range(n_full + (1 if rem else 0)):
+        lo = g * period
+        hi = min(lo + period, n_layers)
+        blocks_sl = jax.tree.map(lambda a: a[lo:hi], params["blocks"])
+        states_sl = jax.tree.map(lambda a: a[lo:hi], mamba_states)
+        x, st2 = jax.lax.scan(mamba_body, x, (blocks_sl, states_sl))
+        new_states.append(st2)
+        if hi - lo == period:  # full group -> shared attention block
+            hn = norm(params["shared_attn"]["ln1"], x, cfg.norm_eps)
+            _, kv_new = L.attention_apply(params["shared_attn"]["attn"], cfg, hn,
+                                          positions=positions, causal=True,
+                                          window=window)
+            k1, v1 = kv_new
+            ck, cv, kvp = attn_k[g], attn_v[g], attn_pos[g]
+            ck2, cv2, kvp2 = attn_cache_update(
+                ck, cv, kvp, k1.astype(ck.dtype), v1.astype(cv.dtype), pos, True)
+            a, _ = L.attention_apply(params["shared_attn"]["attn"], cfg, hn,
+                                     positions=positions, causal=True,
+                                     window=window,
+                                     kv=(ck2, cv2, kvp2, kvp2 >= 0))
+            x = x + a
+            hn = norm(params["shared_attn"]["ln2"], x, cfg.norm_eps)
+            x = x + L.swiglu_apply(params["shared_attn"]["mlp"], hn)
+            ks.append(ck2); vs.append(cv2); ps.append(kvp2)
+
+    new_cache["mamba"] = jax.tree.map(
+        lambda *xs: jnp.concatenate(xs, axis=0), *new_states)
+    new_cache["attn"] = {"k": jnp.stack(ks), "v": jnp.stack(vs),
+                         "kv_pos": jnp.stack(ps)}
+    return x, new_cache
+
+
+def _hybrid_prefill(params, cfg: ArchConfig, cache, x, positions):
+    """Full-prompt pass for zamba2: fills mamba states + shared-attn ring
+    cache (last ``window`` positions)."""
+    B, S, _ = x.shape
+    period = cfg.shared_attn_period
+    n_layers = cfg.n_layers
+    n_full = n_layers // period
+    rem = n_layers - n_full * period
+    window = cache["attn"]["k"].shape[2]
+    _, norm = L.make_norm(cfg)
+    new_cache = dict(cache)
+
+    def mamba_body(h, xs):
+        block, st = xs
+        a, st2 = M2.mamba2_apply(block["mixer"], cfg,
+                                 L.rmsnorm(block["ln"], h, cfg.norm_eps), st)
+        return h + a, st2
+
+    mamba_states = cache["mamba"]
+    new_states, ks, vs, ps = [], [], [], []
+    for g in range(n_full + (1 if rem else 0)):
+        lo, hi = g * period, min((g + 1) * period, n_layers)
+        blocks_sl = jax.tree.map(lambda a: a[lo:hi], params["blocks"])
+        states_sl = jax.tree.map(lambda a: a[lo:hi], mamba_states)
+        x, st2 = jax.lax.scan(mamba_body, x, (blocks_sl, states_sl))
+        new_states.append(st2)
+        if hi - lo == period:
+            sa = params["shared_attn"]
+            hn = norm(sa["ln1"], x, cfg.norm_eps)
+            a, kv = L.attention_apply(sa["attn"], cfg, hn, positions=positions,
+                                      causal=True, window=window)
+            x = x + a
+            hn = norm(sa["ln2"], x, cfg.norm_eps)
+            x = x + L.swiglu_apply(sa["mlp"], hn)
+            k1, v1 = kv
+            keep = min(S, window)
+            ck = cache["attn"]["k"][g]
+            # ring-aligned slots: slot = position % window, so decode-time
+            # writes (pos % window) evict exactly the oldest entry
+            pos_kept = jnp.arange(S - keep, S, dtype=jnp.int32)
+            slots = pos_kept % window
+            kk = jnp.zeros_like(ck).at[:, slots].set(
+                k1[:, S - keep:S].astype(ck.dtype))
+            vv = jnp.zeros_like(ck).at[:, slots].set(
+                v1[:, S - keep:S].astype(ck.dtype))
+            pp = jnp.full((ck.shape[1],), -1, jnp.int32).at[slots].set(pos_kept)
+            ks.append(kk); vs.append(vv); ps.append(pp)
+    new_cache["mamba"] = jax.tree.map(
+        lambda *xs: jnp.concatenate(xs, axis=0), *new_states)
+    new_cache["attn"] = {"k": jnp.stack(ks), "v": jnp.stack(vs),
+                         "kv_pos": jnp.stack(ps)}
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill (build cache from a full prompt) — used by serve.py and tests
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, cfg: ArchConfig, batch, cache, *, remat: bool = False):
+    """Consume the full prompt, fill the cache, return last-token logits.
+
+    For attention families this recomputes k/v per layer and writes them into
+    the cache; for recurrent families it runs the chunked scans and stores
+    final states. ``batch["tokens"]: (B, S)``.
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    params = _cast_tree(params, dtype)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens, dtype)
+    if cfg.family == "vlm" and "image_embeds" in batch:
+        x = jnp.concatenate([batch["image_embeds"].astype(dtype), x], axis=1)
+        S = x.shape[1]
+    positions = jnp.arange(S)
+    _, norm = L.make_norm(cfg)
+    new_cache = dict(cache)
+    window = cfg.sliding_window
+
+    if cfg.family in ("dense", "vlm", "moe", "audio"):
+        cross = None
+        if cfg.is_encdec:
+            enc = _encode_audio(params, cfg, batch["audio_embeds"].astype(dtype),
+                                remat)
+            x = x + L.sinusoidal_positions(S, cfg.d_model)[None].astype(dtype)
+
+        max_len = cache["attn"]["k"].shape[2]
+
+        def body(h, xs):
+            block = xs
+            cr = _cross_kv(block, cfg, enc) if cfg.is_encdec else None
+            h, _, kv = _dense_block_apply(block, cfg, h, positions,
+                                          window=window, moe=cfg.is_moe, cross=cr)
+            k1, v1 = kv
+            if cfg.is_encdec:
+                return h, (k1, v1, cr[0], cr[1])
+            return h, (k1, v1)
+
+        body_fn = jax.checkpoint(body) if remat else body
+        x, outs = jax.lax.scan(body_fn, x, params["blocks"])
+        k_all, v_all = outs[0], outs[1]          # (L, B, S, Hkv, hd)
+        # keep the last max_len positions, at ring-aligned slots
+        # (slot = position % max_len) so decode-time ring writes evict
+        # exactly the oldest entry
+        keep = min(S, max_len)
+        pos_kept = jnp.arange(S - keep, S, dtype=jnp.int32)
+        slots = pos_kept % max_len
+        k_keep = k_all[:, :, S - keep:S]
+        v_keep = v_all[:, :, S - keep:S]
+        ck = cache["attn"]["k"]
+        new_k = jnp.zeros_like(ck).at[:, :, slots].set(k_keep.astype(ck.dtype))
+        new_v = jnp.zeros_like(ck).at[:, :, slots].set(v_keep.astype(ck.dtype))
+        new_pos = jnp.full_like(cache["attn"]["kv_pos"], -1)
+        new_pos = new_pos.at[:, slots].set(pos_kept[None])
+        new_cache["attn"] = {"k": new_k, "v": new_v, "kv_pos": new_pos}
+        if cfg.is_encdec:
+            new_cache["cross_k"] = outs[2].astype(ck.dtype)
+            new_cache["cross_v"] = outs[3].astype(ck.dtype)
+    elif cfg.family == "ssm":
+        H = cfg.d_model // cfg.wkv_head_dim
+        zero_prev = jnp.zeros((B, cfg.d_model), dtype)
+
+        def body(h, xs):
+            block, wkv = xs
+            a, sh_a, wkv2 = R6.timemix_apply(
+                block["att"], cfg, L.rmsnorm(block["ln1"], h, cfg.norm_eps),
+                zero_prev, wkv)
+            h = h + a
+            f, sh_f = R6.channelmix_apply(
+                block["ffn"], cfg, L.rmsnorm(block["ln2"], h, cfg.norm_eps),
+                zero_prev)
+            return h + f, (wkv2, sh_a, sh_f)
+
+        x, (wkv2, sa, sf) = jax.lax.scan(body, x, (params["blocks"], cache["wkv"]))
+        new_cache.update(wkv=wkv2,
+                         shift_att=sa.astype(cache["shift_att"].dtype),
+                         shift_ffn=sf.astype(cache["shift_ffn"].dtype))
+    elif cfg.family == "hybrid":
+        x, new_cache = _hybrid_prefill(params, cfg, cache, x, positions)
+    else:
+        raise ValueError(cfg.family)
+
+    x = norm(params["final_norm"], x, cfg.norm_eps)
+    last = x[:, -1:, :]
+    logits = L.unembed(params["embed"], last, cfg)
+    new_cache["pos"] = jnp.asarray(S, jnp.int32)
+    return logits, new_cache

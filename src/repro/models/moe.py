@@ -1,0 +1,115 @@
+"""Mixture-of-Experts layer with GShard/Shazeer-style capacity-based one-hot
+dispatch einsums.
+
+Why capacity dispatch (and not dense all-expert compute): the dispatch/combine
+einsums contract over a one-hot (group, token, expert, capacity) tensor, so the
+expert FFN only processes ``E × C`` token slots — the compiled HLO FLOPs then
+reflect *active* parameters (assignment: MODEL_FLOPS for MoE uses N_active),
+and under pjit the (tokens over 'data') × (experts over 'model') sharding of
+the dispatch einsum lowers to the canonical expert-parallel all-to-all.
+
+Sharding strategy (see sharding/partitioning.py):
+- ``E % model_axis == 0``  -> expert-parallel: experts sharded over 'model'.
+- otherwise               -> tensor-parallel inside each expert: d_ff sharded.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import _dense_init
+from repro.sharding.constraints import batch_axes, constrain
+
+
+def moe_init(key, cfg: ArchConfig):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    return {
+        "router": _dense_init(kr, (d, E), scale=0.02),
+        "w_gate": jax.vmap(lambda k: _dense_init(k, (d, f)))(jax.random.split(kg, E)),
+        "w_up": jax.vmap(lambda k: _dense_init(k, (d, f)))(jax.random.split(ku, E)),
+        "w_down": jax.vmap(lambda k: _dense_init(k, (f, d)))(jax.random.split(kd, E)),
+    }
+
+
+def _top_k_mask(probs, k):
+    """probs: (..., E) -> (mask, weights) keeping top-k entries."""
+    top_vals, _ = jax.lax.top_k(probs, k)
+    thresh = top_vals[..., -1:]
+    mask = probs >= thresh
+    w = jnp.where(mask, probs, 0.0)
+    return mask, w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+
+
+GROUP_SIZE = 512  # tokens per dispatch group (caps the one-hot tensor size)
+
+
+def moe_apply(params, cfg: ArchConfig, x, *, capacity_factor=None,
+              group_size=GROUP_SIZE):
+    """x: (B, S, d) -> (B, S, d), plus aux losses dict.
+
+    Tokens are dispatched in groups of ``group_size`` (sub-sequence chunks);
+    per-group capacity C = ceil(group * top_k / E * cf). The (G, T, E, C)
+    one-hot dispatch tensor is the GShard formulation — its size per device
+    is tokens × E × C × 2B, so C (i.e. group size) bounds the working set.
+    Tokens overflowing an expert's capacity within their group are dropped
+    (residual connection passes them through) — standard GShard semantics.
+    """
+    B, S0, d = x.shape
+    orig_shape = (B, S0, d)
+    E, K = cfg.n_experts, cfg.experts_per_token
+    cf = capacity_factor or cfg.moe_capacity_factor
+    if S0 == 1:
+        # decode: merge tokens into groups of gs and use DROPLESS capacity
+        # C = gs. Per-token groups would need C >= K with all E experts
+        # materializing C slots => E*K slots/token vs K needed (32x waste
+        # for granite). Grouped: E*gs slots per gs tokens = E/K x waste,
+        # which is fine because decode is memory-bound and this layout
+        # reads each expert's weights exactly once per device. (§Perf H1)
+        gs = 1
+        for cand in (16, 8, 4, 2):
+            if B % cand == 0:
+                gs = cand
+                break
+        x = x.reshape(B // gs, gs, d)
+        C = gs
+    elif S0 % group_size == 0 and S0 > group_size:
+        # train/prefill: sub-sequence groups bound the one-hot tensor size
+        x = x.reshape(B * (S0 // group_size), group_size, d)
+        C = max(1, int(group_size * K * cf / E + 0.5))
+    else:
+        C = max(1, int(S0 * K * cf / E + 0.5))
+    B_, S = x.shape[0], x.shape[1]
+    C = min(C, S * K)
+
+    logits = jnp.einsum("gsd,de->gse", x, params["router"].astype(x.dtype))
+    logits = logits.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    mask, weights = _top_k_mask(probs, K)  # (G, S, E)
+
+    # position of each token in its expert's buffer (per group)
+    pos_in_expert = jnp.cumsum(mask.astype(jnp.int32), axis=1) - 1  # (G,S,E)
+    keep = mask & (pos_in_expert < C)
+    # one-hot over capacity slots: (G, S, E, C)
+    slot = jax.nn.one_hot(jnp.where(keep, pos_in_expert, -1), C, dtype=x.dtype)
+    dispatch = slot * keep[..., None].astype(x.dtype)
+    combine = dispatch * weights[..., None].astype(x.dtype)
+
+    # dispatch: (G, S, E, C) x (G, S, d) -> (E, G, C, d)
+    # Pinning E over 'model' (expert-parallel; dropped if E doesn't divide)
+    # and G over data makes this einsum lower to the canonical all-to-all.
+    expert_in = jnp.einsum("gsec,gsd->egcd", dispatch, x)
+    expert_in = constrain(expert_in, "model", batch_axes(), None, None)
+    h_g = jnp.einsum("egcd,edf->egcf", expert_in, params["w_gate"].astype(x.dtype))
+    h_u = jnp.einsum("egcd,edf->egcf", expert_in, params["w_up"].astype(x.dtype))
+    h = jax.nn.silu(h_g.astype(jnp.float32)).astype(x.dtype) * h_u
+    expert_out = jnp.einsum("egcf,efd->egcd", h, params["w_down"].astype(x.dtype))
+    y = jnp.einsum("gsec,egcd->gsd", combine, expert_out)
+
+    # Switch-style load-balance aux loss
+    frac_tokens = jnp.mean(mask.astype(jnp.float32), axis=(0, 1))     # (E,)
+    frac_probs = jnp.mean(probs, axis=(0, 1))                          # (E,)
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+    y = y.reshape(orig_shape)
+    return y, {"moe_aux": aux, "moe_dropped": 1.0 - jnp.mean(keep.sum(-1) / K)}

@@ -1,0 +1,183 @@
+"""RWKV6 (Finch) — attention-free time-mix with data-dependent decay.
+
+Recurrence (per head, key-dim N_k = value-dim N_v = wkv_head_dim):
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t^T S_{t-1} + (r_t ⊙ u ⊙ k_t) · v_t           (u = per-channel bonus)
+
+with per-channel decay w_t ∈ (0,1) computed from the input via a small LoRA
+(data-dependent decay — the core Finch novelty vs RWKV5).
+
+Training/prefill uses a chunked formulation (lax.scan over chunks of length
+``CHUNK``; intra-chunk via masked decayed attention einsum, inter-chunk via the
+carried state) — O(S·C·N) memory instead of O(S²). The Pallas kernel in
+``repro/kernels/wkv6`` implements a single chunk; this module is its jnp
+reference path and the decode (single-step) path.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import _dense_init, rmsnorm, rmsnorm_init
+
+CHUNK = 128
+LORA_R = 64
+
+
+def _use_pallas_wkv() -> bool:
+    """Route the chunked recurrence through the Pallas wkv6 kernel
+    (fwd-only paths: prefill/serve — no custom VJP yet)."""
+    return os.environ.get("REPRO_PALLAS_WKV", "0") == "1"
+
+
+def timemix_init(key, cfg: ArchConfig):
+    d = cfg.d_model
+    ks = jax.random.split(key, 10)
+    H = d // cfg.wkv_head_dim
+    return {
+        "mix_base": jnp.full((5, d), 0.5, jnp.float32),  # r,k,v,g,w token-shift mixes
+        "wr": _dense_init(ks[0], (d, d)),
+        "wk": _dense_init(ks[1], (d, d)),
+        "wv": _dense_init(ks[2], (d, d)),
+        "wg": _dense_init(ks[3], (d, d)),
+        "wo": _dense_init(ks[4], (d, d)),
+        # data-dependent decay LoRA: w_t = exp(-exp(w0 + tanh(x A) B))
+        "decay_w0": jnp.full((d,), -6.0, jnp.float32),
+        "decay_A": _dense_init(ks[5], (d, LORA_R), scale=0.01),
+        "decay_B": _dense_init(ks[6], (LORA_R, d), scale=0.01),
+        "bonus_u": jnp.zeros((d,), jnp.float32),
+        "ln_out": rmsnorm_init(d),
+    }
+
+
+def channelmix_init(key, cfg: ArchConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2 = jax.random.split(key)
+    return {
+        "mix_base": jnp.full((1, d), 0.5, jnp.float32),
+        "w_in": _dense_init(k1, (d, f)),
+        "w_out": _dense_init(k2, (f, d)),
+    }
+
+
+def _token_shift(x, x_prev):
+    """x: (B,S,d); x_prev: (B,d) last token of previous segment."""
+    shifted = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+    return shifted
+
+
+def wkv_chunked(r, k, v, logw, u, state0):
+    """Chunked WKV recurrence.
+
+    r,k,v: (B, S, H, N); logw: (B, S, H, N) = log decay (negative);
+    u: (H, N); state0: (B, H, N, N). Returns y (B,S,H,N), state (B,H,N,N).
+    S must be a multiple of CHUNK (caller pads).
+    """
+    B, S, H, N = r.shape
+    nc = S // CHUNK
+    rc = r.reshape(B, nc, CHUNK, H, N)
+    kc = k.reshape(B, nc, CHUNK, H, N)
+    vc = v.reshape(B, nc, CHUNK, H, N)
+    wc = logw.reshape(B, nc, CHUNK, H, N)
+
+    def chunk_step(state, inp):
+        rb, kb, vb, wb = inp  # (B, C, H, N)
+        L = jnp.cumsum(wb, axis=1)                      # L_t = sum_{s<=t} log w_s
+        Lm1 = L - wb                                    # L_{t-1} (with L_{-1}=0)
+        # inter-chunk: y_t += (r_t * exp(L_{t-1})) @ state
+        r_dec = rb * jnp.exp(Lm1)
+        y_inter = jnp.einsum("bchn,bhnm->bchm", r_dec, state)
+        # intra-chunk: A[t,j] = sum_n r_t,n exp(L_{t-1,n} - L_{j,n}) k_j,n, j<t
+        # factorized as (r_t exp(L_{t-1} - c)) · (k_j exp(c - L_j)) with the
+        # mid-chunk shift c = L_C/2 so neither factor overflows even under
+        # strong decay (|exponent| <= |L_C|/2 instead of |L_C|).
+        c = L[:, -1:] * 0.5
+        r_dec2 = rb * jnp.exp(Lm1 - c)
+        k_dec = kb * jnp.exp(c - L)
+        A = jnp.einsum("bchn,bjhn->bhcj", r_dec2, k_dec)
+        mask = jnp.tril(jnp.ones((CHUNK, CHUNK), bool), -1)
+        A = jnp.where(mask[None, None], A, 0.0)
+        y_intra = jnp.einsum("bhcj,bjhm->bchm", A, vb)
+        # current-token bonus: y_t,m += (sum_n r_n u_n k_n) v_m
+        y_diag = jnp.einsum("bchn,bchn->bch", rb * u, kb)[..., None] * vb
+        y = y_inter + y_intra + y_diag
+        # state update: S' = diag(exp(L_C)) S + sum_j diag(exp(L_C - L_j)) k_j v_j^T
+        LC = L[:, -1]                                    # (B, H, N)
+        k_tail = kb * jnp.exp(LC[:, None] - L)
+        state_new = jnp.exp(LC)[..., None] * state + jnp.einsum(
+            "bjhn,bjhm->bhnm", k_tail, vb)
+        return state_new, y
+
+    state, ys = jax.lax.scan(
+        jax.checkpoint(chunk_step),  # don't save per-chunk intermediates
+        state0,
+        (jnp.moveaxis(rc, 1, 0), jnp.moveaxis(kc, 1, 0),
+         jnp.moveaxis(vc, 1, 0), jnp.moveaxis(wc, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, N)
+    return y, state
+
+
+def wkv_step(r, k, v, logw, u, state):
+    """Single decode step. r,k,v,logw: (B,H,N); state: (B,H,N,N)."""
+    y = jnp.einsum("bhn,bhnm->bhm", r, state)
+    y = y + jnp.einsum("bhn,bhn->bh", r * u, k)[..., None] * v
+    state = jnp.exp(logw)[..., None] * state + k[..., None] * v[..., None, :]
+    return y, state
+
+
+def timemix_apply(params, cfg: ArchConfig, x, x_prev, state):
+    """x: (B,S,d). x_prev: (B,d). state: (B,H,N,N). Returns y, x_last, state."""
+    B, S, d = x.shape
+    N = cfg.wkv_head_dim
+    H = d // N
+    shifted = _token_shift(x, x_prev)
+    mix = params["mix_base"].astype(x.dtype)  # (5, d)
+    xs = [x + mix[i] * (shifted - x) for i in range(5)]
+    r = jnp.einsum("bsd,de->bse", xs[0], params["wr"].astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", xs[1], params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", xs[2], params["wv"].astype(x.dtype))
+    g = jnp.einsum("bsd,de->bse", xs[3], params["wg"].astype(x.dtype))
+    lora = jnp.tanh(xs[4].astype(jnp.float32) @ params["decay_A"]) @ params["decay_B"]
+    logw = -jnp.exp(params["decay_w0"] + lora)          # (B,S,d), < 0
+    u = params["bonus_u"].reshape(H, N)
+
+    rf = r.astype(jnp.float32).reshape(B, S, H, N)
+    kf = k.astype(jnp.float32).reshape(B, S, H, N)
+    vf = v.astype(jnp.float32).reshape(B, S, H, N)
+    wf = logw.reshape(B, S, H, N)
+
+    pad = (-S) % CHUNK
+    if S == 1:
+        y, state = wkv_step(rf[:, 0], kf[:, 0], vf[:, 0], wf[:, 0], u, state)
+        y = y[:, None]
+    else:
+        if pad:
+            rf = jnp.pad(rf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            kf = jnp.pad(kf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vf = jnp.pad(vf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            wf = jnp.pad(wf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if _use_pallas_wkv():
+            from repro.kernels.wkv6 import ops as WKVK
+            y, state = WKVK.wkv6(rf, kf, vf, wf, u, state)
+        else:
+            y, state = wkv_chunked(rf, kf, vf, wf, u, state)
+        y = y[:, :S]
+
+    y = y.reshape(B, S, d)
+    y = rmsnorm(params["ln_out"], y, cfg.norm_eps)
+    y = y.astype(x.dtype) * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", y, params["wo"].astype(x.dtype))
+    return out, x[:, -1, :], state
+
+
+def channelmix_apply(params, cfg: ArchConfig, x, x_prev):
+    shifted = _token_shift(x, x_prev)
+    mix = params["mix_base"].astype(x.dtype)
+    xk = x + mix[0] * (shifted - x)
+    h = jnp.einsum("bsd,df->bsf", xk, params["w_in"].astype(x.dtype))
+    h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(x.dtype)
+    return jnp.einsum("bsf,fd->bsd", h, params["w_out"].astype(x.dtype)), x[:, -1, :]

@@ -1,0 +1,195 @@
+"""Training / serving step functions + ShapeDtypeStruct input specs.
+
+These are the functions the launcher jits (and the dry-run lowers): they
+close over the ArchConfig/TrainConfig so their only traced inputs are
+params / optimizer state / batch / cache pytrees — all shardable.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape, TrainConfig
+from repro.models import model as MODEL
+from repro.models.kvcache import serve_cache_init
+from repro.optim import adamw, schedules
+from repro.sharding.constraints import batch_axes, constrain
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits, labels, mask):
+    """logits: (B, S, V) f32; labels: (B, S) int32; mask: (B, S) f32.
+
+    The gold logit is extracted with a one-hot contraction rather than
+    take_along_axis: a gather along a vocab-sharded dim forces GSPMD to
+    all-gather the full (B,S,V) tensor, while the contraction stays sharded
+    and reduces with a psum.
+    """
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def loss_fn(params, cfg: ArchConfig, batch, *, remat=True,
+            remat_policy="full"):
+    logits, aux = MODEL.forward(params, cfg, batch, remat=remat,
+                                remat_policy=remat_policy)
+    # keep the (B, S, V) tensor vocab-sharded over 'model' through the CE —
+    # unsharded it is ~13 GB/device f32 at train_4k (see EXPERIMENTS §Perf)
+    logits = constrain(logits, batch_axes(), None, "model")
+    tokens = batch["tokens"]
+    B, S_text = tokens.shape
+    # next-token prediction over the text stream; for VLM the image prefix
+    # positions produce no loss.
+    text_logits = logits[:, -S_text:, :]
+    labels = tokens[:, 1:]
+    pred = text_logits[:, :-1, :]
+    mask = jnp.ones_like(labels, jnp.float32)
+    loss = cross_entropy(pred, labels, mask)
+    if "moe_aux" in aux:
+        loss = loss + 0.01 * aux["moe_aux"]
+    metrics = {"loss": loss, **{k: v for k, v in aux.items()}}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Step factories
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ArchConfig, tcfg: TrainConfig):
+    lr_fn = schedules.warmup_cosine(tcfg)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, remat=tcfg.remat,
+                              remat_policy=tcfg.remat_policy), has_aux=True
+        )(params)
+
+    def train_step(params, opt_state: adamw.AdamWState, batch):
+        M = tcfg.microbatches
+        if M > 1:
+            # grad accumulation: scan over microbatches — divides the
+            # activation footprint (remat stacks, logits) by M
+            micro = jax.tree.map(
+                lambda x: x.reshape((M, x.shape[0] // M) + x.shape[1:]), batch)
+
+            def acc_step(carry, mb):
+                g_acc, loss_acc, metr_acc = carry
+                (loss, metrics), g = grads_of(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                metr_acc = jax.tree.map(lambda a, b: a + b, metr_acc, metrics)
+                return (g_acc, loss_acc + loss, metr_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            metrics0 = jax.tree.map(
+                lambda x: jnp.zeros(x.shape, x.dtype),
+                jax.eval_shape(lambda: grads_of(
+                    params, jax.tree.map(lambda x: x[0], micro))[0][1]))
+            (grads, loss, metrics), _ = jax.lax.scan(
+                acc_step, (g0, 0.0, metrics0),
+                micro)
+            grads = jax.tree.map(lambda g: g / M, grads)
+            metrics = jax.tree.map(lambda m: m / M, metrics)
+            loss = loss / M
+        else:
+            (loss, metrics), grads = grads_of(params, batch)
+        grads, gnorm = adamw.clip_by_global_norm(grads, tcfg.grad_clip)
+        lr = lr_fn(opt_state.step + 1)  # 1-based so warmup never yields lr=0
+        params, opt_state = adamw.apply(params, grads, opt_state, tcfg, lr)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, shape: InputShape,
+                      window_override: Optional[int] = None):
+    def prefill_step(params, batch):
+        cache = serve_cache_init(cfg, batch["tokens"].shape[0], shape.seq_len,
+                                 window_override=window_override)
+        return MODEL.prefill(params, cfg, batch, cache)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, window_override: Optional[int] = None):
+    def serve_step(params, cache, tokens):
+        return MODEL.decode_step(params, cfg, cache, tokens,
+                                 window_override=window_override)
+
+    return serve_step
+
+
+def cache_specs_quant(cfg: ArchConfig, shape: InputShape,
+                      window_override: Optional[int] = None) -> Any:
+    return jax.eval_shape(
+        lambda: serve_cache_init(cfg, shape.global_batch, shape.seq_len,
+                                 window_override=window_override,
+                                 kv_quant=True))
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins — no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ArchConfig, shape: InputShape) -> Dict[str, Any]:
+    """Training / prefill batch spec for one (arch, shape)."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "vlm":
+        n_img = cfg.n_image_tokens
+        return {
+            "tokens": _sds((B, S - n_img), jnp.int32),
+            "image_embeds": _sds((B, n_img, cfg.d_model), jnp.bfloat16),
+        }
+    if cfg.family == "audio":
+        return {
+            "tokens": _sds((B, S), jnp.int32),
+            "audio_embeds": _sds((B, cfg.n_audio_frames, cfg.d_model), jnp.bfloat16),
+        }
+    return {"tokens": _sds((B, S), jnp.int32)}
+
+
+def cache_specs(cfg: ArchConfig, shape: InputShape,
+                window_override: Optional[int] = None) -> Any:
+    """ShapeDtypeStruct pytree matching serve_cache_init's output."""
+    cache = jax.eval_shape(
+        lambda: serve_cache_init(cfg, shape.global_batch, shape.seq_len,
+                                 window_override=window_override))
+    return cache
+
+
+def decode_token_specs(shape: InputShape):
+    return _sds((shape.global_batch, 1), jnp.int32)
+
+
+def params_specs(cfg: ArchConfig):
+    return jax.eval_shape(partial(MODEL.init_params, cfg=cfg),
+                          jax.random.key(0))
+
+
+def opt_specs(cfg: ArchConfig):
+    p = params_specs(cfg)
+    return jax.eval_shape(adamw.init, p)
+
+
+def long_context_window(cfg: ArchConfig, shape: InputShape) -> Optional[int]:
+    """Window override for full-attention archs on long_500k (DESIGN.md §4)."""
+    if (shape.name == "long_500k" and cfg.family in ("dense", "vlm", "moe")
+            and cfg.sliding_window == 0):
+        return MODEL.LONG_CONTEXT_WINDOW
+    return None

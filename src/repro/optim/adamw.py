@@ -1,0 +1,67 @@
+"""AdamW with decoupled weight decay + global-norm clipping.
+
+Built from scratch (optax is not available in the container); the state is a
+plain pytree so it shards with the same NamedSharding rules as the params.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def apply(params, grads, state: AdamWState, tcfg: TrainConfig, lr):
+    """One AdamW update. ``lr`` may be a scalar (schedule already applied)."""
+    step = state.step + 1
+    b1, b2, eps, wd = tcfg.beta1, tcfg.beta2, tcfg.eps, tcfg.weight_decay
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + wd * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.mu)
+    flat_v = tdef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_v)

@@ -1,0 +1,30 @@
+"""Learning-rate schedules (warmup + cosine decay, constant, rsqrt)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def warmup_cosine(tcfg: TrainConfig):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = tcfg.learning_rate * step / max(tcfg.warmup_steps, 1)
+        prog = jnp.clip((step - tcfg.warmup_steps) /
+                        max(tcfg.total_steps - tcfg.warmup_steps, 1), 0.0, 1.0)
+        cos = 0.5 * tcfg.learning_rate * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < tcfg.warmup_steps, warm, cos)
+    return lr
+
+
+def constant(tcfg: TrainConfig):
+    return lambda step: jnp.asarray(tcfg.learning_rate, jnp.float32)
+
+
+def rsqrt(tcfg: TrainConfig):
+    def lr(step):
+        step = jnp.maximum(step.astype(jnp.float32), 1.0)
+        scale = jnp.minimum(step / max(tcfg.warmup_steps, 1),
+                            jnp.sqrt(tcfg.warmup_steps / step))
+        return tcfg.learning_rate * scale
+    return lr

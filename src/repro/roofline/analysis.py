@@ -1,0 +1,229 @@
+"""Roofline-term derivation from compiled XLA artifacts + jaxpr costs.
+
+Three terms (seconds), per device, for a TPU v5e:
+
+    compute    = FLOPs/device    / peak_FLOPs       (197e12 bf16 FLOP/s/chip)
+    memory     = bytes/device    / HBM_bw           (819e9  B/s/chip)
+    collective = coll_B/device   / ICI_bw           (~50e9  B/s/link × links)
+
+Methodology (see EXPERIMENTS §Dry-run):
+  - FLOPs/bytes come from the *jaxpr* cost model (repro.roofline.jaxpr_cost):
+    XLA's cost_analysis counts while-loop bodies once, undercounting scanned
+    layer stacks by ~n_layers. Jaxpr costs are global → divide by chips.
+  - Collective bytes are parsed from the compiled (post-SPMD, per-device)
+    HLO text with a computation call-graph walk that multiplies while-loop
+    bodies by their trip count (extracted from the loop-condition constant).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12         # bf16 FLOP/s per v5e chip
+HBM_BW = 819e9              # B/s per chip
+ICI_BW = 50e9               # B/s per link
+ICI_LINKS = 2               # usable links per collective on a 2D torus axis
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                   "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'f32[16,128]' -> 8192; tuple shapes sum their element shapes."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+# ---------------------------------------------------------------------------
+# HLO computation graph
+# ---------------------------------------------------------------------------
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->", re.M)
+_CALLSITE = re.compile(
+    r"(?:condition|body|to_apply|calls|true_computation|false_computation)="
+    r"%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _split_computations(hlo_text: str):
+    """Return {name: [lines]} per HLO computation, plus the ENTRY name."""
+    comps = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _COMP_HDR.match(line.strip())
+        if m and line.rstrip().endswith("{"):
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+                continue
+            comps[cur].append(line)
+    return comps, entry
+
+
+def _line_op_and_shape(line: str):
+    m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)", line.strip())
+    if not m:
+        return None, None
+    return m.group(2), m.group(1)
+
+
+def _while_trip_count(cond_lines) -> int:
+    """Largest integer constant in the loop-condition computation — for
+    lax.scan-lowered loops this is the trip count."""
+    best = 1
+    for line in cond_lines:
+        for m in re.finditer(r"constant\((\d+)\)", line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def collective_bytes_graph(hlo_text: str) -> Dict[str, float]:
+    """Collective result-bytes summed over the computation call graph, with
+    while-loop bodies multiplied by their trip counts."""
+    comps, entry = _split_computations(hlo_text)
+    if entry is None:
+        return {k: 0.0 for k in _COLLECTIVE_OPS}
+
+    memo = {}
+
+    def cost(name):
+        if name in memo:
+            return memo[name]
+        memo[name] = {k: 0.0 for k in _COLLECTIVE_OPS}  # cycle guard
+        out = {k: 0.0 for k in _COLLECTIVE_OPS}
+        for line in comps.get(name, ()):
+            op, shape_str = _line_op_and_shape(line)
+            if op is None:
+                continue
+            base = op[:-len("-start")] if op.endswith("-start") else op
+            if base in _COLLECTIVE_OPS:
+                out[base] += _shape_bytes(shape_str)
+            if base == "while":
+                mb = _CALLSITE.findall(line)
+                body = cond = None
+                for m2 in re.finditer(r"(condition|body)=%?([\w.\-]+)", line):
+                    if m2.group(1) == "body":
+                        body = m2.group(2)
+                    else:
+                        cond = m2.group(2)
+                if body:
+                    trips = _while_trip_count(comps.get(cond, ())) if cond else 1
+                    sub = cost(body)
+                    for k in out:
+                        out[k] += trips * sub[k]
+            elif base in ("call", "fusion", "conditional", "async-start"):
+                for callee in _CALLSITE.findall(line):
+                    sub = cost(callee)
+                    for k in out:
+                        out[k] += sub[k]
+                mbr = _BRANCHES.search(line)
+                if mbr:
+                    subs = [cost(c.strip().lstrip("%"))
+                            for c in mbr.group(1).split(",")]
+                    if subs:
+                        worst = max(subs, key=lambda s: sum(s.values()))
+                        for k in out:
+                            out[k] += worst[k]
+        memo[name] = out
+        return out
+
+    totals = cost(entry)
+    return totals
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Graph-walked collective bytes + op counts (flat, for reporting)."""
+    g = collective_bytes_graph(hlo_text)
+    flat_counts = {f"n_{k}": 0 for k in _COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        op, _ = _line_op_and_shape(line)
+        if op is None:
+            continue
+        base = op[:-len("-start")] if op.endswith("-start") else op
+        if base in _COLLECTIVE_OPS:
+            flat_counts[f"n_{base}"] += 1
+    return {**g, **flat_counts}
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class RooflineTerms:
+    flops: float          # per device
+    hbm_bytes: float      # per device
+    coll_bytes: float     # per device
+    compute_s: float = field(init=False)
+    memory_s: float = field(init=False)
+    collective_s: float = field(init=False)
+
+    def __post_init__(self):
+        self.compute_s = self.flops / PEAK_FLOPS
+        self.memory_s = self.hbm_bytes / HBM_BW
+        self.collective_s = self.coll_bytes / (ICI_BW * ICI_LINKS)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        return self.compute_s + self.memory_s + self.collective_s
+
+    def as_dict(self):
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes, "compute_s": self.compute_s,
+            "memory_s": self.memory_s, "collective_s": self.collective_s,
+            "dominant": self.dominant,
+        }
+
+
+def model_flops_per_step(n_params_active: int, tokens: int, kind: str) -> float:
+    """6ND for train (fwd+bwd), 2ND for inference forward."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_params_active * tokens
+
+
+def terms_from(jaxpr_costs: Dict[str, float], hlo_text: str,
+               n_chips: int) -> RooflineTerms:
+    """Combine global jaxpr costs (÷ chips) with per-device HLO collectives.
+
+    The memory term uses ``bytes_min`` (dot/conv/gather operand+result
+    traffic = the fused-ideal HBM traffic; XLA fuses elementwise chains into
+    dot epilogues on TPU). ``bytes`` (un-fused upper bound) is recorded
+    alongside by the dry-run for the band.
+    """
+    coll = collective_bytes_graph(hlo_text)
+    coll_total = sum(coll.values())
+    return RooflineTerms(flops=jaxpr_costs["flops"] / n_chips,
+                         hbm_bytes=jaxpr_costs["bytes_min"] / n_chips,
+                         coll_bytes=coll_total)

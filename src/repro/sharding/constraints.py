@@ -1,0 +1,60 @@
+"""Ambient-mesh-aware sharding constraints.
+
+Model code calls ``constrain(x, "data_batch", ...)`` style helpers; when no
+mesh is ambient (CPU unit tests, single device) they are no-ops, so the same
+model code runs everywhere.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _ambient_axes():
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return ()
+    if mesh is None or not mesh.axis_names:
+        return ()
+    return tuple(mesh.axis_names)
+
+
+def constrain(x, *dim_axes):
+    """with_sharding_constraint(x, P(*dim_axes)) filtered to ambient axes.
+
+    dim_axes entries: None, an axis name, or a tuple of axis names. Axes not
+    present in the ambient mesh are dropped; dims not divisible by the axis
+    size are left unsharded.
+    """
+    names = _ambient_axes()
+    if not names:
+        return x
+    mesh = jax.sharding.get_abstract_mesh()
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    spec = []
+    for i, d in enumerate(dim_axes):
+        if d is None:
+            spec.append(None)
+            continue
+        cand = d if isinstance(d, tuple) else (d,)
+        cand = tuple(a for a in cand if a in names)
+        if not cand:
+            spec.append(None)
+            continue
+        prod = 1
+        for a in cand:
+            prod *= sizes[a]
+        if x.shape[i] % prod == 0:
+            spec.append(cand if len(cand) > 1 else cand[0])
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def batch_axes():
+    """('pod','data') subset present in the ambient mesh."""
+    names = _ambient_axes()
+    return tuple(a for a in ("pod", "data") if a in names) or None

@@ -1,0 +1,265 @@
+"""Path-based PartitionSpec rules for params, optimizer state, batches and
+serving caches.
+
+Mesh axes: ``('data', 'model')`` single-pod, ``('pod', 'data', 'model')``
+multi-pod. The ``pod`` axis extends data parallelism across pods (batch is
+sharded over ``('pod', 'data')``); ``model`` is the tensor-parallel axis.
+
+Rules are matched on the flattened param path (joined with '/'). All stacked
+layer params carry a leading L axis which is never sharded (layers are
+scanned, not pipelined — pipeline parallelism over 'pod' is a recorded
+hillclimb candidate in EXPERIMENTS §Perf).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def data_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _divides(n: int, d: int) -> bool:
+    return d > 0 and n % d == 0
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules
+# ---------------------------------------------------------------------------
+
+# (regex on path suffix, spec WITHOUT the leading stacked-L axis)
+# 'M' marks the model-sharded dim; None elsewhere.
+_PARAM_RULES = [
+    # embeddings: vocab over model => logits come out vocab-sharded with no
+    # extra collective on the (B,S,V) tensor (see DESIGN §3 / EXPERIMENTS §Perf)
+    (r"embed/table$", ("M", None)),
+    (r"embed/unembed$", (None, "M")),
+    # attention
+    (r"(attn|self_attn|cross_attn)/wq$", (None, "M")),
+    (r"(attn|self_attn|cross_attn)/wk$", (None, "M")),
+    (r"(attn|self_attn|cross_attn)/wv$", (None, "M")),
+    (r"(attn|self_attn|cross_attn)/wo$", ("M", None)),
+    # dense mlp
+    (r"mlp/w_gate$", (None, "M")),
+    (r"mlp/w_up$", (None, "M")),
+    (r"mlp/w_down$", ("M", None)),
+    (r"mlp/w_in$", (None, "M")),
+    (r"mlp/w_out$", ("M", None)),
+    (r"mlp/b_in$", ("M",)),
+    # moe (expert-parallel vs per-expert tensor-parallel decided dynamically)
+    (r"mlp/router$", (None, None)),
+    (r"mlp/(w_gate|w_up)$", (None, None, "M")),   # placeholder; see below
+    # rwkv6
+    (r"att/(wr|wk|wv|wg)$", (None, "M")),
+    (r"att/wo$", ("M", None)),
+    (r"att/(decay_A|decay_B|decay_w0|bonus_u|mix_base)$", None),
+    (r"ffn/w_in$", (None, "M")),
+    (r"ffn/w_out$", ("M", None)),
+    # mamba2
+    (r"mixer/(w_z|w_x)$", (None, "M")),
+    (r"mixer/w_dt$", (None, "M")),
+    (r"mixer/(w_B|w_C)$", (None, None)),
+    (r"mixer/conv_x$", (None, "M")),
+    (r"mixer/conv_bias_x$", ("M",)),
+    (r"mixer/(conv_B|conv_C|conv_bias_B|conv_bias_C)$", None),
+    (r"mixer/(A_log|D|dt_bias)$", ("M",)),
+    (r"mixer/norm/scale$", ("M",)),
+    (r"mixer/out_proj$", ("M", None)),
+]
+
+
+def _spec_for_path(path: str, shape: Tuple[int, ...], cfg: ArchConfig,
+                   mesh: Mesh, stacked: bool) -> P:
+    m_size = _axis_size(mesh, "model")
+
+    # MoE expert weights: expert-parallel when E divides the model axis
+    # evenly, else tensor-parallel on the per-expert ffn dim + FSDP over
+    # 'data' on d_model (mixtral: 47B f32 params do not fit model-sharded
+    # only — 2-D sharding is required, weights are all-gathered per layer).
+    moe_w = re.search(r"mlp/(w_gate|w_up|w_down)$", path) and cfg.is_moe
+    if moe_w:
+        E = cfg.n_experts
+        is_down = path.endswith("w_down")
+        if _divides(E, m_size):
+            spec = ("M", None, None)
+            p = _materialize(spec, shape, cfg, mesh, stacked)
+        else:
+            spec = (None, "F", "M") if not is_down else (None, "M", "F")
+            p = _materialize(spec, shape, cfg, mesh, stacked)
+        return p
+
+    for pat, spec in _PARAM_RULES:
+        if re.search(pat, path):
+            return _materialize(spec, shape, cfg, mesh, stacked)
+    # norms, scalars, biases: replicate
+    return P(*([None] * len(shape)))
+
+
+def _materialize(spec, shape, cfg: ArchConfig, mesh: Mesh, stacked: bool) -> P:
+    if spec is None:
+        return P(*([None] * len(shape)))
+    m_size = _axis_size(mesh, "model")
+    d_size = _axis_size(mesh, "data")
+    out = []
+    base = len(shape) - len(spec)  # leading stacked axes (L) stay unsharded
+    for i in range(base):
+        out.append(None)
+    for j, s in enumerate(spec):
+        dim = shape[base + j]
+        if s == "M" and _divides(dim, m_size):
+            out.append("model")
+        elif s == "F" and _divides(dim, d_size):
+            out.append("data")   # FSDP-style weight shard over the data axis
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def param_specs(params, cfg: ArchConfig, mesh: Mesh):
+    """Pytree of PartitionSpec matching ``params``."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        path_str = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                            for k in path)
+        stacked = False
+        specs.append(_spec_for_path(path_str, leaf.shape, cfg, mesh, stacked))
+    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(params), specs)
+
+
+def param_shardings(params, cfg: ArchConfig, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, cfg, mesh))
+
+
+# ---------------------------------------------------------------------------
+# Optimizer state
+# ---------------------------------------------------------------------------
+
+
+def opt_specs(opt_state, params, cfg: ArchConfig, mesh: Mesh):
+    """AdamWState(step, mu, nu): ZeRO-1 — moments shard like the params PLUS
+    'data' on the first still-unsharded divisible dim (optimizer update is
+    elementwise, so this costs only the reduce-scatter/all-gather pair GSPMD
+    already inserts for the grads)."""
+    ps = param_specs(params, cfg, mesh)
+    d_size = _axis_size(mesh, "data")
+
+    def zero1(spec, leaf):
+        names = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        if "data" in names:
+            return P(*names)
+        for i, (n, dim) in enumerate(zip(names, leaf.shape)):
+            if n is None and _divides(dim, d_size) and dim >= d_size * 64:
+                names[i] = "data"
+                break
+        return P(*names)
+
+    moments = jax.tree.map(zero1, ps, params)
+    return type(opt_state)(step=P(), mu=moments, nu=moments)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def _batch_dim_axes(B: int, mesh: Mesh):
+    """Largest prefix of (pod, data) whose product divides B."""
+    axes = [a for a in data_axes(mesh)]
+    total = 1
+    used = []
+    for a in axes:
+        total *= _axis_size(mesh, a)
+    if _divides(B, total):
+        return tuple(axes)
+    # try only 'data'
+    if _divides(B, _axis_size(mesh, "data")):
+        return ("data",)
+    return None
+
+
+def batch_specs(batch_tree, cfg: ArchConfig, shape: InputShape, mesh: Mesh):
+    """tokens (B, S) / *_embeds (B, T, d) sharded over batch axes."""
+    def spec(leaf):
+        B = leaf.shape[0]
+        ba = _batch_dim_axes(B, mesh)
+        rest = [None] * (len(leaf.shape) - 1)
+        return P(ba, *rest)
+    return jax.tree.map(spec, batch_tree)
+
+
+def cache_specs(cache_tree, cfg: ArchConfig, shape: InputShape, mesh: Mesh):
+    """Serving cache sharding.
+
+    - attention k/v (L, B, S, Hkv, hd): batch over data axes when divisible;
+      'model' on the first of (Hkv, hd, S) it divides.
+    - kv_pos (L, S): replicated.
+    - ssm/wkv/conv states: batch over data; heads/d_inner over model.
+    """
+    m = _axis_size(mesh, "model")
+
+    def spec(path, leaf):
+        path_str = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                            for k in path)
+        shp = leaf.shape
+        if path_str.endswith("kv_pos") or path_str == "pos":
+            return P(*([None] * len(shp)))
+        if re.search(r"attn/(k_scale|v_scale)$", path_str):  # (L,B,S,Hkv)
+            ba = _batch_dim_axes(shp[1], mesh)
+            return P(None, ba, None, "model" if _divides(shp[3], m) else None)
+        if re.search(r"attn/(k|v)$", path_str) or re.search(r"cross_(k|v)$", path_str):
+            L_, B_, S_, H_, D_ = shp
+            ba = _batch_dim_axes(B_, mesh)
+            model_dim = None
+            if _divides(H_, m):
+                model_dim = 3
+            elif _divides(D_, m):
+                model_dim = 4
+            elif _divides(S_, m):
+                model_dim = 2
+            out = [None, ba, None, None, None]
+            if model_dim is not None:
+                out[model_dim] = "model"
+            return P(*out)
+        if path_str.endswith("wkv"):                      # (L,B,H,N,N)
+            L_, B_, H_, _, _ = shp
+            ba = _batch_dim_axes(B_, mesh)
+            return P(None, ba, "model" if _divides(H_, m) else None, None, None)
+        if re.search(r"shift_(att|ffn)$", path_str):      # (L,B,d)
+            ba = _batch_dim_axes(shp[1], mesh)
+            return P(None, ba, "model" if _divides(shp[2], m) else None)
+        if re.search(r"mamba/(conv_x|conv_B|conv_C)$", path_str):  # (L,B,W-1,C)
+            ba = _batch_dim_axes(shp[1], mesh)
+            return P(None, ba, None, "model" if _divides(shp[3], m) else None)
+        if path_str.endswith("mamba/ssm"):                # (L,B,H,P,N)
+            ba = _batch_dim_axes(shp[1], mesh)
+            return P(None, ba, "model" if _divides(shp[2], m) else None, None, None)
+        # decode-state conv/ssm without layer stack (smoke paths) and misc
+        ba = _batch_dim_axes(shp[0], mesh) if len(shp) >= 1 and shp[0] > 1 else None
+        return P(ba, *([None] * (len(shp) - 1))) if len(shp) else P()
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    specs = [spec(p, l) for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def logits_spec(mesh: Mesh, vocab: int):
+    m = _axis_size(mesh, "model")
+    return P(None, None, "model" if _divides(vocab, m) else None)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

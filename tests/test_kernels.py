@@ -1,0 +1,143 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True on CPU) vs the
+ref.py pure-jnp oracles, assert_allclose."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.bmf_precision import ops as BMFK
+from repro.kernels.decode_attention import ops as DECK
+from repro.kernels.wkv6 import ops as WKVK
+from repro.kernels.wkv6.ref import wkv_chunk_ref_batched
+
+# ---------------------------------------------------------------------------
+# bmf_precision
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("N,M,K", [(5, 17, 8), (16, 64, 10), (33, 100, 100),
+                                   (8, 256, 16), (3, 512, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bmf_precision_sweep(N, M, K, dtype):
+    rng = np.random.default_rng(42)
+    D = 50
+    idx = jnp.asarray(rng.integers(0, D, (N, M)), jnp.int32)
+    val = jnp.asarray(rng.normal(size=(N, M)), jnp.float32)
+    mask = jnp.asarray(rng.random((N, M)) < 0.8, jnp.float32)
+    other = jnp.asarray(rng.normal(size=(D, K)), dtype)
+    tau = 2.5
+
+    Lam, eta = BMFK.precision_accum(idx, val, mask, other, tau)
+    Lam_r, eta_r = BMFK.precision_accum_reference(idx, val, mask, other, tau)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(Lam), np.asarray(Lam_r),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(eta), np.asarray(eta_r),
+                               rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,H,Hkv,hd,S", [
+    (2, 8, 2, 64, 512), (1, 4, 4, 128, 1024), (2, 16, 8, 64, 700),
+    (1, 32, 8, 128, 512),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(B, H, Hkv, hd, S, dtype):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(B, H, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, hd)), dtype)
+    q_pos = S - 100
+    kv_pos = jnp.where(jnp.arange(S) <= q_pos, jnp.arange(S), -1)
+
+    out = DECK.decode_attention(q, k, v, kv_pos, q_pos)
+    ref = DECK.decode_attention_reference(q, k, v, kv_pos, q_pos)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=tol, atol=tol)
+
+
+def test_decode_attention_sliding_window():
+    rng = np.random.default_rng(1)
+    B, H, Hkv, hd, S = 1, 4, 2, 64, 512
+    q = jnp.asarray(rng.normal(size=(B, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, hd)), jnp.float32)
+    q_pos = 400
+    kv_pos = jnp.where(jnp.arange(S) <= q_pos, jnp.arange(S), -1)
+    for window in (64, 128):
+        out = DECK.decode_attention(q, k, v, kv_pos, q_pos, window=window)
+        ref = DECK.decode_attention_reference(q, k, v, kv_pos, q_pos,
+                                              window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_decode_attention_ring_cache_positions():
+    """Slots out of temporal order (ring buffer) must still mask correctly."""
+    rng = np.random.default_rng(2)
+    B, H, Hkv, hd, S = 1, 2, 1, 64, 512
+    q = jnp.asarray(rng.normal(size=(B, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, hd)), jnp.float32)
+    # ring layout: slot i holds position (1000 - S + i) for first half,
+    # second half empty
+    pos = np.full(S, -1, np.int32)
+    pos[:256] = 700 + np.arange(256)
+    kv_pos = jnp.asarray(np.roll(pos, 40))
+    q_pos = 955
+    out = DECK.decode_attention(q, k, v, kv_pos, q_pos, window=128)
+    ref = DECK.decode_attention_reference(q, k, v, kv_pos, q_pos, window=128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# wkv6
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,S,H,N", [(1, 128, 2, 64), (2, 256, 1, 64),
+                                     (1, 384, 4, 32)])
+def test_wkv6_sweep(B, S, H, N):
+    rng = np.random.default_rng(3)
+    r = jnp.asarray(rng.normal(size=(B, S, H, N)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, N)), jnp.float32) * 0.5
+    v = jnp.asarray(rng.normal(size=(B, S, H, N)), jnp.float32)
+    logw = -jnp.exp(jnp.asarray(rng.normal(size=(B, S, H, N)), jnp.float32) - 2)
+    u = jnp.asarray(rng.normal(size=(H, N)), jnp.float32) * 0.1
+    s0 = jnp.asarray(rng.normal(size=(B, H, N, N)), jnp.float32) * 0.1
+
+    y, st = WKVK.wkv6(r, k, v, logw, u, s0)
+    y_ref, st_ref = WKVK.wkv6_reference(r, k, v, logw, u, s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# ssd_chunk (mamba2)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,S,H,P,N", [(1, 128, 2, 64, 64), (2, 256, 3, 32, 16),
+                                       (1, 384, 1, 64, 64)])
+def test_ssd_chunk_sweep(B, S, H, P, N):
+    from repro.kernels.ssd_chunk import ops as SSDK
+    rng = np.random.default_rng(5)
+    xdt = jnp.asarray(rng.normal(size=(B, S, H, P)), jnp.float32) * 0.5
+    a = -jnp.exp(jnp.asarray(rng.normal(size=(B, S, H)), jnp.float32) - 1)
+    B_ = jnp.asarray(rng.normal(size=(B, S, N)), jnp.float32) * 0.5
+    C_ = jnp.asarray(rng.normal(size=(B, S, N)), jnp.float32) * 0.5
+    s0 = jnp.asarray(rng.normal(size=(B, H, P, N)), jnp.float32) * 0.1
+    y, st = SSDK.ssd_scan(xdt, a, B_, C_, s0)
+    y_ref, st_ref = SSDK.ssd_scan_reference(xdt, a, B_, C_, s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_ref),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,165 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import posterior as POST
+from repro.core.partition import partition, suggest_grid
+from repro.data.sparse import COO, balance_permutation, coo_to_padded_csr
+
+jax.config.update("jax_platform_name", "cpu")
+
+_settings = settings(max_examples=20, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# Gaussian natural-parameter algebra
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def row_gaussians(draw, n=3, k=3):
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(n, k, k))
+    Lam = A @ A.transpose(0, 2, 1) + (1 + draw(st.floats(0.1, 5.0))) * np.eye(k)
+    eta = rng.normal(size=(n, k), scale=draw(st.floats(0.1, 3.0)))
+    return POST.RowGaussians(jnp.asarray(eta, jnp.float32),
+                             jnp.asarray(Lam, jnp.float32))
+
+
+@_settings
+@given(row_gaussians(), row_gaussians())
+def test_product_commutes(a, b):
+    ab = POST.product(a, b)
+    ba = POST.product(b, a)
+    np.testing.assert_allclose(np.asarray(ab.eta), np.asarray(ba.eta), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(ab.Lambda), np.asarray(ba.Lambda),
+                               rtol=1e-6)
+
+
+@_settings
+@given(row_gaussians(), row_gaussians())
+def test_divide_inverts_product(a, b):
+    back = POST.divide(POST.product(a, b), b)
+    np.testing.assert_allclose(np.asarray(back.eta), np.asarray(a.eta),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(back.Lambda), np.asarray(a.Lambda),
+                               rtol=1e-4, atol=1e-4)
+
+
+@_settings
+@given(row_gaussians())
+def test_mean_consistent_with_natural_params(g):
+    mu = np.asarray(g.mean)
+    eta = np.einsum("nij,nj->ni", np.asarray(g.Lambda), mu)
+    np.testing.assert_allclose(eta, np.asarray(g.eta), rtol=1e-3, atol=1e-3)
+
+
+@_settings
+@given(st.integers(0, 1000), st.integers(2, 6))
+def test_wishart_sample_psd(seed, k):
+    W = POST.sample_wishart(jax.random.key(seed), jnp.eye(k), float(k + 2))
+    evals = np.linalg.eigvalsh(np.asarray(W))
+    assert (evals > -1e-4).all(), evals
+
+
+# ---------------------------------------------------------------------------
+# Partitioning
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def random_coo(draw):
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    n = draw(st.integers(10, 80))
+    d = draw(st.integers(8, 60))
+    nnz = draw(st.integers(5, 200))
+    rows = rng.integers(0, n, nnz)
+    cols = rng.integers(0, d, nnz)
+    key = rows * d + cols
+    _, uniq = np.unique(key, return_index=True)
+    return COO(row=rows[uniq].astype(np.int32), col=cols[uniq].astype(np.int32),
+               val=rng.normal(size=len(uniq)).astype(np.float32),
+               n_rows=n, n_cols=d)
+
+
+@_settings
+@given(random_coo(), st.integers(1, 4), st.integers(1, 4))
+def test_partition_preserves_every_rating(coo, I, J):
+    part = partition(coo, I, J)
+    total = sum(b.coo.nnz for b in part.all_blocks())
+    assert total == coo.nnz
+    # values preserved as a multiset
+    vals = np.sort(np.concatenate([b.coo.val for b in part.all_blocks()]))
+    np.testing.assert_allclose(vals, np.sort(coo.val))
+
+
+@_settings
+@given(random_coo())
+def test_balance_permutation_is_permutation(coo):
+    perm = balance_permutation(coo, "row")
+    assert sorted(perm.tolist()) == list(range(coo.n_rows))
+
+
+@_settings
+@given(random_coo())
+def test_padded_csr_roundtrip(coo):
+    csr = coo_to_padded_csr(coo)
+    total = float(np.asarray(csr.mask).sum())
+    assert total == coo.nnz
+    # sum of values preserved
+    np.testing.assert_allclose(float((np.asarray(csr.val) *
+                                      np.asarray(csr.mask)).sum()),
+                               float(coo.val.sum()), rtol=1e-4, atol=1e-3)
+
+
+@_settings
+@given(st.integers(100, 10**6), st.integers(100, 10**6),
+       st.sampled_from([4, 16, 64]))
+def test_suggest_grid_factors(n, d, blocks):
+    I, J = suggest_grid(n, d, blocks)
+    assert I * J == blocks
+    assert I >= 1 and J >= 1
+
+
+# ---------------------------------------------------------------------------
+# MoE router
+# ---------------------------------------------------------------------------
+
+
+@_settings
+@given(st.integers(0, 100))
+def test_moe_router_weights_sum_to_one(seed):
+    from repro.models.moe import _top_k_mask
+    rng = np.random.default_rng(seed)
+    probs = jax.nn.softmax(jnp.asarray(rng.normal(size=(4, 8, 16)),
+                                       jnp.float32), -1)
+    mask, w = _top_k_mask(probs, 4)
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, rtol=1e-5)
+    assert int(mask.sum(-1).max()) == 4
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+@_settings
+@given(st.integers(0, 100), st.sampled_from([0.5, 1.0]))
+def test_rope_preserves_norm(seed, partial):
+    from repro.models.layers import apply_rope, rope_frequencies
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(1, 6, 2, 64)), jnp.float32)
+    inv, rot = rope_frequencies(64, partial, 10_000.0)
+    pos = jnp.arange(6)[None, :]
+    y = apply_rope(x, pos, inv, rot)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-4)
+    # position 0 is identity
+    np.testing.assert_allclose(np.asarray(y[:, 0]), np.asarray(x[:, 0]),
+                               rtol=1e-5, atol=1e-6)
