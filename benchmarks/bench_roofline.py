@@ -1,12 +1,21 @@
-"""Assignment roofline table: reads the dry-run artifact JSON and emits one
-row per (arch × shape × mesh) with the three roofline terms + dominant."""
+"""Roofline tables.
+
+Default mode reads the LLM dry-run artifact JSON and emits one row per
+(arch × shape × mesh) with the three roofline terms + dominant.
+
+``--bmf`` mode rooflines the BMF Gibbs hot path instead: it traces
+``core.bmf.sufficient_stats`` for the fused zero-materialization path and
+the XLA-gather baseline (``--use-kernel both``, the default, does both in
+one run), reporting jaxpr FLOPs, HBM byte estimate, the LARGEST live
+buffer (the (N, M, K) gathered tensor shows up only in the baseline), and
+the measured wall-clock per call on this host."""
 from __future__ import annotations
 
 import argparse
 import json
 from pathlib import Path
 
-from benchmarks.common import emit
+from benchmarks.common import emit, timed
 
 DEFAULT = Path(__file__).resolve().parent / "dryrun_results.json"
 
@@ -29,11 +38,59 @@ def run(path=DEFAULT, mesh: str = "single"):
     return rows
 
 
+def run_bmf(datasets, use_kernel: str = "both"):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import bmf as BMF
+    from repro.data import synthetic as SYN
+    from repro.data.sparse import PaddedCSR, coo_to_padded_csr, \
+        train_test_split
+    from repro.roofline.jaxpr_cost import jaxpr_cost, peak_buffer_bytes
+
+    from benchmarks.bench_throughput import KERNEL_PATHS, path_name
+    rows = []
+    for d in datasets:
+        coo, p = SYN.generate(d, seed=51)
+        train, _ = train_test_split(coo, 0.1, seed=52)
+        csr = coo_to_padded_csr(train)
+        K = min(p.K, 16)
+        other = jnp.zeros((train.n_cols, K), jnp.float32)
+        for uk in KERNEL_PATHS[use_kernel]:
+            def stats(idx, val, mask, o, _uk=uk):
+                return BMF.sufficient_stats(
+                    PaddedCSR(idx, val, mask, train.n_cols), o, 2.0, _uk)
+
+            jaxpr = jax.make_jaxpr(stats)(csr.idx, csr.val, csr.mask, other)
+            cost = jaxpr_cost(jaxpr)
+            peak = peak_buffer_bytes(jaxpr)
+            fn = jax.jit(stats)
+            jax.block_until_ready(
+                fn(csr.idx, csr.val, csr.mask, other))   # compile + sync
+            _, secs = timed(fn, csr.idx, csr.val, csr.mask, other, repeats=3)
+            name = path_name(uk)
+            emit(f"bmf_roofline/{d}/{name}", secs,
+                 f"flops={cost['flops']:.3e};bytes={cost['bytes']:.3e};"
+                 f"peak_buffer_mb={peak / 2**20:.1f};K={K}")
+            rows.append({"dataset": d, "path": name, "sec_per_call": secs,
+                         "flops": cost["flops"], "bytes": cost["bytes"],
+                         "peak_buffer_bytes": peak})
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--path", default=str(DEFAULT))
     ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--bmf", action="store_true",
+                    help="roofline the BMF sufficient-stats hot path")
+    ap.add_argument("--datasets", nargs="+", default=["movielens"])
+    ap.add_argument("--use-kernel", choices=["on", "off", "both"],
+                    default="both")
     args = ap.parse_args()
+    if args.bmf:
+        run_bmf(args.datasets, args.use_kernel)
+        return
     if not Path(args.path).exists():
         print("# no dryrun_results.json - run python -m repro.launch.dryrun --all first")
         return

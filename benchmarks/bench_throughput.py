@@ -1,8 +1,15 @@
 """Paper Table 1 (bottom rows): rows/sec and ratings/sec of the Gibbs
-sampler per dataset — measured on this host, derived = both metrics."""
+sampler per dataset — measured on this host, derived = both metrics.
+
+``--use-kernel both`` (default) runs the XLA-gather baseline AND the
+zero-materialization fused path (Pallas on TPU, N-striped symmetric
+matmul elsewhere) back to back so the two hot paths are directly comparable in
+one run; ``--json-out`` additionally writes the records as JSON (the CI
+smoke check uploads them as the BENCH_throughput.json artifact)."""
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -15,34 +22,70 @@ from repro.data.sparse import coo_to_padded_csr, train_test_split
 
 from benchmarks.common import emit
 
+# --use-kernel flag value -> list of use_kernel settings to run (shared
+# with bench_roofline so the two benchmarks can't drift)
+KERNEL_PATHS = {"on": [True], "off": [False], "both": [False, True]}
 
-def run(dataset: str, n_probe: int = 8):
+
+def path_name(use_kernel: bool) -> str:
+    """Label records by the implementation actually measured: off TPU,
+    use_kernel=True dispatches to the N-striped XLA fallback, not the
+    Pallas kernel."""
+    if not use_kernel:
+        return "xla_gather"
+    return "fused_pallas" if jax.default_backend() == "tpu" else "striped_xla"
+
+
+def run(dataset: str, n_probe: int = 8, use_kernel: bool = False):
     coo, p = SYN.generate(dataset, seed=51)
     train, _ = train_test_split(coo, 0.1, seed=52)
     csr_r = coo_to_padded_csr(train)
     csr_c = coo_to_padded_csr(train.transpose())
     K = min(p.K, 16)
-    cfg = BMF.BMFConfig(K=K, n_samples=n_probe, burnin=0)
+    cfg = BMF.BMFConfig(K=K, n_samples=n_probe, burnin=0,
+                        use_kernel=use_kernel)
     dummy = np.zeros(1, np.int32)
-    # warmup + compile
-    GIBBS.run_gibbs(jax.random.key(0), csr_r, csr_c, dummy, dummy,
-                    BMF.BMFConfig(K=K, n_samples=1, burnin=0))
+    # warmup + compile (synced so no warmup tail leaks into the timed region)
+    jax.block_until_ready(
+        GIBBS.run_gibbs(jax.random.key(0), csr_r, csr_c, dummy, dummy,
+                        BMF.BMFConfig(K=K, n_samples=1, burnin=0,
+                                      use_kernel=use_kernel)))
     t0 = time.time()
-    GIBBS.run_gibbs(jax.random.key(0), csr_r, csr_c, dummy, dummy, cfg)
+    jax.block_until_ready(
+        GIBBS.run_gibbs(jax.random.key(0), csr_r, csr_c, dummy, dummy, cfg).U)
     dt = (time.time() - t0) / n_probe
     rows_per_s = (train.n_rows + train.n_cols) / dt
     ratings_per_s = 2 * train.nnz / dt   # each rating visited in both factors
-    emit(f"table1_throughput/{dataset}", dt,
+    path = path_name(use_kernel)
+    emit(f"table1_throughput/{dataset}/{path}", dt,
          f"rows_per_s={rows_per_s:.0f};ratings_per_s={ratings_per_s:.0f};K={K}")
-    return rows_per_s, ratings_per_s
+    return {"dataset": dataset, "path": path, "use_kernel": use_kernel,
+            "sec_per_sweep": dt, "rows_per_s": rows_per_s,
+            "ratings_per_s": ratings_per_s, "K": K, "nnz": train.nnz,
+            "n_rows": train.n_rows, "n_cols": train.n_cols,
+            "max_nnz_row": csr_r.max_nnz, "backend": jax.default_backend()}
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--datasets", nargs="+", default=["movielens", "amazon"])
+    ap.add_argument("--use-kernel", choices=["on", "off", "both"],
+                    default="both",
+                    help="fused zero-materialization path, XLA-gather "
+                         "baseline, or both for a side-by-side")
+    ap.add_argument("--n-probe", type=int, default=8)
+    ap.add_argument("--json-out", default=None,
+                    help="also write records to this JSON file")
     args = ap.parse_args()
+    recs = []
     for d in args.datasets:
-        run(d)
+        for uk in KERNEL_PATHS[args.use_kernel]:
+            recs.append(run(d, n_probe=args.n_probe, use_kernel=uk))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump({"benchmark": "table1_throughput",
+                       "backend": jax.default_backend(),
+                       "records": recs}, f, indent=2)
 
 
 if __name__ == "__main__":

@@ -43,7 +43,10 @@ def sufficient_stats(csr: PaddedCSR, other: jnp.ndarray, tau: float,
 
     csr: rows of R (N, M) padded; other: the *other* factor matrix (D, K).
     Returns (N, K, K), (N, K). This gather + masked rank-1 accumulation is
-    O(nnz · K²) — the kernel in repro/kernels/bmf_precision tiles it in VMEM.
+    O(nnz · K²).  use_kernel=True routes through the zero-materialization
+    hot path (repro/kernels/bmf_precision): the fused-gather Pallas kernel
+    on TPU, an N-striped symmetric matmul elsewhere — neither builds the
+    (N, M, K) gathered tensor the jnp path below materializes.
     """
     if use_kernel:
         from repro.kernels.bmf_precision import ops as KOPS

@@ -49,18 +49,19 @@ def pad_csr_for_mesh(csr: PaddedCSR, n_shards: int) -> PaddedCSR:
                      n_cols=csr.n_cols)
 
 
-def item_stats_local(U_loc, csr_t_loc: PaddedCSR, tau: float):
+def item_stats_local(U_loc, csr_t_loc: PaddedCSR, tau: float,
+                     use_kernel: bool = False):
     """Per-item partial stats from this device's ratings.
 
     U_loc: (N_loc, K); csr_t_loc: this shard's TRANSPOSED padded CSR —
     rows = items, columns = *local* user slots (built host-side by
     run_gibbs_distributed). Returns (D, K, K), (D, K) partial sums
     (pre-reduction). Reuses bmf.sufficient_stats, i.e. the same
-    gather + masked rank-1 einsum (and Pallas kernel) as the U-step —
+    fused-gather hot path (Pallas kernel / chunked scan) as the U-step —
     a segment_sum formulation would materialize an (nnz, K, K) outer
     product tensor (§Perf H6a).
     """
-    return BMF.sufficient_stats(csr_t_loc, U_loc, tau)
+    return BMF.sufficient_stats(csr_t_loc, U_loc, tau, use_kernel)
 
 
 def make_distributed_sweep(mesh: Mesh, cfg: BMF.BMFConfig, N: int, D: int,
@@ -109,7 +110,8 @@ def make_distributed_sweep(mesh: Mesh, cfg: BMF.BMFConfig, N: int, D: int,
                               cfg.use_kernel)
 
         # --- V-step ---------------------------------------------------------
-        Lam_part, eta_part = item_stats_local(U, csrt_loc, cfg.tau)
+        Lam_part, eta_part = item_stats_local(U, csrt_loc, cfg.tau,
+                                              cfg.use_kernel)
         if has_v_prior:
             v_prior = RowGaussians(eta=v_prior_eta, Lambda=v_prior_lam)
         else:

@@ -42,9 +42,9 @@ class GibbsResult(NamedTuple):
 def _summarize(sum_, outer, cnt, ridge=1e-4):
     mean = sum_ / cnt
     cov = outer / cnt - jnp.einsum("nk,nl->nkl", mean, mean)
-    K = mean.shape[-1]
-    cov = cov + ridge * jnp.eye(K)
-    return POST.from_moments(mean, jnp.linalg.inv(cov))
+    # Cholesky factor/solve: O(K³/3) per row + triangular solves, no
+    # explicit inverse (the ridge keeps the moment estimate PD)
+    return POST.from_moments_cov(mean, cov, ridge=ridge)
 
 
 from functools import partial

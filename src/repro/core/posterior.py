@@ -28,12 +28,33 @@ class RowGaussians(NamedTuple):
 
     @property
     def cov(self):
-        return jnp.linalg.inv(self.Lambda)
+        return _chol_inverse(jnp.linalg.cholesky(self.Lambda))
+
+
+def _chol_inverse(L):
+    """inv(L Lᵀ) via two batched triangular solves — O(K³/3) factor reuse,
+    no LU / explicit ``jnp.linalg.inv``."""
+    K = L.shape[-1]
+    eye = jnp.broadcast_to(jnp.eye(K, dtype=L.dtype), L.shape)
+    return jax.scipy.linalg.cho_solve((L, True), eye)
 
 
 def from_moments(mu, Lambda) -> RowGaussians:
     eta = jnp.einsum("...ij,...j->...i", Lambda, mu)
     return RowGaussians(eta=eta, Lambda=Lambda)
+
+
+def from_moments_cov(mu, cov, ridge: float = 0.0) -> RowGaussians:
+    """Natural params from (mean, COVARIANCE) moments via one Cholesky
+    factor + triangular solves: η = Σ⁻¹μ and Λ = Σ⁻¹ share the factor.
+    This replaces the ``jnp.linalg.inv(cov)`` + matmul path in the Gibbs
+    summarization hot loop."""
+    K = mu.shape[-1]
+    if ridge:
+        cov = cov + ridge * jnp.eye(K, dtype=cov.dtype)
+    L = jnp.linalg.cholesky(cov)
+    eta = jax.scipy.linalg.cho_solve((L, True), mu[..., None])[..., 0]
+    return RowGaussians(eta=eta, Lambda=_chol_inverse(L))
 
 
 def broadcast_prior(mu, Lambda, n_rows: int) -> RowGaussians:
@@ -66,9 +87,7 @@ def from_samples(samples, ridge: float = 1e-4) -> RowGaussians:
     mean = samples.mean(0)                                # (N, K)
     centered = samples - mean
     cov = jnp.einsum("tnk,tnl->nkl", centered, centered) / max(T - 1, 1)
-    cov = cov + ridge * jnp.eye(K)
-    Lam = jnp.linalg.inv(cov)
-    return from_moments(mean, Lam)
+    return from_moments_cov(mean, cov, ridge=ridge)
 
 
 def sample_rows(key, g: RowGaussians, jitter: float = 1e-6):
@@ -131,9 +150,9 @@ def nw_posterior(prior: NormalWishart, X: jnp.ndarray) -> NormalWishart:
     nu_n = prior.nu0 + N
     mu_n = (prior.beta0 * prior.mu0 + N * xbar) / beta_n
     d = (xbar - prior.mu0)[:, None]
-    W0_inv = jnp.linalg.inv(prior.W0)
+    W0_inv = _chol_inverse(jnp.linalg.cholesky(prior.W0))
     Wn_inv = W0_inv + S + (prior.beta0 * N / beta_n) * (d @ d.T)
-    Wn = jnp.linalg.inv(Wn_inv)
+    Wn = _chol_inverse(jnp.linalg.cholesky(Wn_inv))
     return NormalWishart(mu0=mu_n, beta0=beta_n, W0=Wn, nu0=nu_n)
 
 
@@ -142,7 +161,9 @@ def sample_nw(key, nw: NormalWishart):
     kw, km = jax.random.split(key)
     Lam = sample_wishart(kw, nw.W0, nw.nu0)
     K = Lam.shape[-1]
-    cov_chol = jnp.linalg.cholesky(
-        jnp.linalg.inv(nw.beta0 * Lam + 1e-6 * jnp.eye(K)))
-    mu = nw.mu0 + cov_chol @ jax.random.normal(km, (K,), dtype=Lam.dtype)
+    # mu ~ N(mu0, (β Λ)⁻¹): with βΛ = L Lᵀ, x = L⁻ᵀ z has the right
+    # covariance — one triangular solve, no inverse-then-Cholesky
+    L = jnp.linalg.cholesky(nw.beta0 * Lam + 1e-6 * jnp.eye(K))
+    z = jax.random.normal(km, (K,), dtype=Lam.dtype)
+    mu = nw.mu0 + jax.scipy.linalg.solve_triangular(L.T, z, lower=False)
     return mu, Lam

@@ -84,16 +84,48 @@ def coo_to_padded_csr(coo: COO, max_nnz: Optional[int] = None,
     idx = np.zeros((NR, M), np.int32)
     val = np.zeros((NR, M), np.float32)
     mask = np.zeros((NR, M), np.float32)
+    # vectorized scatter fill: entry e (row-sorted) lands in slot
+    # e - starts[row[e]]; slots >= M are truncated (rows beyond max_nnz)
     starts = np.concatenate([[0], np.cumsum(counts)])
-    for n in range(coo.n_rows):
-        lo, hi = starts[n], starts[n + 1]
-        k = min(hi - lo, M)  # truncate rows beyond max_nnz (rare, logged by caller)
-        idx[n, :k] = cols[lo:lo + k]
-        val[n, :k] = vals[lo:lo + k]
-        mask[n, :k] = 1.0
+    slot = np.arange(len(rows), dtype=np.int64) - starts[rows]
+    keep = slot < M
+    r_k, s_k = rows[keep], slot[keep]
+    idx[r_k, s_k] = cols[keep]
+    val[r_k, s_k] = vals[keep]
+    mask[r_k, s_k] = 1.0
     n_cols = n_cols_pad if n_cols_pad is not None else coo.n_cols
     return PaddedCSR(idx=jnp.asarray(idx), val=jnp.asarray(val),
                      mask=jnp.asarray(mask), n_cols=n_cols)
+
+
+def tile_occupancy(mask, tn: int, tm: int):
+    """Per-row-tile count of live M-tiles for the fused-gather kernel's
+    nnz-aware grid: ``ntiles[t]`` = number of tm-wide slot tiles that
+    contain any unmasked entry among rows [t·tn, (t+1)·tn).  CSR padding
+    fills slots from the left, so a tile's occupancy is determined by its
+    last live slot; the kernel skips M-tiles >= ntiles (no DMA, no matmul).
+
+    mask: (N, M) with N % tn == 0 and M % tm == 0 (np or jnp; traceable)."""
+    N, M = mask.shape
+    assert N % tn == 0 and M % tm == 0, (N, M, tn, tm)
+    arange = jnp.arange(M, dtype=jnp.float32) + 1.0
+    last_live = jnp.max(mask.astype(jnp.float32) * arange, axis=1)   # (N,)
+    last_live = last_live.reshape(N // tn, tn).max(axis=1)
+    return jnp.ceil(last_live / tm).astype(jnp.int32)
+
+
+def occupancy_permutation(coo: COO, axis: str = "row") -> np.ndarray:
+    """Permutation sorting rows (or cols) by DESCENDING rating count, so the
+    fused kernel's tn-row tiles are occupancy-coherent and its M-tile skip
+    is effective (the complement of ``balance_permutation``, which spreads
+    heavy rows — use this WITHIN a block after blocks are balanced)."""
+    ids = coo.row if axis == "row" else coo.col
+    n = coo.n_rows if axis == "row" else coo.n_cols
+    counts = np.bincount(ids, minlength=n)
+    order = np.argsort(-counts, kind="stable")
+    perm = np.empty(n, np.int64)
+    perm[order] = np.arange(n)
+    return perm
 
 
 def train_test_split(coo: COO, test_frac: float = 0.1,

@@ -178,6 +178,24 @@ def _remat_policy(name):
     raise ValueError(name)
 
 
+@jax.custom_vjp
+def _carry_barrier(x):
+    return jax.lax.optimization_barrier(x)
+
+
+def _carry_barrier_fwd(x):
+    return jax.lax.optimization_barrier(x), None
+
+
+def _carry_barrier_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+# optimization_barrier has no differentiation rule (jax<=0.4.x); wrap it so
+# the primal/cotangent each get a barrier and autodiff passes straight through
+_carry_barrier.defvjp(_carry_barrier_fwd, _carry_barrier_bwd)
+
+
 def _stack_scan(blocks, body, x, remat: bool, policy: str = "full"):
     """Scan ``body(x, block_params) -> (x, aux)`` over stacked blocks.
 
@@ -193,7 +211,7 @@ def _stack_scan(blocks, body, x, remat: bool, policy: str = "full"):
         # barrier: stops XLA hoisting the body's first f32 upcast (rmsnorm)
         # out of the while loop — the LICM otherwise converts the whole
         # remat-saved bf16 (L,B,S,d) stack to f32, doubling its footprint
-        carry = jax.lax.optimization_barrier(carry)
+        carry = _carry_barrier(carry)
         y, aux = fn(carry, block)
         return y, aux
 

@@ -157,3 +157,34 @@ def traced_cost(jitted, *args) -> Dict[str, float]:
     """Cost of a jitted function at given (abstract) args."""
     tr = jitted.trace(*args)
     return jaxpr_cost(tr.jaxpr)
+
+
+def iter_avals(jaxpr):
+    """Yield every aval appearing anywhere in a (closed) jaxpr — eqn
+    in/outvars plus all sub-jaxprs hiding in eqn params (scan bodies,
+    pallas kernel jaxprs, cond branches, ...)."""
+    from jax.core import ClosedJaxpr, Jaxpr
+
+    if hasattr(jaxpr, "jaxpr"):
+        jaxpr = jaxpr.jaxpr
+    for v in list(jaxpr.invars) + list(jaxpr.outvars) + list(jaxpr.constvars):
+        aval = getattr(v, "aval", None)
+        if hasattr(aval, "shape"):
+            yield aval
+    for eqn in jaxpr.eqns:
+        for v in list(eqn.invars) + list(eqn.outvars):
+            aval = getattr(v, "aval", None)
+            if hasattr(aval, "shape"):
+                yield aval
+        for p in eqn.params.values():
+            for q in (p if isinstance(p, (list, tuple)) else [p]):
+                if isinstance(q, (ClosedJaxpr, Jaxpr)):
+                    yield from iter_avals(q)
+
+
+def peak_buffer_bytes(jaxpr) -> int:
+    """Largest single buffer (aval) anywhere in the jaxpr, sub-jaxprs
+    included — a cheap proxy for the materialization high-water mark (e.g.
+    the (N, M, K) gathered-factor tensor of a naive BMF sufficient-stats
+    formulation shows up here; the fused/chunked paths don't have it)."""
+    return max((_nbytes(a) for a in iter_avals(jaxpr)), default=0)

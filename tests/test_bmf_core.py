@@ -121,6 +121,84 @@ def test_pp_rmse_close_to_full_bmf(mini_data):
     assert res.rmse < rmse_full * 1.15, (res.rmse, rmse_full)
 
 
+def test_coo_to_padded_csr_vectorized_fill():
+    """The numpy-scatter row fill must match a slot-by-slot loop, including
+    truncation of rows beyond max_nnz and rows with zero ratings."""
+    rng = np.random.default_rng(6)
+    n_rows, n_cols, nnz = 23, 11, 150
+    rows = rng.integers(0, n_rows - 2, nnz).astype(np.int32)  # last 2 empty
+    coo = COO(row=rows, col=rng.integers(0, n_cols, nnz).astype(np.int32),
+              val=rng.normal(size=nnz).astype(np.float32),
+              n_rows=n_rows, n_cols=n_cols)
+    for max_nnz in (None, 8):
+        csr = coo_to_padded_csr(coo, max_nnz=max_nnz)
+        M = csr.idx.shape[1]
+        order = np.argsort(coo.row, kind="stable")
+        r_s, c_s, v_s = coo.row[order], coo.col[order], coo.val[order]
+        idx_ref = np.zeros((n_rows, M), np.int32)
+        val_ref = np.zeros((n_rows, M), np.float32)
+        mask_ref = np.zeros((n_rows, M), np.float32)
+        fill = np.zeros(n_rows, np.int64)
+        for r, c, v in zip(r_s, c_s, v_s):
+            k = fill[r]
+            if k < M:
+                idx_ref[r, k], val_ref[r, k], mask_ref[r, k] = c, v, 1.0
+            fill[r] += 1
+        np.testing.assert_array_equal(np.asarray(csr.idx), idx_ref)
+        np.testing.assert_array_equal(np.asarray(csr.val), val_ref)
+        np.testing.assert_array_equal(np.asarray(csr.mask), mask_ref)
+
+
+def test_occupancy_permutation_groups_heavy_rows():
+    from repro.data.sparse import occupancy_permutation
+    rng = np.random.default_rng(8)
+    counts = np.array([5, 0, 9, 1, 9, 2])
+    rows = np.repeat(np.arange(6), counts).astype(np.int32)
+    coo = COO(row=rows, col=np.zeros(len(rows), np.int32),
+              val=np.ones(len(rows), np.float32), n_rows=6, n_cols=1)
+    perm = occupancy_permutation(coo, axis="row")
+    # position of each row = its rank by descending count
+    permuted_counts = np.empty(6, np.int64)
+    permuted_counts[perm] = counts
+    assert (np.diff(permuted_counts) <= 0).all(), permuted_counts
+
+
+def test_from_moments_cov_matches_inverse():
+    """Cholesky factor/solve summarization == explicit-inverse natural
+    params (the path it replaced)."""
+    rng = np.random.default_rng(9)
+    N, K = 6, 5
+    A = rng.normal(size=(N, K, K)).astype(np.float32)
+    cov = A @ A.transpose(0, 2, 1) + 2 * np.eye(K, dtype=np.float32)
+    mu = rng.normal(size=(N, K)).astype(np.float32)
+    g = POST.from_moments_cov(jnp.asarray(mu), jnp.asarray(cov))
+    Lam_ref = np.linalg.inv(cov)
+    eta_ref = np.einsum("nkl,nl->nk", Lam_ref, mu)
+    np.testing.assert_allclose(np.asarray(g.Lambda), Lam_ref, rtol=2e-3,
+                               atol=2e-3)
+    np.testing.assert_allclose(np.asarray(g.eta), eta_ref, rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_block_shapes_per_phase_tighter(mini_data):
+    """Per-phase occupancy buckets must never exceed the global bucket and
+    must cover every block of their phase."""
+    train, test, p = mini_data
+    part = partition(train, 2, 2)
+    global_s = PP.BlockShapes.of(part, test)
+    by_phase = PP.BlockShapes.per_phase(part, test)
+    assert set(by_phase) == {b.phase for b in part.all_blocks()}
+    for ph, s in by_phase.items():
+        assert s.m_rows <= global_s.m_rows
+        assert s.n_rows <= global_s.n_rows
+        for b in part.all_blocks():
+            if b.phase != ph or not b.coo.nnz:
+                continue
+            assert len(b.row_ids) <= s.n_rows
+            m = int(np.bincount(b.coo.row, minlength=len(b.row_ids)).max())
+            assert m <= s.m_rows
+
+
 def test_suggest_grid_squareish():
     I, J = suggest_grid(480_000, 17_000, 64)
     # netflix-like 27:1 aspect -> more row blocks than col blocks
