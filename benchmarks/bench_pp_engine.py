@@ -1,0 +1,109 @@
+"""Phase-graph engine benchmark: serial vs stacked (vs sharded) execution
+of the SAME Posterior Propagation run.
+
+The serial executor is the paper-reference loop — one jitted Gibbs call and
+one host sync per block. The stacked executor runs each phase shape bucket
+as ONE vmapped call; with >1 local device, the sharded executor spreads the
+bucket batch over a 'block' mesh. Chains are identical across executors
+(same keys, same padding), so RMSE parity is asserted here and the numbers
+isolate pure orchestration cost.
+
+Each executor gets one warmup run (compile) and ``--repeats`` timed runs;
+reported phase times are the per-phase minima over repeats.
+
+  PYTHONPATH=src:. python benchmarks/bench_pp_engine.py \
+      --dataset movielens --blocks 8 --samples 20 \
+      --json-out BENCH_pp_engine.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from repro.core import bmf as BMF
+from repro.core import pp as PP
+from repro.core.partition import partition, suggest_grid
+from repro.data import synthetic as SYN
+from repro.data.sparse import train_test_split
+
+from benchmarks.common import emit
+
+
+def run_one(executor: str, key, part, cfg, test, repeats: int):
+    runs = []
+    for _ in range(1 + repeats):           # first run compiles; dropped
+        runs.append(PP.run_pp(key, part, cfg, test, executor=executor))
+    timed = runs[1:]
+    phases = {ph: min(r.phase_times_s[ph] for r in timed)
+              for ph in timed[0].phase_times_s}
+    return {
+        "executor": executor,
+        "rmse": timed[0].rmse,
+        "wall_s": min(r.wall_time_s for r in timed),
+        "phase_s": phases,
+        "phase_bc_s": phases.get("b", 0.0) + phases.get("c", 0.0),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="movielens",
+                    choices=list(SYN.PRESETS))
+    ap.add_argument("--blocks", type=int, default=8)
+    ap.add_argument("--samples", type=int, default=20)
+    ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--executors", nargs="+",
+                    default=["serial", "stacked"],
+                    choices=["serial", "stacked", "sharded"])
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+
+    coo, p = SYN.generate(args.dataset, seed=51)
+    train, test = train_test_split(coo, 0.1, seed=52)
+    K = min(p.K, 16)
+    cfg = BMF.BMFConfig(K=K, n_samples=args.samples,
+                        burnin=args.samples // 3)
+    I, J = suggest_grid(train.n_rows, train.n_cols, args.blocks)
+    part = partition(train, I, J)
+    print(f"dataset={args.dataset} grid={I}x{J} K={K} "
+          f"samples={args.samples} devices={len(jax.devices())}")
+
+    key = jax.random.key(7)
+    recs = []
+    for ex in args.executors:
+        rec = run_one(ex, key, part, cfg, test, args.repeats)
+        recs.append(rec)
+        emit(f"pp_engine/{args.dataset}/{ex}", rec["wall_s"],
+             f"rmse={rec['rmse']:.4f};phase_bc_s={rec['phase_bc_s']:.3f}")
+        print(f"  {ex:8s} wall={rec['wall_s']:.2f}s "
+              f"phases={ {k: round(v, 3) for k, v in rec['phase_s'].items()} } "
+              f"rmse={rec['rmse']:.4f}")
+
+    # executors must be RMSE-identical under a fixed key
+    for rec in recs[1:]:
+        np.testing.assert_allclose(rec["rmse"], recs[0]["rmse"], atol=1e-4)
+    base = next((r for r in recs if r["executor"] == "serial"), None)
+    for rec in recs:
+        if base is None or rec is base:
+            continue
+        rec["speedup_vs_serial"] = base["wall_s"] / rec["wall_s"]
+        rec["phase_bc_speedup_vs_serial"] = (base["phase_bc_s"]
+                                             / rec["phase_bc_s"])
+        print(f"  {rec['executor']} vs serial: wall x{rec['speedup_vs_serial']:.2f}, "
+              f"phases b+c x{rec['phase_bc_speedup_vs_serial']:.2f}")
+
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump({"benchmark": "pp_engine",
+                       "backend": jax.default_backend(),
+                       "n_devices": len(jax.devices()),
+                       "dataset": args.dataset, "grid": [I, J], "K": K,
+                       "samples": args.samples, "records": recs}, f, indent=2)
+        print("->", args.json_out)
+
+
+if __name__ == "__main__":
+    main()

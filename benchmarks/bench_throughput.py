@@ -5,12 +5,28 @@ sampler per dataset — measured on this host, derived = both metrics.
 zero-materialization fused path (Pallas on TPU, N-striped symmetric
 matmul elsewhere) back to back so the two hot paths are directly comparable in
 one run; ``--json-out`` additionally writes the records as JSON (the CI
-smoke check uploads them as the BENCH_throughput.json artifact)."""
+smoke check uploads them as the BENCH_throughput.json artifact).
+
+``--distributed`` additionally measures the shard_map'd within-block sweep
+(core.distributed.run_gibbs_distributed) in its paper-faithful psum and
+beyond-paper scatter-V variants, crossed with the kernel paths — the
+scatter-V × fused-kernel interaction the ROADMAP flagged unbenchmarked.
+Fakes a 4-device CPU mesh via XLA_FLAGS when no multi-device platform is
+present (must happen before the first jax backend touch)."""
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import sys
 import time
+
+# --distributed wants >1 device; the flag only takes effect before the
+# backend initializes, hence the pre-import peek at argv
+if "--distributed" in sys.argv and "xla_force_host_platform_device_count" \
+        not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=4")
 
 import jax
 import numpy as np
@@ -66,6 +82,54 @@ def run(dataset: str, n_probe: int = 8, use_kernel: bool = False):
             "max_nnz_row": csr_r.max_nnz, "backend": jax.default_backend()}
 
 
+def run_distributed(dataset: str, n_probe: int, use_kernel: bool,
+                    scatter_v: bool):
+    """Within-block shard_map sweep throughput: scatter-V × kernel paths."""
+    from repro.core import distributed as DIST
+    coo, p = SYN.generate(dataset, seed=51)
+    train, _ = train_test_split(coo, 0.1, seed=52)
+    csr_r = coo_to_padded_csr(train)
+    csr_c = coo_to_padded_csr(train.transpose())
+    K = min(p.K, 16)
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    dummy = np.zeros(1, np.int32)
+
+    def chain_secs(n):
+        cfg = BMF.BMFConfig(K=K, n_samples=n, burnin=0,
+                            use_kernel=use_kernel)
+        t0 = time.time()
+        jax.block_until_ready(DIST.run_gibbs_distributed(
+            jax.random.key(0), csr_r, csr_c, dummy, dummy, cfg, mesh,
+            scatter_v=scatter_v).U)
+        return time.time() - t0
+
+    # run_gibbs_distributed re-jits its shard_map sweep and redoes the
+    # host-side shard-CSR prep on EVERY call (no cross-call cache), so a
+    # warmup call can't amortize compile. Instead both a 1-sweep and an
+    # (n_probe+1)-sweep call pay the identical trace+compile+prep cost and
+    # the difference isolates n_probe steady-state sweeps.
+    chain_secs(1)                                  # backend/alloc warmup
+    t_one = chain_secs(1)
+    t_many = chain_secs(n_probe + 1)
+    dt = max(t_many - t_one, 1e-9) / n_probe
+    variant = "dist_scatter_v" if scatter_v else "dist_psum"
+    path = f"{variant}/{path_name(use_kernel)}"
+    ratings_per_s = 2 * train.nnz / dt
+    emit(f"table1_throughput/{dataset}/{path}", dt,
+         f"ratings_per_s={ratings_per_s:.0f};K={K};devices={n_dev}")
+    return {"dataset": dataset, "path": path, "use_kernel": use_kernel,
+            "scatter_v": scatter_v, "n_devices": n_dev,
+            "sec_per_sweep": dt, "ratings_per_s": ratings_per_s,
+            "rows_per_s": (train.n_rows + train.n_cols) / dt, "K": K,
+            "nnz": train.nnz, "n_rows": train.n_rows,
+            "n_cols": train.n_cols, "max_nnz_row": csr_r.max_nnz,
+            "backend": jax.default_backend(),
+            "comm_bytes_per_sweep": (
+                DIST.sweep_comm_bytes_scatter(train.n_cols, K) if scatter_v
+                else DIST.sweep_comm_bytes(train.n_cols, K))}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--datasets", nargs="+", default=["movielens", "amazon"])
@@ -73,6 +137,9 @@ def main():
                     default="both",
                     help="fused zero-materialization path, XLA-gather "
                          "baseline, or both for a side-by-side")
+    ap.add_argument("--distributed", action="store_true",
+                    help="also measure the shard_map'd sweep, psum and "
+                         "scatter-V variants crossed with the kernel paths")
     ap.add_argument("--n-probe", type=int, default=8)
     ap.add_argument("--json-out", default=None,
                     help="also write records to this JSON file")
@@ -81,11 +148,22 @@ def main():
     for d in args.datasets:
         for uk in KERNEL_PATHS[args.use_kernel]:
             recs.append(run(d, n_probe=args.n_probe, use_kernel=uk))
+            if args.distributed:
+                for sv in (False, True):
+                    recs.append(run_distributed(d, n_probe=args.n_probe,
+                                                use_kernel=uk, scatter_v=sv))
     if args.json_out:
+        payload = {"benchmark": "table1_throughput",
+                   "backend": jax.default_backend(),
+                   "records": recs}
+        if args.distributed:
+            payload["note"] = (
+                "this run faked a multi-device CPU mesh via XLA_FLAGS "
+                f"host_platform_device_count ({len(jax.devices())} devices); "
+                "dist_* records measure the shard_map'd sweep there, and the "
+                "plain-path records of the same process share that env")
         with open(args.json_out, "w") as f:
-            json.dump({"benchmark": "table1_throughput",
-                       "backend": jax.default_backend(),
-                       "records": recs}, f, indent=2)
+            json.dump(payload, f, indent=2)
 
 
 if __name__ == "__main__":

@@ -40,9 +40,11 @@ def main():
     print(f"grid {I}x{J}, balance {nnz_balance_stats(part)}")
 
     t0 = time.time()
-    res = PP.run_pp(jax.random.key(0), part, cfg, test)
-    print(f"BMF+PP RMSE={res.rmse:.4f} in {time.time() - t0:.1f}s "
-          f"({res.n_test} test ratings)")
+    # stacked executor: each PP phase bucket runs as ONE vmapped Gibbs call
+    res = PP.run_pp(jax.random.key(0), part, cfg, test, executor="stacked",
+                    verbose=True)
+    print(f"BMF+PP[{res.executor}] RMSE={res.rmse:.4f} in "
+          f"{time.time() - t0:.1f}s ({res.n_test} test ratings)")
     print(f"phase times: { {k: round(v,1) for k, v in res.phase_times_s.items()} }")
     print(f"modeled 16-worker wall: {res.modeled_parallel_s(16):.1f}s")
 

@@ -19,16 +19,23 @@ def main():
     train, test = train_test_split(coo, 0.1, seed=1)
     cfg = BMF.BMFConfig(K=preset.K, n_samples=30, burnin=10)
 
-    print(f"{'grid':>6} {'rmse':>8} {'serial_s':>9} {'par16_s':>8} "
-          f"{'squareness':>10}")
+    print(f"{'grid':>6} {'rmse':>8} {'serial_s':>9} {'stacked_s':>9} "
+          f"{'par16_s':>8} {'squareness':>10}")
     for (I, J) in [(1, 1), (2, 1), (2, 2), (4, 1), (4, 2), (8, 1)]:
         part = partition(train, I, J)
         res = PP.run_pp(jax.random.key(0), part, cfg, test)
+        # same blocks through the phase-graph engine's stacked executor:
+        # one vmapped Gibbs call per phase bucket instead of the per-block
+        # loop (identical chains — same keys, same padding)
+        res_stk = PP.run_pp(jax.random.key(0), part, cfg, test,
+                            executor="stacked")
         sq = abs(math.log((train.n_rows / I) / (train.n_cols / J)))
         print(f"{I}x{J:<4} {res.rmse:8.4f} {res.wall_time_s:9.2f} "
+              f"{res_stk.wall_time_s:9.2f} "
               f"{res.modeled_parallel_s(16):8.2f} {sq:10.2f}")
     print("\nlower squareness == closer to square blocks; the best "
-          "time/RMSE points cluster there (paper §3.3)")
+          "time/RMSE points cluster there (paper §3.3). stacked_s is the "
+          "phase-graph engine's batched execution of the same grid.")
 
 
 if __name__ == "__main__":

@@ -33,6 +33,17 @@ from repro.core.posterior import NormalWishart, RowGaussians
 from repro.data.sparse import PaddedCSR
 
 
+def make_block_mesh(n_devices: Optional[int] = None) -> Mesh:
+    """1-D device mesh with axis 'block' for the PP phase-graph
+    ShardedExecutor (core.engine): same-phase blocks are placed on separate
+    devices and no collective runs inside a phase — posterior summaries
+    cross phase boundaries through the host, which IS the paper's entire
+    communication budget. Distinct from the intra-block 'data' mesh built
+    by callers of run_gibbs_distributed; the two don't compose (yet)."""
+    n = n_devices or len(jax.devices())
+    return jax.make_mesh((n,), ("block",))
+
+
 def _pad_rows(arr, mult):
     n = arr.shape[0]
     pad = (-n) % mult

@@ -1,0 +1,348 @@
+"""Phase-graph execution engine for Posterior Propagation.
+
+The paper's §2.2 structure is a three-phase DAG over the I×J block grid:
+phase (a) is block (0,0); phase (b) is the first block-row and block-column,
+depending only on (a); phase (c) is the interior, depending only on (b).
+Within a phase, blocks are embarrassingly parallel — O((N/I + D/J)·K²)
+posterior summaries cross phase boundaries, nothing else does.
+
+This module makes the graph explicit (``BlockTask`` / ``build_phase_graph``)
+and executes it through a pluggable ``Executor``:
+
+  SerialExecutor   reference semantics: one jitted Gibbs call per block with
+                   a host sync after each — what ``run_pp`` always did. The
+                   only executor that composes with an intra-block
+                   ``distributed_mesh`` (core.distributed's shard_map).
+  StackedExecutor  stacks all blocks of a phase shape bucket along a leading
+                   axis and runs ONE jitted vmapped chain per bucket
+                   (``gibbs.run_gibbs_stacked``) — the per-block Python
+                   dispatch and per-block host syncs disappear.
+                   ``BlockShapes.per_phase`` is what makes stacking legal:
+                   every block of a bucket is padded to identical shapes.
+  ShardedExecutor  the stacked batch additionally shard_map'd over a 1-D
+                   'block' device mesh: same-phase blocks genuinely run
+                   concurrently on separate devices with NO collectives
+                   inside a phase — the paper's deployment model, on-device.
+
+Executor contract
+-----------------
+``run_phase(ctx, phase, tasks) -> {(i, j): BlockOutcome}`` must return one
+outcome per task. The engine only calls ``run_phase`` once every task's
+dependencies (``BlockTask.deps``) are resolved in ``ctx.U_posts`` /
+``ctx.V_posts``, so executors read priors via ``ctx.priors(task)`` and never
+reason about ordering. Executors never aggregate: ``run_phase_graph`` owns
+phase sequencing, RMSE accumulation, and the Qin-et-al. divide-away
+aggregation (``pp._aggregate_axis``).
+
+Note on timings: SerialExecutor measures true per-block seconds;
+Stacked/Sharded report bucket wall time split evenly across the bucket's
+blocks (one executable runs them all), so ``PPResult.modeled_parallel_s``
+stays defined but the interesting number there is the *measured* phase
+wall time in ``PPResult.phase_times_s``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bmf as BMF
+from repro.core import gibbs as GIBBS
+from repro.core import pp as PP
+from repro.core.partition import Partition
+from repro.core.posterior import RowGaussians
+from repro.data.sparse import COO, PaddedCSR, apply_permutation
+
+Coord = Tuple[int, int]
+
+# stable intra-phase bucket order (phase b runs its two buckets back to back)
+_TAG_ORDER = ("a", "b_row", "b_col", "c")
+
+
+@dataclass(frozen=True)
+class BlockTask:
+    """One node of the PP phase graph.
+
+    ``phase`` is the partition's shape-bucket tag ('a'|'b_row'|'b_col'|'c');
+    ``u_prior_from`` / ``v_prior_from`` name the block whose U / V posterior
+    is propagated into this block as its prior (None = NW hyperprior)."""
+    i: int
+    j: int
+    phase: str
+    u_prior_from: Optional[Coord]
+    v_prior_from: Optional[Coord]
+
+    @property
+    def coord(self) -> Coord:
+        return (self.i, self.j)
+
+    @property
+    def deps(self) -> Tuple[Coord, ...]:
+        return tuple(c for c in (self.u_prior_from, self.v_prior_from)
+                     if c is not None)
+
+
+def build_phase_graph(part: Partition) -> List[Tuple[str, List[BlockTask]]]:
+    """The paper's three-phase DAG: [(phase_name, tasks)] in execution
+    order. Every task's deps live in strictly earlier phases."""
+    I, J = part.I, part.J
+    phase_a = [BlockTask(0, 0, "a", None, None)]
+    phase_b = ([BlockTask(i, 0, "b_row", None, (0, 0)) for i in range(1, I)]
+               + [BlockTask(0, j, "b_col", (0, 0), None) for j in range(1, J)])
+    phase_c = [BlockTask(i, j, "c", (i, 0), (0, j))
+               for i in range(1, I) for j in range(1, J)]
+    return [(name, tasks) for name, tasks in
+            (("a", phase_a), ("b", phase_b), ("c", phase_c)) if tasks]
+
+
+@dataclass
+class PhaseContext:
+    """Run state shared with executors: inputs (partition, config, permuted
+    test set, per-block keys, shape buckets) plus the posterior store that
+    carries summaries across phase boundaries."""
+    part: Partition
+    cfg: BMF.BMFConfig
+    test_p: COO
+    keys: jax.Array                      # (I, J) typed PRNG keys
+    shapes: Dict[str, "PP.BlockShapes"]  # per phase tag
+    U_posts: Dict[Coord, RowGaussians] = field(default_factory=dict)
+    V_posts: Dict[Coord, RowGaussians] = field(default_factory=dict)
+
+    def block_cfg(self, task: BlockTask) -> BMF.BMFConfig:
+        """Reduced chains for phases b/c when cfg.phase_bc_samples is set
+        (the propagated priors are informative — paper future-work)."""
+        cfg = self.cfg
+        if cfg.phase_bc_samples and task.phase != "a":
+            return cfg._replace(n_samples=cfg.phase_bc_samples,
+                                burnin=max(2, cfg.phase_bc_samples // 4))
+        return cfg
+
+    def priors(self, task: BlockTask):
+        up = self.U_posts[task.u_prior_from] if task.u_prior_from else None
+        vp = self.V_posts[task.v_prior_from] if task.v_prior_from else None
+        return up, vp
+
+
+@dataclass
+class BlockOutcome:
+    U_post: RowGaussians       # trimmed to the block's true row count
+    V_post: RowGaussians       # trimmed to the block's true col count
+    pred_mean: np.ndarray      # (bucket n_test,) posterior-mean predictions
+    seconds: float
+
+
+def _outcome(res: GIBBS.GibbsResult, blk, seconds: float) -> BlockOutcome:
+    nr, nc = len(blk.row_ids), len(blk.col_ids)
+    pred = np.asarray(res.acc.pred_sum
+                      / np.maximum(float(res.acc.pred_cnt), 1.0))
+    return BlockOutcome(
+        U_post=RowGaussians(eta=res.U_post.eta[:nr],
+                            Lambda=res.U_post.Lambda[:nr]),
+        V_post=RowGaussians(eta=res.V_post.eta[:nc],
+                            Lambda=res.V_post.Lambda[:nc]),
+        pred_mean=pred, seconds=seconds)
+
+
+class Executor:
+    """Runs all blocks of ONE phase; never crosses a phase boundary."""
+    name = "base"
+
+    def run_phase(self, ctx: PhaseContext, phase: str,
+                  tasks: Sequence[BlockTask]) -> Dict[Coord, BlockOutcome]:
+        raise NotImplementedError
+
+
+class SerialExecutor(Executor):
+    """One jitted Gibbs call + host sync per block (reference semantics,
+    bit-for-bit today's ``run_pp`` loop). Composes with an intra-block
+    ``distributed_mesh``: each block's chain is itself shard_map'd."""
+    name = "serial"
+
+    def __init__(self, distributed_mesh=None):
+        self.distributed_mesh = distributed_mesh
+
+    def run_phase(self, ctx, phase, tasks):
+        out: Dict[Coord, BlockOutcome] = {}
+        for t in tasks:
+            blk = ctx.part.block(t.i, t.j)
+            up, vp = ctx.priors(t)
+            t0 = time.time()
+            res = PP.run_block(ctx.keys[t.i, t.j], blk, ctx.block_cfg(t),
+                               ctx.test_p, up, vp, self.distributed_mesh,
+                               shapes=ctx.shapes[t.phase])
+            jax.block_until_ready(res.U)
+            out[t.coord] = _outcome(res, blk, time.time() - t0)
+        return out
+
+
+def _task_leaves(ctx: PhaseContext, task: BlockTask):
+    """Device-ready leaves for one block — pp.pad_block_inputs is the
+    single source of truth for bucket padding, shared with run_block, so
+    stacked chains are identical to serial ones by construction."""
+    blk = ctx.part.block(task.i, task.j)
+    up, vp = ctx.priors(task)
+    csr_r, csr_c, tr, tc, up, vp = PP.pad_block_inputs(
+        blk, ctx.shapes[task.phase], ctx.cfg.K, ctx.test_p, up, vp)
+    return ((csr_r.idx, csr_r.val, csr_r.mask),
+            (csr_c.idx, csr_c.val, csr_c.mask),
+            jnp.asarray(tr), jnp.asarray(tc), up, vp)
+
+
+def _stack_trees(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+class StackedExecutor(Executor):
+    """One jitted vmapped Gibbs call per phase shape bucket: all blocks of
+    the bucket run as a leading batch axis inside a single executable."""
+    name = "stacked"
+    block_mesh = None      # ShardedExecutor sets this
+
+    def run_phase(self, ctx, phase, tasks):
+        out: Dict[Coord, BlockOutcome] = {}
+        for tag in _TAG_ORDER:
+            group = [t for t in tasks if t.phase == tag]
+            if group:
+                out.update(self._run_bucket(ctx, tag, group))
+        return out
+
+    def _batch_pad(self, n_tasks: int) -> int:
+        if self.block_mesh is None:
+            return 0
+        n_dev = self.block_mesh.devices.size
+        return (-n_tasks) % n_dev
+
+    def _run_bucket(self, ctx, tag, group):
+        s = ctx.shapes[tag]
+        t0 = time.time()
+        leaves = _stack_trees([_task_leaves(ctx, t) for t in group])
+        rows_arrs, cols_arrs, test_rows, test_cols, up, vp = leaves
+        ii = np.array([t.i for t in group])
+        jj = np.array([t.j for t in group])
+        keys = ctx.keys[ii, jj]
+        pad = self._batch_pad(len(group))
+        if pad:
+            # round the batch up to the block mesh size by repeating the
+            # last block (its duplicate results are dropped below)
+            sel = np.concatenate([np.arange(len(group)),
+                                  np.full(pad, len(group) - 1)])
+            rows_arrs, cols_arrs, test_rows, test_cols, up, vp = jax.tree.map(
+                lambda x: x[sel],
+                (rows_arrs, cols_arrs, test_rows, test_cols, up, vp))
+            keys = keys[sel]
+        res = GIBBS.run_gibbs_stacked(
+            keys,
+            PaddedCSR(*rows_arrs, n_cols=s.n_cols),
+            PaddedCSR(*cols_arrs, n_cols=s.n_rows),
+            test_rows, test_cols, ctx.block_cfg(group[0]),
+            U_prior=up, V_prior=vp, block_mesh=self.block_mesh)
+        jax.block_until_ready(res.U)
+        per = (time.time() - t0) / len(group)
+        out = {}
+        for b, t in enumerate(group):
+            blk = ctx.part.block(t.i, t.j)
+            res_b = jax.tree.map(lambda x: x[b], res)
+            out[t.coord] = _outcome(res_b, blk, per)
+        return out
+
+
+class ShardedExecutor(StackedExecutor):
+    """StackedExecutor with the bucket batch shard_map'd over a 1-D 'block'
+    device mesh: blocks of a phase run concurrently on separate devices.
+    No collective ever runs inside a phase — posterior summaries return to
+    the host at the phase boundary, which is the paper's entire
+    communication budget."""
+    name = "sharded"
+
+    def __init__(self, block_mesh=None):
+        if block_mesh is None:
+            from repro.core.distributed import make_block_mesh
+            block_mesh = make_block_mesh()
+        self.block_mesh = block_mesh
+
+
+def make_executor(spec, distributed_mesh=None, block_mesh=None) -> Executor:
+    """Resolve run_pp's ``executor=`` argument: a name or an instance.
+    An intra-block ``distributed_mesh`` forces the serial executor — the
+    two shard_map levels don't compose (yet)."""
+    if isinstance(spec, Executor):
+        if distributed_mesh is not None:
+            raise ValueError(
+                "distributed_mesh with an Executor instance is ambiguous — "
+                "construct SerialExecutor(distributed_mesh) yourself or pass "
+                "executor='serial'")
+        return spec
+    if distributed_mesh is not None:
+        spec = "serial"
+    if spec == "serial":
+        return SerialExecutor(distributed_mesh)
+    if spec == "stacked":
+        return StackedExecutor()
+    if spec == "sharded":
+        return ShardedExecutor(block_mesh)
+    raise ValueError(f"unknown executor {spec!r} "
+                     "(expected serial | stacked | sharded)")
+
+
+def run_phase_graph(key, part: Partition, cfg: BMF.BMFConfig, test: COO,
+                    executor: Executor, verbose: bool = False) -> "PP.PPResult":
+    """Execute the PP phase graph with ``executor`` and aggregate — the
+    engine behind ``pp.run_pp``."""
+    I, J = part.I, part.J
+    t_start = time.time()
+    test_p = apply_permutation(test, part.row_perm, part.col_perm)
+    keys = jax.random.split(key, I * J).reshape(I, J)
+    shapes = PP.BlockShapes.per_phase(part, test_p)
+    ctx = PhaseContext(part=part, cfg=cfg, test_p=test_p, keys=keys,
+                       shapes=shapes)
+
+    sq_err, n_test = 0.0, 0
+    per_block_rmse = np.zeros((I, J))
+    phase_times: Dict[str, float] = {}
+    block_times: Dict[Coord, float] = {}
+
+    for phase, tasks in build_phase_graph(part):
+        missing_deps = {d for t in tasks for d in t.deps} - set(ctx.U_posts)
+        assert not missing_deps, f"phase {phase} scheduled before {missing_deps}"
+        t0 = time.time()
+        outcomes = executor.run_phase(ctx, phase, tasks)
+        dt = time.time() - t0
+        phase_times[phase] = dt
+        dropped = {t.coord for t in tasks} - set(outcomes)
+        assert not dropped, f"executor {executor.name} dropped blocks {dropped}"
+        for t in tasks:
+            o = outcomes[t.coord]
+            ctx.U_posts[t.coord] = o.U_post
+            ctx.V_posts[t.coord] = o.V_post
+            block_times[t.coord] = o.seconds
+            blk = part.block(t.i, t.j)
+            _, _, tv = PP._block_test(test_p, blk)
+            if len(tv):
+                err = o.pred_mean[:len(tv)] - tv
+                sq_err += float(np.sum(err ** 2))
+                n_test += len(tv)
+                per_block_rmse[t.i, t.j] = float(np.sqrt(np.mean(err ** 2)))
+        if verbose:
+            tags = [g for g in _TAG_ORDER if any(t.phase == g for t in tasks)]
+            desc = " ".join(
+                f"{g}[{sum(1 for t in tasks if t.phase == g)}blk "
+                f"{shapes[g].n_rows}x{shapes[g].n_cols} "
+                f"m={shapes[g].m_rows}/{shapes[g].m_cols}]" for g in tags)
+            print(f"[pp:{executor.name}] phase {phase}: {len(tasks)} block(s) "
+                  f"{desc} {dt:.2f}s", flush=True)
+
+    U_posts = [[ctx.U_posts[(i, j)] for j in range(J)] for i in range(I)]
+    V_posts = [[ctx.V_posts[(i, j)] for j in range(J)] for i in range(I)]
+    U_agg = PP._aggregate_axis(part, U_posts, axis="row")
+    V_agg = PP._aggregate_axis(part, V_posts, axis="col")
+
+    rmse = float(np.sqrt(sq_err / max(n_test, 1)))
+    return PP.PPResult(rmse=rmse, U_agg=U_agg, V_agg=V_agg,
+                       per_block_rmse=per_block_rmse,
+                       wall_time_s=time.time() - t_start,
+                       phase_times_s=phase_times, n_test=n_test,
+                       block_times_s=block_times, executor=executor.name)

@@ -98,6 +98,79 @@ def run_gibbs(key,
                           U_prior, V_prior, U0, V0)
 
 
+@partial(jax.jit, static_argnames=("cfg", "n_cols_r", "n_cols_c", "mesh"))
+def _run_gibbs_stacked_jit(key_data, csr_rows_arrs, csr_cols_arrs, test_rows,
+                           test_cols, cfg, n_cols_r, n_cols_c, n_samples,
+                           burnin, U_prior, V_prior, U0, V0, mesh=None):
+    """Batched (leading block axis) chain runner.
+
+    Every array argument carries a leading axis B; ``mesh`` (hashable,
+    static) optionally shard_maps that axis over a 1-D 'block' device mesh —
+    same-phase PP blocks then run concurrently on separate devices with NO
+    collectives inside the phase (communication stays at phase boundaries,
+    which live on the host between calls).
+
+    Keys travel as raw uint32 key data so the leaves are plain arrays for
+    vmap/shard_map; per-block semantics are EXACTLY ``_run_gibbs_impl``'s.
+    """
+    def batched(kd, rows_arrs, cols_arrs, tr, tc, ns, bi, up, vp, u0, v0):
+        def one(kd1, ra, ca, tr1, tc1, up1, vp1, u01, v01):
+            return _run_gibbs_impl(
+                jax.random.wrap_key_data(kd1),
+                PaddedCSR(*ra, n_cols=n_cols_r),
+                PaddedCSR(*ca, n_cols=n_cols_c),
+                tr1, tc1, cfg, ns, bi, up1, vp1, u01, v01)
+        return jax.vmap(one)(kd, rows_arrs, cols_arrs, tr, tc, up, vp, u0, v0)
+
+    if mesh is None:
+        return batched(key_data, csr_rows_arrs, csr_cols_arrs, test_rows,
+                       test_cols, n_samples, burnin, U_prior, V_prior, U0, V0)
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    blk = P("block")
+    fsh = shard_map(batched, mesh=mesh,
+                    in_specs=(blk, blk, blk, blk, blk, P(), P(),
+                              blk, blk, blk, blk),
+                    out_specs=blk, check_rep=False)
+    return fsh(key_data, csr_rows_arrs, csr_cols_arrs, test_rows, test_cols,
+               n_samples, burnin, U_prior, V_prior, U0, V0)
+
+
+def run_gibbs_stacked(keys,
+                      csr_rows: PaddedCSR,      # (B, N, M) leaves
+                      csr_cols: PaddedCSR,      # (B, D, M_c) leaves
+                      test_rows: jnp.ndarray,   # (B, n_test)
+                      test_cols: jnp.ndarray,   # (B, n_test)
+                      cfg: BMF.BMFConfig,
+                      U_prior: Optional[RowGaussians] = None,  # (B, N, ...) or None
+                      V_prior: Optional[RowGaussians] = None,
+                      block_mesh=None) -> GibbsResult:
+    """Batched analogue of ``run_gibbs``: one jitted vmapped executable runs
+    B identically-shaped blocks' chains at once (the PP StackedExecutor's
+    hot path — ``BlockShapes.per_phase`` guarantees the common shapes).
+
+    ``keys`` is a (B,) typed PRNG key array; per-block key handling (split
+    for init, then the chain) mirrors ``run_gibbs`` exactly, so block b of
+    the stacked result reproduces ``run_gibbs(keys[b], ...)``.
+
+    ``block_mesh``: optional 1-D Mesh with axis 'block'; B must be a
+    multiple of the mesh size (callers pad the batch). The returned
+    GibbsResult's leaves all carry the leading B axis.
+    """
+    N, D, K = csr_rows.idx.shape[1], csr_cols.idx.shape[1], cfg.K
+    ks = jax.vmap(jax.random.split)(keys)                     # (B, 2)
+    U0, V0 = jax.vmap(lambda k: BMF.init_factors(k, N, D, K))(ks[:, 0])
+    cfg_key = cfg._replace(n_samples=0, burnin=0, phase_bc_samples=None)
+    return _run_gibbs_stacked_jit(
+        jax.random.key_data(ks[:, 1]),
+        (csr_rows.idx, csr_rows.val, csr_rows.mask),
+        (csr_cols.idx, csr_cols.val, csr_cols.mask),
+        test_rows, test_cols, cfg_key, csr_rows.n_cols, csr_cols.n_cols,
+        jnp.asarray(cfg.n_samples, jnp.int32),
+        jnp.asarray(cfg.burnin, jnp.int32),
+        U_prior, V_prior, U0, V0, mesh=block_mesh)
+
+
 def _run_gibbs_impl(key, csr_rows, csr_cols, test_rows, test_cols, cfg,
                     n_samples, burnin, U_prior, V_prior, U0, V0) -> GibbsResult:
     N, D, K = csr_rows.n_rows, csr_cols.n_rows, cfg.K

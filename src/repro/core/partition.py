@@ -14,7 +14,8 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
-from repro.data.sparse import (COO, apply_permutation, balance_permutation)
+from repro.data.sparse import (COO, apply_permutation, balance_permutation,
+                               occupancy_rank)
 
 
 @dataclass
@@ -71,8 +72,30 @@ def suggest_grid(n_rows: int, n_cols: int, n_blocks: int) -> Tuple[int, int]:
     return best
 
 
+def _occupancy_refine(pc: COO, perm: np.ndarray, splits: np.ndarray,
+                      axis: str) -> np.ndarray:
+    """Compose a within-stripe occupancy sort onto the global permutation.
+
+    ``balance_permutation`` spreads heavy rows ACROSS stripes (equal nnz per
+    block); ``occupancy_rank`` (the core of data.sparse's
+    ``occupancy_permutation``) then sorts each stripe's rows by descending
+    rating count WITHIN it, so the padded-CSR slot planes of every block in
+    the stripe are occupancy-coherent: the fused kernel's nnz-aware M-tile
+    skip (data.sparse.tile_occupancy) sees long runs of equally-full rows,
+    and stacked same-phase buckets waste fewer padded tiles. Stripe
+    membership is untouched, so block nnz balance and the per-phase
+    BlockShapes buckets are identical either way."""
+    ids = pc.row if axis == "row" else pc.col
+    n = pc.n_rows if axis == "row" else pc.n_cols
+    counts = np.bincount(ids, minlength=n)    # one pass over nnz, all stripes
+    refine = np.arange(n, dtype=np.int64)
+    for lo, hi in zip(splits[:-1], splits[1:]):
+        refine[lo:hi] = lo + occupancy_rank(counts[lo:hi])
+    return refine[perm]
+
+
 def partition(coo: COO, I: int, J: int, balance: bool = True,
-              seed: int = 0) -> Partition:
+              seed: int = 0, occupancy_sort: bool = True) -> Partition:
     if balance:
         row_perm = balance_permutation(coo, "row")
         col_perm = balance_permutation(coo, "col")
@@ -84,6 +107,11 @@ def partition(coo: COO, I: int, J: int, balance: bool = True,
 
     row_splits = np.linspace(0, coo.n_rows, I + 1).astype(np.int64)
     col_splits = np.linspace(0, coo.n_cols, J + 1).astype(np.int64)
+
+    if occupancy_sort:
+        row_perm = _occupancy_refine(pc, row_perm, row_splits, "row")
+        col_perm = _occupancy_refine(pc, col_perm, col_splits, "col")
+        pc = apply_permutation(coo, row_perm, col_perm)
 
     blocks: List[List[Block]] = []
     for i in range(I):

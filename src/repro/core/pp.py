@@ -10,9 +10,12 @@ Three phases over an I×J block grid (paper §2.2, Fig. 1):
 
 Communication happens ONLY at the two phase boundaries: what moves between
 blocks is O((N/I + D/J)·K²) posterior summaries — never ratings, never
-samples. Within a phase, blocks are embarrassingly parallel (the paper runs
-them on disjoint node groups; here each block's Gibbs loop is itself
-jit-compiled and optionally internally sharded via core.distributed).
+samples. Within a phase, blocks are embarrassingly parallel. Orchestration
+lives in core.engine (the phase-graph engine): ``run_pp`` is a thin wrapper
+that picks an Executor — serial reference loop, stacked (one vmapped Gibbs
+call per phase shape bucket), or sharded (same-phase blocks concurrently on
+a 'block' device mesh). Each block's Gibbs loop can also be internally
+sharded via core.distributed (serial executor only).
 
 Aggregation (paper §2.2 last ¶, following Qin et al. 2019): per factor row,
 the final posterior multiplies the per-block posteriors (natural-parameter
@@ -25,7 +28,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,10 +36,9 @@ import numpy as np
 
 from repro.core import bmf as BMF
 from repro.core import gibbs as GIBBS
-from repro.core import posterior as POST
 from repro.core.partition import Block, Partition
 from repro.core.posterior import RowGaussians
-from repro.data.sparse import COO, PaddedCSR, coo_to_padded_csr
+from repro.data.sparse import COO, coo_to_padded_csr
 
 
 @dataclass
@@ -49,11 +51,16 @@ class PPResult:
     phase_times_s: Dict[str, float]
     n_test: int
     block_times_s: Dict[Tuple[int, int], float] = field(default_factory=dict)
+    executor: str = "serial"         # engine executor that produced this run
 
     def modeled_parallel_s(self, workers: int) -> float:
         """Wall-clock under the paper's deployment: blocks within a phase
         run concurrently on disjoint workers (measured per-block times,
-        greedy rounds). Phase a is serial by construction."""
+        greedy rounds). Phase a is serial by construction.
+
+        Only the serial executor measures true per-block times; under the
+        stacked/sharded executors prefer the MEASURED phase wall-clock in
+        ``phase_times_s`` (this model then just splits bucket time evenly)."""
         import math
         t = self.block_times_s.get((0, 0), 0.0)
         I, J = self.per_block_rmse.shape
@@ -141,6 +148,35 @@ def _pad_prior(prior: Optional[RowGaussians], n: int, K: int):
     return RowGaussians(eta=eta, Lambda=Lam)
 
 
+def pad_block_inputs(block: Block, shapes: BlockShapes, K: int,
+                     test: Optional[COO],
+                     U_prior: Optional[RowGaussians],
+                     V_prior: Optional[RowGaussians]):
+    """Pad one block's CSR planes, priors, and test indices to its phase
+    shape bucket — the single source of truth for bucketed padding.
+    ``run_block`` (serial executor) and ``engine._task_leaves`` (stacked/
+    sharded executors) both call this; the executors' chain-identical
+    parity depends on them never diverging."""
+    csr_rows = coo_to_padded_csr(block.coo, max_nnz=shapes.m_rows,
+                                 n_rows_pad=shapes.n_rows,
+                                 n_cols_pad=shapes.n_cols)
+    csr_cols = coo_to_padded_csr(block.coo.transpose(),
+                                 max_nnz=shapes.m_cols,
+                                 n_rows_pad=shapes.n_cols,
+                                 n_cols_pad=shapes.n_rows)
+    U_prior = _pad_prior(U_prior, shapes.n_rows, K)
+    V_prior = _pad_prior(V_prior, shapes.n_cols, K)
+    if test is not None:
+        tr, tc, _ = _block_test(test, block)
+    else:
+        tr = np.zeros((1,), np.int32)
+        tc = np.zeros((1,), np.int32)
+    pad = shapes.n_test - len(tr)
+    tr = np.concatenate([tr, np.zeros(max(pad, 0), tr.dtype)])[:shapes.n_test]
+    tc = np.concatenate([tc, np.zeros(max(pad, 0), tc.dtype)])[:shapes.n_test]
+    return csr_rows, csr_cols, tr, tc, U_prior, V_prior
+
+
 def run_block(key, block: Block, cfg: BMF.BMFConfig,
               test: Optional[COO],
               U_prior: Optional[RowGaussians],
@@ -151,26 +187,14 @@ def run_block(key, block: Block, cfg: BMF.BMFConfig,
     if shapes is None:
         csr_rows = coo_to_padded_csr(block.coo)
         csr_cols = coo_to_padded_csr(block.coo.transpose())
+        if test is not None:
+            tr, tc, _ = _block_test(test, block)
+        else:
+            tr = np.zeros((1,), np.int32)
+            tc = np.zeros((1,), np.int32)
     else:
-        csr_rows = coo_to_padded_csr(block.coo, max_nnz=shapes.m_rows,
-                                     n_rows_pad=shapes.n_rows,
-                                     n_cols_pad=shapes.n_cols)
-        csr_cols = coo_to_padded_csr(block.coo.transpose(),
-                                     max_nnz=shapes.m_cols,
-                                     n_rows_pad=shapes.n_cols,
-                                     n_cols_pad=shapes.n_rows)
-        U_prior = _pad_prior(U_prior, shapes.n_rows, cfg.K)
-        V_prior = _pad_prior(V_prior, shapes.n_cols, cfg.K)
-    if test is not None:
-        tr, tc, _ = _block_test(test, block)
-    else:
-        tr = np.zeros((1,), np.int32)
-        tc = np.zeros((1,), np.int32)
-    n_test_local = len(tr)
-    if shapes is not None:
-        pad = shapes.n_test - n_test_local
-        tr = np.concatenate([tr, np.zeros(max(pad, 0), tr.dtype)])[:shapes.n_test]
-        tc = np.concatenate([tc, np.zeros(max(pad, 0), tc.dtype)])[:shapes.n_test]
+        csr_rows, csr_cols, tr, tc, U_prior, V_prior = pad_block_inputs(
+            block, shapes, cfg.K, test, U_prior, V_prior)
     if distributed_mesh is not None:
         from repro.core import distributed as DIST
         return DIST.run_gibbs_distributed(
@@ -182,91 +206,27 @@ def run_block(key, block: Block, cfg: BMF.BMFConfig,
 
 
 def run_pp(key, part: Partition, cfg: BMF.BMFConfig, test: COO,
-           distributed_mesh=None, verbose: bool = False) -> PPResult:
-    """Full three-phase Posterior Propagation over the partition."""
-    I, J = part.I, part.J
-    K = cfg.K
-    t_start = time.time()
-    phase_times: Dict[str, float] = {}
+           distributed_mesh=None, verbose: bool = False,
+           executor="serial", block_mesh=None) -> PPResult:
+    """Full three-phase Posterior Propagation over the partition.
 
-    # permute test into partitioned space once
-    from repro.data.sparse import apply_permutation
-    test_p = apply_permutation(test, part.row_perm, part.col_perm)
+    Thin wrapper over the phase-graph engine (core.engine): the run is an
+    explicit three-phase DAG of BlockTasks executed by a pluggable Executor.
 
-    U_posts: List[List[Optional[RowGaussians]]] = [[None] * J for _ in range(I)]
-    V_posts: List[List[Optional[RowGaussians]]] = [[None] * J for _ in range(I)]
-    sq_err = 0.0
-    n_test = 0
-    per_block_rmse = np.zeros((I, J))
-
-    keys = jax.random.split(key, I * J).reshape(I, J)
-    # per-phase occupancy buckets: one executable per phase tag, padded to
-    # that phase's own worst case rather than the global corner-block max
-    shapes_by_phase = BlockShapes.per_phase(part, test_p)
-
-    block_times: Dict[Tuple[int, int], float] = {}
-
-    def do_block(i, j, U_prior, V_prior):
-        nonlocal sq_err, n_test
-        blk = part.block(i, j)
-        shapes = shapes_by_phase[blk.phase]
-        # paper future-work option: reduced chains for phases b/c (the
-        # propagated priors are informative, so shorter burn-in suffices);
-        # OFF (=None) for the paper-faithful baseline.
-        bcfg = cfg
-        if cfg.phase_bc_samples and (i, j) != (0, 0):
-            bcfg = cfg._replace(n_samples=cfg.phase_bc_samples,
-                                burnin=max(2, cfg.phase_bc_samples // 4))
-        tb0 = time.time()
-        res = run_block(keys[i, j], blk, bcfg, test_p, U_prior, V_prior,
-                        distributed_mesh, shapes=shapes)
-        jax.block_until_ready(res.U)
-        block_times[(i, j)] = time.time() - tb0
-        nr, nc = len(blk.row_ids), len(blk.col_ids)
-        U_posts[i][j] = RowGaussians(eta=res.U_post.eta[:nr],
-                                     Lambda=res.U_post.Lambda[:nr])
-        V_posts[i][j] = RowGaussians(eta=res.V_post.eta[:nc],
-                                     Lambda=res.V_post.Lambda[:nc])
-        tr, tc, tv = _block_test(test_p, blk)
-        if len(tv):
-            pred = np.asarray(res.acc.pred_sum / np.maximum(
-                float(res.acc.pred_cnt), 1.0))[:len(tv)]
-            err = pred - tv
-            sq_err += float(np.sum(err ** 2))
-            n_test += len(tv)
-            per_block_rmse[i, j] = float(np.sqrt(np.mean(err ** 2)))
-        return res
-
-    # ---- phase (a) --------------------------------------------------------
-    t0 = time.time()
-    do_block(0, 0, None, None)
-    phase_times["a"] = time.time() - t0
-
-    # ---- phase (b): first block-column and first block-row ---------------
-    t0 = time.time()
-    for i in range(1, I):
-        do_block(i, 0, None, V_posts[0][0])       # V^(0) propagated
-    for j in range(1, J):
-        do_block(0, j, U_posts[0][0], None)       # U^(0) propagated
-    phase_times["b"] = time.time() - t0
-
-    # ---- phase (c): the rest ----------------------------------------------
-    t0 = time.time()
-    for i in range(1, I):
-        for j in range(1, J):
-            do_block(i, j, U_posts[i][0], V_posts[0][j])
-    phase_times["c"] = time.time() - t0
-
-    # ---- aggregation -------------------------------------------------------
-    U_agg = _aggregate_axis(part, U_posts, axis="row")
-    V_agg = _aggregate_axis(part, V_posts, axis="col")
-
-    rmse = float(np.sqrt(sq_err / max(n_test, 1)))
-    return PPResult(rmse=rmse, U_agg=U_agg, V_agg=V_agg,
-                    per_block_rmse=per_block_rmse,
-                    wall_time_s=time.time() - t_start,
-                    phase_times_s=phase_times, n_test=n_test,
-                    block_times_s=block_times)
+    executor: "serial" (reference: per-block jitted calls, today's exact
+      semantics), "stacked" (one vmapped Gibbs call per phase shape bucket),
+      "sharded" (the stacked batch shard_map'd over a 'block' device mesh so
+      same-phase blocks run concurrently on separate devices), or an
+      ``engine.Executor`` instance.
+    distributed_mesh: intra-block sharding (core.distributed) — forces the
+      serial executor; ``block_mesh`` is the inter-block mesh used by
+      executor="sharded" (defaults to all local devices).
+    verbose: per-phase progress lines (block count, shape buckets, wall time).
+    """
+    from repro.core import engine as ENG
+    ex = ENG.make_executor(executor, distributed_mesh=distributed_mesh,
+                           block_mesh=block_mesh)
+    return ENG.run_phase_graph(key, part, cfg, test, ex, verbose=verbose)
 
 
 def _aggregate_axis(part: Partition, posts, axis: str) -> RowGaussians:
@@ -276,27 +236,28 @@ def _aggregate_axis(part: Partition, posts, axis: str) -> RowGaussians:
     that row all received the same propagated prior (the phase-b posterior
     of U^(i) — or phase-a for i=0), counted J times in the product, so J-1
     copies are divided away (Qin et al. 2019, eq. 5).
+
+    Operates on stacked leaves: blocks of a row (col) group share their row
+    (col) ids, so the J (I) per-block posteriors stack along a leading axis
+    and the natural-parameter sum is one reduction instead of a Python
+    chain of adds.
     """
     I, J = part.I, part.J
     out_eta, out_lam = [], []
     if axis == "row":
         for i in range(I):
-            etas = [posts[i][j].eta for j in range(J)]
-            lams = [posts[i][j].Lambda for j in range(J)]
+            eta_stack = jnp.stack([posts[i][j].eta for j in range(J)])
+            lam_stack = jnp.stack([posts[i][j].Lambda for j in range(J)])
             prior = posts[i][0]          # the propagated one for this row grp
-            eta = sum(etas) - (J - 1) * prior.eta
-            lam = sum(lams) - (J - 1) * prior.Lambda
-            out_eta.append(eta)
-            out_lam.append(lam)
+            out_eta.append(eta_stack.sum(0) - (J - 1) * prior.eta)
+            out_lam.append(lam_stack.sum(0) - (J - 1) * prior.Lambda)
     else:
         for j in range(J):
-            etas = [posts[i][j].eta for i in range(I)]
-            lams = [posts[i][j].Lambda for i in range(I)]
+            eta_stack = jnp.stack([posts[i][j].eta for i in range(I)])
+            lam_stack = jnp.stack([posts[i][j].Lambda for i in range(I)])
             prior = posts[0][j]
-            eta = sum(etas) - (I - 1) * prior.eta
-            lam = sum(lams) - (I - 1) * prior.Lambda
-            out_eta.append(eta)
-            out_lam.append(lam)
+            out_eta.append(eta_stack.sum(0) - (I - 1) * prior.eta)
+            out_lam.append(lam_stack.sum(0) - (I - 1) * prior.Lambda)
     return RowGaussians(eta=jnp.concatenate(out_eta),
                         Lambda=jnp.concatenate(out_lam))
 

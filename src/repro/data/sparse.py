@@ -114,6 +114,17 @@ def tile_occupancy(mask, tn: int, tm: int):
     return jnp.ceil(last_live / tm).astype(jnp.int32)
 
 
+def occupancy_rank(counts: np.ndarray) -> np.ndarray:
+    """rank[i] = position of row i when sorted by DESCENDING count (stable)
+    — the core of ``occupancy_permutation``, exposed so core.partition can
+    refine stripes from one global bincount instead of building a
+    submatrix per stripe."""
+    order = np.argsort(-counts, kind="stable")
+    rank = np.empty(len(counts), np.int64)
+    rank[order] = np.arange(len(counts))
+    return rank
+
+
 def occupancy_permutation(coo: COO, axis: str = "row") -> np.ndarray:
     """Permutation sorting rows (or cols) by DESCENDING rating count, so the
     fused kernel's tn-row tiles are occupancy-coherent and its M-tile skip
@@ -121,11 +132,7 @@ def occupancy_permutation(coo: COO, axis: str = "row") -> np.ndarray:
     heavy rows — use this WITHIN a block after blocks are balanced)."""
     ids = coo.row if axis == "row" else coo.col
     n = coo.n_rows if axis == "row" else coo.n_cols
-    counts = np.bincount(ids, minlength=n)
-    order = np.argsort(-counts, kind="stable")
-    perm = np.empty(n, np.int64)
-    perm[order] = np.arange(n)
-    return perm
+    return occupancy_rank(np.bincount(ids, minlength=n))
 
 
 def train_test_split(coo: COO, test_frac: float = 0.1,

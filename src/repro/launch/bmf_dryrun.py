@@ -9,7 +9,13 @@ Records roofline terms for the paper-faithful (psum) and beyond-paper
 (scatter-V, §Perf H6) variants — the artifact behind the EXPERIMENTS
 §Scaling saturation analysis.
 
-  python -m repro.launch.bmf_dryrun [--shards 256] [--k 100]
+--pp-engine additionally lowers the phase-graph engine's sharded phase-c
+bucket (core.engine.ShardedExecutor: one batched Gibbs chain shard_map'd
+over a 'block' mesh) and records that NO collective appears inside the
+phase — the engine moves posterior summaries only at phase boundaries,
+which is the paper's entire communication budget.
+
+  python -m repro.launch.bmf_dryrun [--shards 256] [--k 100] [--pp-engine]
 """
 import argparse
 import json
@@ -65,6 +71,55 @@ def lower_sweep(n_shards: int, N: int, D: int, M: int, K: int,
     }
 
 
+def lower_pp_phase(n_blocks: int, N: int, D: int, M: int, K: int,
+                   chain_len: int):
+    """Lower the engine's sharded phase-c bucket: B=n_blocks interior
+    blocks, each (N/block-rows × D/block-cols), ONE chain executable
+    shard_map'd over the 'block' mesh. Expect zero collective bytes —
+    same-phase blocks never talk to each other."""
+    from repro.core import gibbs as GIBBS
+    from repro.core.distributed import make_block_mesh
+    from repro.core.posterior import RowGaussians
+
+    mesh = make_block_mesh(n_blocks)
+    cfg = BMF.BMFConfig(K=K)._replace(n_samples=0, burnin=0,
+                                      phase_bc_samples=None)
+    B = n_blocks
+    m_c = max(8, (M * N // D // 8) * 8)
+    n_test = 1024
+    S = jax.ShapeDtypeStruct
+    key_data = S((B, 2), jnp.uint32)
+    prior_u = (S((B, N, K), jnp.float32), S((B, N, K, K), jnp.float32))
+    prior_v = (S((B, D, K), jnp.float32), S((B, D, K, K), jnp.float32))
+    args = (
+        key_data,
+        (S((B, N, M), jnp.int32), S((B, N, M), jnp.float32),
+         S((B, N, M), jnp.float32)),
+        (S((B, D, m_c), jnp.int32), S((B, D, m_c), jnp.float32),
+         S((B, D, m_c), jnp.float32)),
+        S((B, n_test), jnp.int32), S((B, n_test), jnp.int32),
+        S((), jnp.int32), S((), jnp.int32),
+        RowGaussians(eta=prior_u[0], Lambda=prior_u[1]),
+        RowGaussians(eta=prior_v[0], Lambda=prior_v[1]),
+        S((B, N, K), jnp.float32), S((B, D, K), jnp.float32),
+    )
+    traced = GIBBS._run_gibbs_stacked_jit.trace(
+        args[0], args[1], args[2], args[3], args[4], cfg, D, N,
+        args[5], args[6], args[7], args[8], args[9], args[10], mesh=mesh)
+    jcost = JCOST.jaxpr_cost(traced.jaxpr, mult=chain_len)
+    compiled = traced.lower().compile()
+    coll = ROOF.collective_bytes(compiled.as_text())
+    terms = ROOF.terms_from(jcost, compiled.as_text(), n_blocks)
+    return {
+        "variant": "pp_phase_c_sharded",
+        "n_blocks": n_blocks, "N": N, "D": D, "M": M, "K": K,
+        "chain_len": chain_len,
+        "roofline": terms.as_dict(),
+        "collectives": coll,
+        "intra_phase_collective_bytes": float(sum(coll.values())),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--shards", type=int, default=256)
@@ -73,6 +128,11 @@ def main():
     ap.add_argument("--n", type=int, default=480_256)
     ap.add_argument("--d", type=int, default=17_792)
     ap.add_argument("--m", type=int, default=512)
+    ap.add_argument("--pp-engine", action="store_true",
+                    help="also lower the sharded phase-c bucket "
+                         "(16 interior blocks of a 5x5 grid)")
+    ap.add_argument("--samples", type=int, default=60,
+                    help="chain length used to scale --pp-engine flop terms")
     args = ap.parse_args()
 
     results = []
@@ -84,6 +144,15 @@ def main():
               f"memory={rf['memory_s']:.3e}s collective={rf['collective_s']:.3e}s "
               f"dominant={rf['dominant']} "
               f"(analytic comm {rec['analytic_comm_bytes']/1e6:.0f} MB)")
+    if args.pp_engine:
+        # 5x5 grid of the same matrix -> 16 interior (phase-c) blocks
+        rec = lower_pp_phase(16, args.n // 5 + 1, args.d // 5 + 1,
+                             max(8, args.m // 4), args.k, args.samples)
+        results.append(rec)
+        print(f"{rec['variant']} blocks={rec['n_blocks']} "
+              f"intra-phase collective bytes="
+              f"{rec['intra_phase_collective_bytes']:.0f} "
+              f"(phase boundary is the only communication)")
     OUT.write_text(json.dumps(results, indent=1))
     print("->", OUT)
 

@@ -2,10 +2,17 @@
 
 Usage:
   PYTHONPATH=src python -m repro.launch.bmf_train \
-      --dataset movielens --blocks 4 --samples 60 [--distributed]
+      --dataset movielens --blocks 4 --samples 60 \
+      [--executor serial|stacked|sharded] [--distributed]
 
---distributed runs each block's Gibbs loop through the shard_map
-implementation on all local devices (set XLA_FLAGS to fake a mesh on CPU).
+--executor picks the phase-graph engine executor (core.engine): 'stacked'
+(default) runs each PP phase's shape bucket as ONE vmapped Gibbs call;
+'sharded' additionally spreads that batch over all local devices on a
+'block' mesh (set XLA_FLAGS=--xla_force_host_platform_device_count=N to
+fake a mesh on CPU); 'serial' is the reference per-block loop.
+
+--distributed shards each block's Gibbs loop INTERNALLY over all local
+devices (core.distributed shard_map) — this forces the serial executor.
 """
 from __future__ import annotations
 
@@ -31,7 +38,11 @@ def main():
     ap.add_argument("--blocks", type=int, default=4)
     ap.add_argument("--samples", type=int, default=60)
     ap.add_argument("--k", type=int, default=0, help="0 = preset K (capped 16)")
-    ap.add_argument("--distributed", action="store_true")
+    ap.add_argument("--executor", default="stacked",
+                    choices=["serial", "stacked", "sharded"],
+                    help="phase-graph engine executor (core.engine)")
+    ap.add_argument("--distributed", action="store_true",
+                    help="intra-block shard_map (forces --executor serial)")
     ap.add_argument("--phase-bc-samples", type=int, default=0)
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--seed", type=int, default=0)
@@ -54,11 +65,15 @@ def main():
     if args.distributed:
         n = len(jax.devices())
         mesh = jax.make_mesh((n,), ("data",))
-        print(f"distributed: {n}-way shard_map per block")
+        print(f"distributed: {n}-way shard_map per block (serial executor)")
+    elif args.executor == "sharded":
+        print(f"sharded executor: {len(jax.devices())}-way block mesh")
 
     res = PP.run_pp(jax.random.key(args.seed), part, cfg, test,
-                    distributed_mesh=mesh, verbose=True)
-    print(f"RMSE={res.rmse:.4f}  wall={res.wall_time_s:.1f}s  "
+                    distributed_mesh=mesh, verbose=True,
+                    executor=args.executor)
+    print(f"executor={res.executor}  RMSE={res.rmse:.4f}  "
+          f"wall={res.wall_time_s:.1f}s  "
           f"phases={ {k: round(v, 2) for k, v in res.phase_times_s.items()} }")
     print(f"modeled 16-worker wall: {res.modeled_parallel_s(16):.1f}s")
 

@@ -1,0 +1,257 @@
+"""Phase-graph PP engine: graph structure, executor parity, aggregation
+algebra, verbose reporting, and the occupancy-sorted partition wiring."""
+import os
+import subprocess
+import sys
+import textwrap
+import types
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bmf as BMF
+from repro.core import engine as ENG
+from repro.core import posterior as POST
+from repro.core import pp as PP
+from repro.core.partition import partition
+from repro.data import synthetic as SYN
+from repro.data.sparse import train_test_split
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+# ---------------------------------------------------------------------------
+# graph structure
+# ---------------------------------------------------------------------------
+
+
+def _graph_for(I, J):
+    part = types.SimpleNamespace(I=I, J=J)
+    return ENG.build_phase_graph(part)
+
+
+def test_phase_graph_covers_grid_once():
+    for I, J in ((1, 1), (2, 2), (3, 2), (4, 4)):
+        graph = _graph_for(I, J)
+        coords = [t.coord for _, tasks in graph for t in tasks]
+        assert len(coords) == I * J
+        assert len(set(coords)) == I * J
+
+
+def test_phase_graph_deps_precede():
+    """Every task's deps must be scheduled in a strictly earlier phase —
+    the invariant that makes within-phase execution embarrassingly
+    parallel."""
+    graph = _graph_for(3, 4)
+    done = set()
+    for _, tasks in graph:
+        for t in tasks:
+            assert set(t.deps) <= done, (t, done)
+        done |= {t.coord for t in tasks}
+
+
+def test_phase_graph_prior_sources():
+    graph = dict(_graph_for(3, 3))
+    (a,) = graph["a"]
+    assert a.deps == ()
+    for t in graph["b"]:
+        assert t.deps == ((0, 0),)
+        # first block-column propagates V, first block-row propagates U
+        if t.j == 0:
+            assert t.u_prior_from is None and t.v_prior_from == (0, 0)
+        else:
+            assert t.u_prior_from == (0, 0) and t.v_prior_from is None
+    for t in graph["c"]:
+        assert t.u_prior_from == (t.i, 0)
+        assert t.v_prior_from == (0, t.j)
+
+
+# ---------------------------------------------------------------------------
+# aggregation algebra (satellite: divide-away exactness)
+# ---------------------------------------------------------------------------
+
+
+def _int_gaussians(rng, n, k, lo=-8, hi=8):
+    """Integer-valued natural params: float32 adds/subtracts on small
+    integers are exact, so the divide-away identity can be checked with
+    zero tolerance."""
+    return POST.RowGaussians(
+        eta=jnp.asarray(rng.integers(lo, hi, (n, k)).astype(np.float32)),
+        Lambda=jnp.asarray(rng.integers(lo, hi, (n, k, k)).astype(np.float32)))
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_aggregate_divides_away_priors_exactly(seed):
+    """Qin et al. 2019 eq. 5: posts[i][j>=1] = prior_i * likelihood_ij in
+    natural params; aggregation must return prior_i * prod_j likelihood_ij
+    EXACTLY — the (J-1) multiply-counted prior copies are divided away."""
+    rng = np.random.default_rng(seed)
+    I, J, n, k = int(rng.integers(1, 4)), int(rng.integers(1, 4)), 5, 3
+    part = types.SimpleNamespace(I=I, J=J)
+
+    priors = [_int_gaussians(rng, n, k) for _ in range(I)]
+    liks = [[_int_gaussians(rng, n, k) for _ in range(J)] for _ in range(I)]
+    posts = [[priors[i] if j == 0 else POST.product(priors[i], liks[i][j])
+              for j in range(J)] for i in range(I)]
+
+    agg = PP._aggregate_axis(part, posts, axis="row")
+    for i in range(I):
+        expect = priors[i]
+        for j in range(1, J):
+            expect = POST.product(expect, liks[i][j])
+        np.testing.assert_array_equal(
+            np.asarray(agg.eta[i * n:(i + 1) * n]), np.asarray(expect.eta))
+        np.testing.assert_array_equal(
+            np.asarray(agg.Lambda[i * n:(i + 1) * n]),
+            np.asarray(expect.Lambda))
+
+
+def test_aggregate_col_axis_symmetry():
+    rng = np.random.default_rng(11)
+    I, J, n, k = 3, 2, 4, 2
+    part = types.SimpleNamespace(I=I, J=J)
+    priors = [_int_gaussians(rng, n, k) for _ in range(J)]
+    liks = [[_int_gaussians(rng, n, k) for _ in range(J)] for _ in range(I)]
+    posts = [[priors[j] if i == 0 else POST.product(priors[j], liks[i][j])
+              for j in range(J)] for i in range(I)]
+    agg = PP._aggregate_axis(part, posts, axis="col")
+    for j in range(J):
+        expect = priors[j]
+        for i in range(1, I):
+            expect = POST.product(expect, liks[i][j])
+        np.testing.assert_array_equal(
+            np.asarray(agg.eta[j * n:(j + 1) * n]), np.asarray(expect.eta))
+
+
+# ---------------------------------------------------------------------------
+# executor parity + verbose (satellite: serial == stacked under a fixed key)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def mini_run():
+    coo, p = SYN.generate("mini", seed=3)
+    train, test = train_test_split(coo, 0.15, seed=4)
+    cfg = BMF.BMFConfig(K=p.K, n_samples=10, burnin=3)
+    part = partition(train, 2, 2)
+    return part, cfg, test
+
+
+def test_serial_stacked_identical_rmse(mini_run):
+    part, cfg, test = mini_run
+    key = jax.random.key(1)
+    r_ser = PP.run_pp(key, part, cfg, test, executor="serial")
+    r_stk = PP.run_pp(key, part, cfg, test, executor="stacked")
+    assert r_ser.executor == "serial" and r_stk.executor == "stacked"
+    # identical keys + identical padding -> identical chains (up to batched
+    # fp scheduling)
+    assert abs(r_ser.rmse - r_stk.rmse) < 1e-5, (r_ser.rmse, r_stk.rmse)
+    np.testing.assert_allclose(r_ser.per_block_rmse, r_stk.per_block_rmse,
+                               atol=1e-4)
+    # natural params are ill-conditioned (ridge-scale covariance inverses);
+    # the aggregated posterior MEANS are the well-conditioned comparison
+    np.testing.assert_allclose(np.asarray(r_ser.U_agg.mean),
+                               np.asarray(r_stk.U_agg.mean),
+                               atol=5e-3)
+    assert r_ser.n_test == r_stk.n_test > 0
+    assert set(r_ser.phase_times_s) == set(r_stk.phase_times_s) == {"a", "b", "c"}
+
+
+def test_run_pp_verbose_reports_phases(mini_run, capsys):
+    part, cfg, test = mini_run
+    fast = cfg._replace(n_samples=2, burnin=0)
+    PP.run_pp(jax.random.key(0), part, fast, test, executor="stacked",
+              verbose=True)
+    out = capsys.readouterr().out
+    for phase in ("phase a", "phase b", "phase c"):
+        assert phase in out, out
+    assert "block(s)" in out and "[pp:stacked]" in out
+    # shape buckets are reported
+    assert "m=" in out
+
+
+def test_executor_instance_and_unknown(mini_run):
+    part, cfg, test = mini_run
+    fast = cfg._replace(n_samples=2, burnin=0)
+    res = PP.run_pp(jax.random.key(0), part, fast, test,
+                    executor=ENG.StackedExecutor())
+    assert res.executor == "stacked"
+    with pytest.raises(ValueError):
+        PP.run_pp(jax.random.key(0), part, fast, test, executor="warp")
+
+
+def test_distributed_mesh_forces_serial():
+    ex = ENG.make_executor("stacked", distributed_mesh=object())
+    assert isinstance(ex, ENG.SerialExecutor)
+
+
+# ---------------------------------------------------------------------------
+# sharded executor (subprocess: needs a faked multi-device mesh)
+# ---------------------------------------------------------------------------
+
+SHARDED_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import json
+    import jax
+    from repro.core import bmf as BMF, pp as PP
+    from repro.core.partition import partition
+    from repro.data import synthetic as SYN
+    from repro.data.sparse import train_test_split
+
+    coo, p = SYN.generate("mini", seed=3)
+    train, test = train_test_split(coo, 0.15, seed=4)
+    cfg = BMF.BMFConfig(K=p.K, n_samples=8, burnin=2)
+    part = partition(train, 3, 2)
+    key = jax.random.key(1)
+    r_stk = PP.run_pp(key, part, cfg, test, executor="stacked")
+    r_shd = PP.run_pp(key, part, cfg, test, executor="sharded")
+    print(json.dumps({"stacked": r_stk.rmse, "sharded": r_shd.rmse,
+                      "n_devices": len(jax.devices())}))
+""")
+
+
+@pytest.mark.slow
+def test_sharded_matches_stacked():
+    env = dict(os.environ, PYTHONPATH=str(ROOT / "src"))
+    out = subprocess.run([sys.executable, "-c", SHARDED_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=500)
+    assert out.returncode == 0, out.stderr[-3000:]
+    rec = __import__("json").loads(out.stdout.strip().splitlines()[-1])
+    assert rec["n_devices"] == 4
+    # same chains, sharded placement: parity (the 3x2 grid exercises both
+    # uneven bucket padding — phase b has 3 blocks over 4 devices — and
+    # multi-block-per-device batches)
+    assert abs(rec["stacked"] - rec["sharded"]) < 1e-4, rec
+
+
+# ---------------------------------------------------------------------------
+# occupancy-sorted partition (satellite: data.sparse wiring)
+# ---------------------------------------------------------------------------
+
+
+def test_partition_occupancy_sorts_within_stripes():
+    coo, _ = SYN.generate("mini", seed=5)
+    part = partition(coo, 2, 2, occupancy_sort=True)
+    from repro.data.sparse import apply_permutation
+    pc = apply_permutation(coo, part.row_perm, part.col_perm)
+    counts = np.bincount(pc.row, minlength=coo.n_rows)
+    for lo, hi in zip(part.row_splits[:-1], part.row_splits[1:]):
+        stripe = counts[lo:hi]
+        assert (np.diff(stripe) <= 0).all(), stripe[:10]
+    ccounts = np.bincount(pc.col, minlength=coo.n_cols)
+    for lo, hi in zip(part.col_splits[:-1], part.col_splits[1:]):
+        assert (np.diff(ccounts[lo:hi]) <= 0).all()
+
+
+def test_partition_occupancy_preserves_balance_and_nnz():
+    coo, _ = SYN.generate("mini", seed=6)
+    from repro.core.partition import nnz_balance_stats
+    p_sorted = partition(coo, 2, 2, occupancy_sort=True)
+    p_plain = partition(coo, 2, 2, occupancy_sort=False)
+    # stripe membership untouched -> identical per-block nnz balance
+    assert nnz_balance_stats(p_sorted) == nnz_balance_stats(p_plain)
+    assert sum(b.coo.nnz for b in p_sorted.all_blocks()) == coo.nnz
