@@ -1,24 +1,39 @@
-"""Phase-graph engine benchmark: serial vs stacked (vs sharded) execution
-of the SAME Posterior Propagation run.
+"""Phase-graph engine benchmark: serial vs stacked (vs sharded vs async)
+execution of the SAME Posterior Propagation run.
 
 The serial executor is the paper-reference loop — one jitted Gibbs call and
 one host sync per block. The stacked executor runs each phase shape bucket
-as ONE vmapped call; with >1 local device, the sharded executor spreads the
-bucket batch over a 'block' mesh. Chains are identical across executors
-(same keys, same padding), so RMSE parity is asserted here and the numbers
-isolate pure orchestration cost.
+as ONE vmapped call behind a hard phase barrier; with >1 local device, the
+sharded executor spreads the bucket batch over a 'block' mesh. The async
+executor replaces the barrier with dependency counters: each block
+dispatches the moment its propagated priors resolve, phase b and c overlap,
+input buffers are donated, and only tiny per-block scalars ever cross to
+the host. Chains are identical across executors (same keys, same padding),
+so RMSE parity is asserted here and the numbers isolate pure orchestration
+cost.
+
+``--skew S`` (S > 1) replaces the preset's balanced partition with an
+occupancy-SKEWED synthetic grid: expected block density falls off as
+S^-(i+j), and the partition keeps identity permutations (balance="none") so
+the skew survives. This is the worst case for barrier executors — every
+bucket is padded to its densest block and phase c waits on the slowest
+phase-b straggler — and the case the async executor is built for.
 
 Each executor gets one warmup run (compile) and ``--repeats`` timed runs;
-reported phase times are the per-phase minima over repeats.
+reported phase times are the per-phase minima over repeats. With
+``--json-out`` the run record is APPENDED to the file's "runs" list (one
+file accumulates the plain + skewed grids).
 
   PYTHONPATH=src:. python benchmarks/bench_pp_engine.py \
       --dataset movielens --blocks 8 --samples 20 \
+      --executors serial stacked async --skew 4 \
       --json-out BENCH_pp_engine.json
 """
 from __future__ import annotations
 
 import argparse
 import json
+from pathlib import Path
 
 import jax
 import numpy as np
@@ -27,9 +42,48 @@ from repro.core import bmf as BMF
 from repro.core import pp as PP
 from repro.core.partition import partition, suggest_grid
 from repro.data import synthetic as SYN
-from repro.data.sparse import train_test_split
+from repro.data.sparse import COO, train_test_split
 
 from benchmarks.common import emit
+
+
+def make_skewed(p: SYN.DatasetPreset, I: int, J: int, skew: float,
+                seed: int) -> COO:
+    """Occupancy-skewed grid: row stripe i draws nnz mass ∝ skew^-i (same
+    for col stripes), uniform within a stripe, so block (i,j) has expected
+    density ∝ skew^-(i+j) — block (0,0) is the dense corner, the far
+    interior is nearly empty. Values are low-rank + noise like the preset
+    generator (same scale clipping)."""
+    rng = np.random.default_rng(seed)
+    nnz = int(p.n_rows * p.ratings_per_row)
+    row_splits = np.linspace(0, p.n_rows, I + 1).astype(np.int64)
+    col_splits = np.linspace(0, p.n_cols, J + 1).astype(np.int64)
+
+    def stripe_draw(splits, n_strata, total):
+        w = skew ** -np.arange(n_strata, dtype=np.float64)
+        w /= w.sum()
+        stripe = rng.choice(n_strata, size=total, p=w)
+        lo, hi = splits[stripe], splits[stripe + 1]
+        return (lo + rng.random(total) * (hi - lo)).astype(np.int32)
+
+    rows = stripe_draw(row_splits, I, int(nnz * 1.6))
+    cols = stripe_draw(col_splits, J, int(nnz * 1.6))
+    key = rows.astype(np.int64) * p.n_cols + cols
+    _, uniq = np.unique(key, return_index=True)
+    uniq = uniq[:nnz]
+    rows, cols = rows[uniq], cols[uniq]
+
+    r = p.true_rank
+    scale_mid = 0.5 * (p.scale_lo + p.scale_hi)
+    spread = 0.5 * (p.scale_hi - p.scale_lo)
+    U = rng.normal(0, 1, (p.n_rows, r))
+    V = rng.normal(0, 1, (p.n_cols, r))
+    raw = np.einsum("ek,ek->e", U[rows], V[cols]) / np.sqrt(r)
+    vals = scale_mid + spread * 0.5 * raw + 0.35 * spread * rng.normal(
+        size=len(rows))
+    vals = np.clip(vals, p.scale_lo, p.scale_hi).astype(np.float32)
+    return COO(row=rows, col=cols, val=vals,
+               n_rows=p.n_rows, n_cols=p.n_cols)
 
 
 def run_one(executor: str, key, part, cfg, test, repeats: int):
@@ -39,13 +93,17 @@ def run_one(executor: str, key, part, cfg, test, repeats: int):
     timed = runs[1:]
     phases = {ph: min(r.phase_times_s[ph] for r in timed)
               for ph in timed[0].phase_times_s}
-    return {
+    rec = {
         "executor": executor,
         "rmse": timed[0].rmse,
         "wall_s": min(r.wall_time_s for r in timed),
         "phase_s": phases,
         "phase_bc_s": phases.get("b", 0.0) + phases.get("c", 0.0),
     }
+    if timed[0].block_spans_s:
+        best = min(timed, key=lambda r: r.wall_time_s)
+        rec["critical_path_s"] = best.critical_path_s()
+    return rec
 
 
 def main():
@@ -55,28 +113,43 @@ def main():
     ap.add_argument("--blocks", type=int, default=8)
     ap.add_argument("--samples", type=int, default=20)
     ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--skew", type=float, default=0.0,
+                    help=">1: occupancy-skewed grid (block density "
+                         "∝ skew^-(i+j), identity permutations)")
     ap.add_argument("--executors", nargs="+",
                     default=["serial", "stacked"],
-                    choices=["serial", "stacked", "sharded"])
+                    choices=["serial", "stacked", "sharded", "async"])
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args()
 
-    coo, p = SYN.generate(args.dataset, seed=51)
-    train, test = train_test_split(coo, 0.1, seed=52)
+    p = SYN.PRESETS[args.dataset]
     K = min(p.K, 16)
     cfg = BMF.BMFConfig(K=K, n_samples=args.samples,
                         burnin=args.samples // 3)
-    I, J = suggest_grid(train.n_rows, train.n_cols, args.blocks)
-    part = partition(train, I, J)
-    print(f"dataset={args.dataset} grid={I}x{J} K={K} "
+    if args.skew and args.skew > 1:
+        I, J = suggest_grid(p.n_rows, p.n_cols, args.blocks)
+        coo = make_skewed(p, I, J, args.skew, seed=51)
+        train, test = train_test_split(coo, 0.1, seed=52)
+        part = partition(train, I, J, balance="none")
+        grid_kind = f"skew{args.skew:g}"
+    else:
+        coo, p = SYN.generate(args.dataset, seed=51)
+        train, test = train_test_split(coo, 0.1, seed=52)
+        I, J = suggest_grid(train.n_rows, train.n_cols, args.blocks)
+        part = partition(train, I, J)
+        grid_kind = "balanced"
+    nnz_blocks = np.array([[b.coo.nnz for b in row] for row in part.blocks])
+    print(f"dataset={args.dataset} grid={I}x{J} K={K} kind={grid_kind} "
           f"samples={args.samples} devices={len(jax.devices())}")
+    print(f"block nnz: max={nnz_blocks.max()} min={nnz_blocks.min()} "
+          f"imbalance={nnz_blocks.max() / max(nnz_blocks.mean(), 1):.2f}x")
 
     key = jax.random.key(7)
     recs = []
     for ex in args.executors:
         rec = run_one(ex, key, part, cfg, test, args.repeats)
         recs.append(rec)
-        emit(f"pp_engine/{args.dataset}/{ex}", rec["wall_s"],
+        emit(f"pp_engine/{args.dataset}/{grid_kind}/{ex}", rec["wall_s"],
              f"rmse={rec['rmse']:.4f};phase_bc_s={rec['phase_bc_s']:.3f}")
         print(f"  {ex:8s} wall={rec['wall_s']:.2f}s "
               f"phases={ {k: round(v, 3) for k, v in rec['phase_s'].items()} } "
@@ -94,15 +167,37 @@ def main():
                                              / rec["phase_bc_s"])
         print(f"  {rec['executor']} vs serial: wall x{rec['speedup_vs_serial']:.2f}, "
               f"phases b+c x{rec['phase_bc_speedup_vs_serial']:.2f}")
+    stk = next((r for r in recs if r["executor"] == "stacked"), None)
+    asy = next((r for r in recs if r["executor"] == "async"), None)
+    if stk and asy:
+        asy["speedup_vs_stacked"] = stk["wall_s"] / asy["wall_s"]
+        print(f"  async vs stacked: wall x{asy['speedup_vs_stacked']:.2f} "
+              f"(barrier stalls removed)")
 
     if args.json_out:
-        with open(args.json_out, "w") as f:
-            json.dump({"benchmark": "pp_engine",
-                       "backend": jax.default_backend(),
-                       "n_devices": len(jax.devices()),
-                       "dataset": args.dataset, "grid": [I, J], "K": K,
-                       "samples": args.samples, "records": recs}, f, indent=2)
-        print("->", args.json_out)
+        run_rec = {"backend": jax.default_backend(),
+                   "n_devices": len(jax.devices()),
+                   "dataset": args.dataset, "grid": [I, J], "K": K,
+                   "grid_kind": grid_kind, "skew": args.skew or None,
+                   "nnz_imbalance":
+                       float(nnz_blocks.max() / max(nnz_blocks.mean(), 1)),
+                   "samples": args.samples, "records": recs}
+        out = Path(args.json_out)
+        doc = {"benchmark": "pp_engine", "runs": []}
+        if out.exists():
+            prev = json.loads(out.read_text())
+            # migrate the PR-2 single-run layout into the runs list
+            runs = prev.get("runs",
+                            [prev] if prev.get("records") else [])
+            doc["runs"] = [{k: v for k, v in r.items() if k != "benchmark"}
+                           for r in runs]
+        doc["runs"] = [r for r in doc["runs"]
+                       if not (r.get("dataset") == args.dataset
+                               and r.get("grid_kind",
+                                         "balanced") == grid_kind)]
+        doc["runs"].append(run_rec)
+        out.write_text(json.dumps(doc, indent=2))
+        print("->", out)
 
 
 if __name__ == "__main__":

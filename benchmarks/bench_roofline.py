@@ -8,7 +8,17 @@ Default mode reads the LLM dry-run artifact JSON and emits one row per
 the XLA-gather baseline (``--use-kernel both``, the default, does both in
 one run), reporting jaxpr FLOPs, HBM byte estimate, the LARGEST live
 buffer (the (N, M, K) gathered tensor shows up only in the baseline), and
-the measured wall-clock per call on this host."""
+the measured wall-clock per call on this host.
+
+``--gibbs-peak`` measures the PEAK LIVE device-buffer footprint of a full
+PP run under the stacked and async executors, donation off vs on: every
+``run_gibbs``/``run_gibbs_stacked`` dispatch samples
+``sum(nbytes over jax.live_arrays())``, and each run's phase-c chain
+executable is additionally lowered both ways to record XLA's own buffer
+assignment (argument+temp+output−alias = the effective per-dispatch peak;
+donation turns U0/V0 into in-place aliases of the U/V outputs). The async
+executor's per-block dispatch also holds ~1/B of the stacked bucket's
+input planes at a time, which is the larger live-footprint lever."""
 from __future__ import annotations
 
 import argparse
@@ -78,16 +88,187 @@ def run_bmf(datasets, use_kernel: str = "both"):
     return rows
 
 
+def _xla_chain_peak(shapes, n_blocks: int, cfg, stacked: bool, donate: bool,
+                    has_priors: bool):
+    """Lower the engine's chain executable at one bucket's shapes and read
+    XLA's buffer assignment: effective peak = arg + temp + out − alias
+    (aliased donations are written in place, not double-counted)."""
+    import warnings
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import gibbs as GIBBS
+    from repro.core.posterior import RowGaussians
+
+    K = cfg.K
+    S = jax.ShapeDtypeStruct
+    lead = (n_blocks,) if stacked else ()
+    N, D, M, Mc, T = (shapes.n_rows, shapes.n_cols, shapes.m_rows,
+                      shapes.m_cols, shapes.n_test)
+    csr_r = (S(lead + (N, M), jnp.int32), S(lead + (N, M), jnp.float32),
+             S(lead + (N, M), jnp.float32))
+    csr_c = (S(lead + (D, Mc), jnp.int32), S(lead + (D, Mc), jnp.float32),
+             S(lead + (D, Mc), jnp.float32))
+    tst = S(lead + (T,), jnp.int32)
+    prior_u = prior_v = None
+    if has_priors:
+        prior_u = RowGaussians(eta=S(lead + (N, K), jnp.float32),
+                               Lambda=S(lead + (N, K, K), jnp.float32))
+        prior_v = RowGaussians(eta=S(lead + (D, K), jnp.float32),
+                               Lambda=S(lead + (D, K, K), jnp.float32))
+    u0, v0 = S(lead + (N, K), jnp.float32), S(lead + (D, K), jnp.float32)
+    sc = S((), jnp.int32)
+    cfg_key = cfg._replace(n_samples=0, burnin=0, phase_bc_samples=None)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        if stacked:
+            fn = (GIBBS._run_gibbs_stacked_jit_donated if donate
+                  else GIBBS._run_gibbs_stacked_jit)
+            traced = fn.trace(S((n_blocks, 2), jnp.uint32), csr_r, csr_c,
+                              tst, tst, cfg_key, D, N, sc, sc,
+                              prior_u, prior_v, u0, v0, mesh=None)
+        else:
+            fn = (GIBBS._run_gibbs_jit_donated if donate
+                  else GIBBS._run_gibbs_jit)
+            traced = fn.trace(jax.eval_shape(lambda: jax.random.key(0)),
+                              csr_r, csr_c, tst, tst, cfg_key, D, N,
+                              sc, sc, prior_u, prior_v, u0, v0)
+        ma = traced.lower().compile().memory_analysis()
+    eff = (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+           + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+    return {"argument_mb": ma.argument_size_in_bytes / 2**20,
+            "temp_mb": ma.temp_size_in_bytes / 2**20,
+            "output_mb": ma.output_size_in_bytes / 2**20,
+            "alias_mb": ma.alias_size_in_bytes / 2**20,
+            "effective_peak_mb": eff / 2**20}
+
+
+def run_gibbs_peak(datasets, samples: int = 10, blocks: int = 4,
+                   json_out=None):
+    """Peak live-buffer bytes of a PP run: stacked/async × donate off/on."""
+    import gc
+
+    import jax
+
+    from repro.core import bmf as BMF
+    from repro.core import engine as ENG
+    from repro.core import gibbs as GIBBS
+    from repro.core import pp as PP
+    from repro.core.partition import partition, suggest_grid
+    from repro.data import synthetic as SYN
+    from repro.data.sparse import apply_permutation, train_test_split
+
+    def live_bytes():
+        return sum(a.nbytes for a in jax.live_arrays()
+                   if not a.is_deleted())
+
+    rows = []
+    for d in datasets:
+        coo, p = SYN.generate(d, seed=51)
+        train, test = train_test_split(coo, 0.1, seed=52)
+        K = min(p.K, 16)
+        cfg = BMF.BMFConfig(K=K, n_samples=samples, burnin=samples // 3)
+        I, J = suggest_grid(train.n_rows, train.n_cols, blocks)
+        part = partition(train, I, J)
+
+        # XLA buffer assignment for the busiest bucket's chain executable
+        test_p = apply_permutation(test, part.row_perm, part.col_perm)
+        buckets = PP.BlockShapes.per_phase(part, test_p)
+        tag = "c" if "c" in buckets else max(
+            buckets, key=lambda t: sum(1 for b in part.all_blocks()
+                                       if b.phase == t))
+        n_tag = sum(1 for b in part.all_blocks() if b.phase == tag)
+        for stacked in (True, False):
+            kind = "stacked_bucket" if stacked else "async_block"
+            for donate in (False, True):
+                ma = _xla_chain_peak(buckets[tag], n_tag, cfg,
+                                     stacked=stacked, donate=donate,
+                                     has_priors=(tag != "a"))
+                rec = {"dataset": d, "kind": kind, "bucket": tag,
+                       "n_blocks": n_tag, "donate": donate, **ma}
+                rows.append(rec)
+                emit(f"gibbs_xla_peak/{d}/{kind}/donate={int(donate)}",
+                     0.0,
+                     f"effective_peak_mb={ma['effective_peak_mb']:.2f};"
+                     f"alias_mb={ma['alias_mb']:.2f};"
+                     f"temp_mb={ma['temp_mb']:.2f}")
+                print(f"  {d} {kind:14s} donate={int(donate)} "
+                      f"xla effective peak={ma['effective_peak_mb']:.2f}MB "
+                      f"(alias {ma['alias_mb']:.2f}MB)")
+
+        for ex_name, make in (("stacked", ENG.StackedExecutor),
+                              ("async", ENG.AsyncExecutor)):
+            for donate in (False, True):
+                peak = {"v": 0}
+
+                def sample():
+                    peak["v"] = max(peak["v"], live_bytes())
+
+                orig_g, orig_s = GIBBS.run_gibbs, GIBBS.run_gibbs_stacked
+
+                def g(*a, **k):
+                    r = orig_g(*a, **k)
+                    sample()        # post-dispatch: donated inputs already
+                    return r        # invalidated, others still held
+
+                def s(*a, **k):
+                    r = orig_s(*a, **k)
+                    sample()
+                    return r
+
+                GIBBS.run_gibbs, GIBBS.run_gibbs_stacked = g, s
+                try:
+                    gc.collect()
+                    base = live_bytes()
+                    res = PP.run_pp(jax.random.key(7), part, cfg, test,
+                                    executor=make(donate=donate))
+                    jax.block_until_ready((res.U_agg, res.V_agg))
+                finally:
+                    GIBBS.run_gibbs, GIBBS.run_gibbs_stacked = orig_g, orig_s
+                rec = {"dataset": d, "executor": ex_name, "donate": donate,
+                       "rmse": res.rmse,
+                       "baseline_mb": base / 2**20,
+                       "peak_live_mb": peak["v"] / 2**20,
+                       "delta_mb": (peak["v"] - base) / 2**20}
+                del res
+                rows.append(rec)
+                emit(f"gibbs_peak/{d}/{ex_name}/donate={int(donate)}",
+                     0.0,
+                     f"peak_live_mb={rec['peak_live_mb']:.1f};"
+                     f"delta_mb={rec['delta_mb']:.1f};"
+                     f"rmse={rec['rmse']:.4f}")
+                print(f"  {d} {ex_name:8s} donate={int(donate)} "
+                      f"peak_live={rec['peak_live_mb']:.1f}MB "
+                      f"(+{rec['delta_mb']:.1f}MB over baseline)")
+    if json_out:
+        Path(json_out).write_text(json.dumps(
+            {"benchmark": "gibbs_peak", "samples": samples,
+             "blocks": blocks, "records": rows}, indent=2))
+        print("->", json_out)
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--path", default=str(DEFAULT))
     ap.add_argument("--mesh", default="single", choices=["single", "multi"])
     ap.add_argument("--bmf", action="store_true",
                     help="roofline the BMF sufficient-stats hot path")
+    ap.add_argument("--gibbs-peak", action="store_true",
+                    help="peak live-buffer bytes of a PP run, "
+                         "stacked/async x donation off/on")
+    ap.add_argument("--samples", type=int, default=10)
+    ap.add_argument("--blocks", type=int, default=4)
+    ap.add_argument("--json-out", default=None)
     ap.add_argument("--datasets", nargs="+", default=["movielens"])
     ap.add_argument("--use-kernel", choices=["on", "off", "both"],
                     default="both")
     args = ap.parse_args()
+    if args.gibbs_peak:
+        run_gibbs_peak(args.datasets, samples=args.samples,
+                       blocks=args.blocks, json_out=args.json_out)
+        return
     if args.bmf:
         run_bmf(args.datasets, args.use_kernel)
         return

@@ -44,6 +44,23 @@ def make_block_mesh(n_devices: Optional[int] = None) -> Mesh:
     return jax.make_mesh((n,), ("block",))
 
 
+def stream_devices(block_mesh=None):
+    """Ordered device list for the AsyncExecutor's per-device streams.
+
+    The async scheduler composes with the 'block' mesh differently from the
+    sharded executor: instead of ONE shard_mapped bucket call spanning the
+    mesh, each ready block is dispatched as its own executable onto the
+    next device round-robin — every device runs an independent stream and
+    the dependency counters (not a batch barrier) decide what lands where.
+    Accepts a Mesh (any axis names; devices are taken flattened), an
+    explicit device sequence, or None for all local devices."""
+    if block_mesh is None:
+        return tuple(jax.devices())
+    if hasattr(block_mesh, "devices"):        # jax Mesh (devices: np.ndarray)
+        return tuple(block_mesh.devices.flat)
+    return tuple(block_mesh)
+
+
 def _pad_rows(arr, mult):
     n = arr.shape[0]
     pad = (-n) % mult

@@ -23,26 +23,47 @@ and executes it through a pluggable ``Executor``:
                    'block' device mesh: same-phase blocks genuinely run
                    concurrently on separate devices with NO collectives
                    inside a phase — the paper's deployment model, on-device.
+  AsyncExecutor    dependency-driven overlap: readiness counters over
+                   ``BlockTask.deps`` dispatch each block's jitted chain the
+                   moment its row/col prior posteriors resolve, riding JAX
+                   async dispatch — phase-c blocks whose phase-b sources
+                   finished early start while the rest of phase b is still
+                   running. No ``block_until_ready`` until the final
+                   aggregation; completion is detected by non-blocking
+                   ``is_ready()`` polls on tiny per-block squared-error
+                   scalars. Posterior summaries stay device-resident
+                   between phases, padded input buffers are donated to XLA
+                   (``gibbs.run_gibbs(donate=True)``), and with >1 local
+                   device each dispatch lands on the next device
+                   round-robin: per-device streams instead of one sharded
+                   bucket (``distributed.stream_devices``).
 
 Executor contract
 -----------------
-``run_phase(ctx, phase, tasks) -> {(i, j): BlockOutcome}`` must return one
-outcome per task. The engine only calls ``run_phase`` once every task's
-dependencies (``BlockTask.deps``) are resolved in ``ctx.U_posts`` /
-``ctx.V_posts``, so executors read priors via ``ctx.priors(task)`` and never
-reason about ordering. Executors never aggregate: ``run_phase_graph`` owns
-phase sequencing, RMSE accumulation, and the Qin-et-al. divide-away
-aggregation (``pp._aggregate_axis``).
+``run_graph(ctx, graph, verbose) -> (outcomes, phase_times_s, spans)`` owns
+ordering: it must write each block's posterior summaries into ``ctx.U_posts``
+/ ``ctx.V_posts`` before any dependent reads them via ``ctx.priors(task)``.
+Barrier executors get that for free from the default implementation, which
+runs ``run_phase(ctx, phase, tasks) -> {(i, j): BlockOutcome}`` once per
+phase after asserting every dep resolved; the async executor replaces the
+whole loop with its dependency-counting scheduler. Executors never
+aggregate: ``run_phase_graph`` owns RMSE accumulation and the Qin-et-al.
+divide-away aggregation (``pp._aggregate_axis``, one jitted device-resident
+reduction).
 
 Note on timings: SerialExecutor measures true per-block seconds;
 Stacked/Sharded report bucket wall time split evenly across the bucket's
-blocks (one executable runs them all), so ``PPResult.modeled_parallel_s``
-stays defined but the interesting number there is the *measured* phase
-wall time in ``PPResult.phase_times_s``.
+blocks (one executable runs them all) — the interesting number there is the
+*measured* phase wall time in ``PPResult.phase_times_s``. AsyncExecutor
+records true dispatch→resolve spans per block (``PPResult.block_spans_s``);
+because phases overlap, its per-phase times are first-dispatch→last-resolve
+envelopes and may sum to more than the wall time —
+``PPResult.critical_path_s()`` is the honest aggregate.
 """
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -103,7 +124,10 @@ def build_phase_graph(part: Partition) -> List[Tuple[str, List[BlockTask]]]:
 class PhaseContext:
     """Run state shared with executors: inputs (partition, config, permuted
     test set, per-block keys, shape buckets) plus the posterior store that
-    carries summaries across phase boundaries."""
+    carries summaries across phase boundaries. The store holds DEVICE
+    arrays end to end — executors write device-resident summaries, the
+    engine aggregates them in one jitted reduction, and nothing round-trips
+    through the host between phases."""
     part: Partition
     cfg: BMF.BMFConfig
     test_p: COO
@@ -131,8 +155,15 @@ class PhaseContext:
 class BlockOutcome:
     U_post: RowGaussians       # trimmed to the block's true row count
     V_post: RowGaussians       # trimmed to the block's true col count
-    pred_mean: np.ndarray      # (bucket n_test,) posterior-mean predictions
+    # (bucket n_test,) posterior-mean predictions — None on the async path,
+    # which reports squared error through the sq_err scalar instead
+    pred_mean: Optional[np.ndarray]
     seconds: float
+    # device-resident RMSE channel (async path): a tiny on-device scalar of
+    # Σ(pred-val)² over the block's true test entries + their count. When
+    # set, the engine never touches pred_mean.
+    sq_err: Optional[jax.Array] = None
+    n_obs: int = 0
 
 
 def _outcome(res: GIBBS.GibbsResult, blk, seconds: float) -> BlockOutcome:
@@ -147,13 +178,56 @@ def _outcome(res: GIBBS.GibbsResult, blk, seconds: float) -> BlockOutcome:
         pred_mean=pred, seconds=seconds)
 
 
+@jax.jit
+def _block_sq_err(pred_sum, pred_cnt, vals, mask):
+    """Masked Σ(pred-val)² — the per-block completion/RMSE scalar."""
+    err = (pred_sum / jnp.maximum(pred_cnt, 1.0) - vals) * mask
+    return jnp.vdot(err, err)
+
+
 class Executor:
-    """Runs all blocks of ONE phase; never crosses a phase boundary."""
+    """Runs the PP phase graph; subclasses choose the schedule."""
     name = "base"
+    devices: Tuple = ()    # AsyncExecutor's per-device streams
 
     def run_phase(self, ctx: PhaseContext, phase: str,
                   tasks: Sequence[BlockTask]) -> Dict[Coord, BlockOutcome]:
         raise NotImplementedError
+
+    def run_graph(self, ctx: PhaseContext, graph, verbose: bool = False):
+        """Default barrier schedule: phases strictly in order, one
+        ``run_phase`` call each, posterior store updated at the phase
+        boundary. Returns ``(outcomes, phase_times_s, spans)``; spans is
+        empty — per-block dispatch→resolve timing only exists under an
+        overlapped schedule."""
+        outcomes: Dict[Coord, BlockOutcome] = {}
+        phase_times: Dict[str, float] = {}
+        for phase, tasks in graph:
+            missing = {d for t in tasks for d in t.deps} - set(ctx.U_posts)
+            assert not missing, f"phase {phase} scheduled before {missing}"
+            t0 = time.time()
+            outs = self.run_phase(ctx, phase, tasks)
+            dt = time.time() - t0
+            phase_times[phase] = dt
+            dropped = {t.coord for t in tasks} - set(outs)
+            assert not dropped, f"executor {self.name} dropped blocks {dropped}"
+            for t in tasks:
+                ctx.U_posts[t.coord] = outs[t.coord].U_post
+                ctx.V_posts[t.coord] = outs[t.coord].V_post
+            outcomes.update(outs)
+            if verbose:
+                print(f"[pp:{self.name}] phase {phase}: {len(tasks)} "
+                      f"block(s) {_phase_desc(ctx, tasks)} {dt:.2f}s",
+                      flush=True)
+        return outcomes, phase_times, {}
+
+
+def _phase_desc(ctx: PhaseContext, tasks: Sequence[BlockTask]) -> str:
+    tags = [g for g in _TAG_ORDER if any(t.phase == g for t in tasks)]
+    return " ".join(
+        f"{g}[{sum(1 for t in tasks if t.phase == g)}blk "
+        f"{ctx.shapes[g].n_rows}x{ctx.shapes[g].n_cols} "
+        f"m={ctx.shapes[g].m_rows}/{ctx.shapes[g].m_cols}]" for g in tags)
 
 
 class SerialExecutor(Executor):
@@ -185,7 +259,7 @@ def _task_leaves(ctx: PhaseContext, task: BlockTask):
     stacked chains are identical to serial ones by construction."""
     blk = ctx.part.block(task.i, task.j)
     up, vp = ctx.priors(task)
-    csr_r, csr_c, tr, tc, up, vp = PP.pad_block_inputs(
+    csr_r, csr_c, tr, tc, _, _, up, vp = PP.pad_block_inputs(
         blk, ctx.shapes[task.phase], ctx.cfg.K, ctx.test_p, up, vp)
     return ((csr_r.idx, csr_r.val, csr_r.mask),
             (csr_c.idx, csr_c.val, csr_c.mask),
@@ -198,9 +272,14 @@ def _stack_trees(trees):
 
 class StackedExecutor(Executor):
     """One jitted vmapped Gibbs call per phase shape bucket: all blocks of
-    the bucket run as a leading batch axis inside a single executable."""
+    the bucket run as a leading batch axis inside a single executable.
+    The stacked input leaves are donated to XLA by default (they are
+    per-bucket copies nothing else holds)."""
     name = "stacked"
     block_mesh = None      # ShardedExecutor sets this
+
+    def __init__(self, donate: bool = True):
+        self.donate = donate
 
     def run_phase(self, ctx, phase, tasks):
         out: Dict[Coord, BlockOutcome] = {}
@@ -239,7 +318,8 @@ class StackedExecutor(Executor):
             PaddedCSR(*rows_arrs, n_cols=s.n_cols),
             PaddedCSR(*cols_arrs, n_cols=s.n_rows),
             test_rows, test_cols, ctx.block_cfg(group[0]),
-            U_prior=up, V_prior=vp, block_mesh=self.block_mesh)
+            U_prior=up, V_prior=vp, block_mesh=self.block_mesh,
+            donate=self.donate)
         jax.block_until_ready(res.U)
         per = (time.time() - t0) / len(group)
         out = {}
@@ -258,11 +338,173 @@ class ShardedExecutor(StackedExecutor):
     communication budget."""
     name = "sharded"
 
-    def __init__(self, block_mesh=None):
+    def __init__(self, block_mesh=None, donate: bool = True):
+        super().__init__(donate=donate)
         if block_mesh is None:
             from repro.core.distributed import make_block_mesh
             block_mesh = make_block_mesh()
         self.block_mesh = block_mesh
+
+
+class AsyncExecutor(Executor):
+    """Dependency-driven overlapped schedule riding JAX async dispatch.
+
+    Readiness counters over ``BlockTask.deps`` replace the phase barrier:
+    each block is dispatched (one jitted per-block chain, the SAME bucketed
+    executable the serial executor compiles — ≤4 compilations per run) the
+    moment both of its prior sources have resolved, so phase-c blocks whose
+    phase-b dependencies finished early start while the slowest phase-b
+    bucket is still running. The host never blocks on bulk results:
+
+      * completion detection polls ``is_ready()`` on a per-block scalar
+        (masked Σ(pred-val)², doubling as the block's RMSE numerator) and
+        only falls back to blocking on the OLDEST in-flight scalar when
+        nothing has resolved — the device queue keeps draining either way;
+      * posterior summaries (trimmed device slices) go straight into the
+        context store and feed successors without touching the host;
+      * padded per-block input buffers are donated to XLA
+        (``run_gibbs(donate=True)``): U0/V0 are rewritten in place as the
+        U/V outputs, the rest is released at dispatch where the runtime
+        supports it — and holding ONE block's planes at a time instead of a
+        whole stacked bucket is itself the larger live-footprint cut
+        (``bench_roofline --gibbs-peak`` measures both);
+      * with >1 device, dispatches round-robin over
+        ``distributed.stream_devices(block_mesh)``: per-device streams, so
+        ready blocks genuinely overlap across devices with zero intra-phase
+        collectives (priors device_put to the target stream are the
+        phase-boundary O(K²) summaries — the paper's whole budget).
+
+    ``record_trace=True`` appends ("dispatch"|"resolve", coord) events to
+    ``self.trace`` in real order; the stress tests use it to assert no
+    block ever dispatches before its dependencies resolved.
+    ``_is_resolved`` is the completion-detection seam tests override to
+    fake arbitrary completion orders.
+    """
+    name = "async"
+
+    def __init__(self, donate: bool = True, block_mesh=None,
+                 record_trace: bool = False):
+        from repro.core.distributed import stream_devices
+        self.donate = donate
+        self.devices = stream_devices(block_mesh)
+        self.record_trace = record_trace
+        self.trace: List[Tuple[str, Coord]] = []
+        self._n_dispatched = 0
+
+    def run_phase(self, ctx, phase, tasks):
+        raise NotImplementedError(
+            "AsyncExecutor overlaps phases — it schedules whole graphs "
+            "(run_graph), not single phases")
+
+    # -- completion-detection seam (tests fake completion order here) -----
+    def _is_resolved(self, coord: Coord, signal) -> bool:
+        return signal.is_ready()
+
+    def _record(self, event: str, coord: Coord):
+        if self.record_trace:
+            self.trace.append((event, coord))
+
+    def run_graph(self, ctx, graph, verbose: bool = False):
+        tasks = {t.coord: t for _, ts in graph for t in ts}
+        phase_of = {t.coord: ph for ph, ts in graph for t in ts}
+        waiting = {c: len(t.deps) for c, t in tasks.items()}
+        succ: Dict[Coord, List[Coord]] = {c: [] for c in tasks}
+        for t in tasks.values():
+            for d in t.deps:
+                succ[d].append(t.coord)
+        ready = deque(c for c, w in waiting.items() if w == 0)
+        inflight: Dict[Coord, Tuple] = {}   # coord -> (signal, outcome, t_d)
+        outcomes: Dict[Coord, BlockOutcome] = {}
+        spans: Dict[Coord, Tuple[float, float]] = {}
+        first_d: Dict[str, float] = {}
+        last_r: Dict[str, float] = {}
+        remaining = {ph: len(ts) for ph, ts in graph}
+        t0 = time.time()
+        while ready or inflight:
+            while ready:
+                c = ready.popleft()
+                self._record("dispatch", c)
+                td = time.time()
+                signal, out = self._dispatch(ctx, tasks[c])
+                inflight[c] = (signal, out, td)
+                first_d.setdefault(phase_of[c], td - t0)
+            resolved = [c for c, (sig, _, _) in inflight.items()
+                        if self._is_resolved(c, sig)]
+            if not resolved:
+                # nothing observably done: block the HOST on the oldest
+                # in-flight scalar (tiny device_get); the device queue keeps
+                # executing every already-dispatched block meanwhile
+                oldest = next(iter(inflight))
+                jax.block_until_ready(inflight[oldest][0])
+                resolved = [oldest]
+            for c in resolved:
+                signal, out, td = inflight.pop(c)
+                tr = time.time()
+                self._record("resolve", c)
+                out.seconds = tr - td
+                spans[c] = (td - t0, tr - t0)
+                outcomes[c] = out
+                ph = phase_of[c]
+                remaining[ph] -= 1
+                last_r[ph] = tr - t0
+                if verbose and remaining[ph] == 0:
+                    ts = [t for t in tasks.values() if phase_of[t.coord] == ph]
+                    print(f"[pp:{self.name}] phase {ph}: {len(ts)} block(s) "
+                          f"{_phase_desc(ctx, ts)} "
+                          f"{last_r[ph] - first_d[ph]:.2f}s "
+                          f"(dispatch→resolve envelope; phases overlap)",
+                          flush=True)
+                for s in succ[c]:
+                    waiting[s] -= 1
+                    if waiting[s] == 0:
+                        ready.append(s)
+        # per-phase envelopes: first dispatch → last resolve. Phases
+        # overlap, so these may sum to MORE than the wall time.
+        phase_times = {ph: last_r[ph] - first_d[ph] for ph in first_d}
+        return outcomes, phase_times, spans
+
+    def _dispatch(self, ctx: PhaseContext, task: BlockTask):
+        """Dispatch one block's jitted chain without waiting for anything:
+        inputs may still be computing (JAX chains the dataflow) and no
+        output is synced. Returns (completion scalar, device outcome)."""
+        blk = ctx.part.block(task.i, task.j)
+        s = ctx.shapes[task.phase]
+        up, vp = ctx.priors(task)
+        csr_r, csr_c, tr, tc, tv, tmask, up, vp = PP.pad_block_inputs(
+            blk, s, ctx.cfg.K, ctx.test_p, up, vp)
+        n_obs = int(tmask.sum())
+        key = ctx.keys[task.i, task.j]
+        if len(self.devices) > 1:
+            dev = self.devices[self._n_dispatched % len(self.devices)]
+            # per-device streams: the block's padded planes plus the O(K²)
+            # prior summaries move to the target stream — the latter IS the
+            # paper's phase-boundary communication, made explicit
+            (ra, ca, tr, tc, up, vp, tv, tmask, key) = jax.device_put(
+                ((csr_r.idx, csr_r.val, csr_r.mask),
+                 (csr_c.idx, csr_c.val, csr_c.mask),
+                 tr, tc, up, vp, tv, tmask, key), dev)
+            csr_r = PaddedCSR(*ra, n_cols=csr_r.n_cols)
+            csr_c = PaddedCSR(*ca, n_cols=csr_c.n_cols)
+        self._n_dispatched += 1
+        res = GIBBS.run_gibbs(key, csr_r, csr_c,
+                              jnp.asarray(tr), jnp.asarray(tc),
+                              ctx.block_cfg(task), U_prior=up, V_prior=vp,
+                              donate=self.donate)
+        nr, nc = len(blk.row_ids), len(blk.col_ids)
+        U_post = RowGaussians(eta=res.U_post.eta[:nr],
+                              Lambda=res.U_post.Lambda[:nr])
+        V_post = RowGaussians(eta=res.V_post.eta[:nc],
+                              Lambda=res.V_post.Lambda[:nc])
+        sq = _block_sq_err(res.acc.pred_sum, res.acc.pred_cnt,
+                           jnp.asarray(tv), jnp.asarray(tmask))
+        # device-resident store write happens AT DISPATCH: successors (and
+        # the final jitted aggregation) consume these handles as dataflow
+        ctx.U_posts[task.coord] = U_post
+        ctx.V_posts[task.coord] = V_post
+        out = BlockOutcome(U_post=U_post, V_post=V_post,
+                           pred_mean=None, seconds=0.0,
+                           sq_err=sq, n_obs=n_obs)
+        return sq, out
 
 
 def make_executor(spec, distributed_mesh=None, block_mesh=None) -> Executor:
@@ -284,8 +526,10 @@ def make_executor(spec, distributed_mesh=None, block_mesh=None) -> Executor:
         return StackedExecutor()
     if spec == "sharded":
         return ShardedExecutor(block_mesh)
+    if spec == "async":
+        return AsyncExecutor(block_mesh=block_mesh)
     raise ValueError(f"unknown executor {spec!r} "
-                     "(expected serial | stacked | sharded)")
+                     "(expected serial | stacked | sharded | async)")
 
 
 def run_phase_graph(key, part: Partition, cfg: BMF.BMFConfig, test: COO,
@@ -300,43 +544,38 @@ def run_phase_graph(key, part: Partition, cfg: BMF.BMFConfig, test: COO,
     ctx = PhaseContext(part=part, cfg=cfg, test_p=test_p, keys=keys,
                        shapes=shapes)
 
+    graph = build_phase_graph(part)
+    outcomes, phase_times, spans = executor.run_graph(ctx, graph,
+                                                      verbose=verbose)
+
     sq_err, n_test = 0.0, 0
     per_block_rmse = np.zeros((I, J))
-    phase_times: Dict[str, float] = {}
     block_times: Dict[Coord, float] = {}
-
-    for phase, tasks in build_phase_graph(part):
-        missing_deps = {d for t in tasks for d in t.deps} - set(ctx.U_posts)
-        assert not missing_deps, f"phase {phase} scheduled before {missing_deps}"
-        t0 = time.time()
-        outcomes = executor.run_phase(ctx, phase, tasks)
-        dt = time.time() - t0
-        phase_times[phase] = dt
-        dropped = {t.coord for t in tasks} - set(outcomes)
-        assert not dropped, f"executor {executor.name} dropped blocks {dropped}"
+    for _, tasks in graph:
         for t in tasks:
             o = outcomes[t.coord]
-            ctx.U_posts[t.coord] = o.U_post
-            ctx.V_posts[t.coord] = o.V_post
             block_times[t.coord] = o.seconds
-            blk = part.block(t.i, t.j)
-            _, _, tv = PP._block_test(test_p, blk)
-            if len(tv):
-                err = o.pred_mean[:len(tv)] - tv
-                sq_err += float(np.sum(err ** 2))
-                n_test += len(tv)
-                per_block_rmse[t.i, t.j] = float(np.sqrt(np.mean(err ** 2)))
-        if verbose:
-            tags = [g for g in _TAG_ORDER if any(t.phase == g for t in tasks)]
-            desc = " ".join(
-                f"{g}[{sum(1 for t in tasks if t.phase == g)}blk "
-                f"{shapes[g].n_rows}x{shapes[g].n_cols} "
-                f"m={shapes[g].m_rows}/{shapes[g].m_cols}]" for g in tags)
-            print(f"[pp:{executor.name}] phase {phase}: {len(tasks)} block(s) "
-                  f"{desc} {dt:.2f}s", flush=True)
+            if o.sq_err is not None:
+                # device-resident path: only the tiny scalar crosses to host
+                n, sq = o.n_obs, float(o.sq_err)
+            else:
+                blk = part.block(t.i, t.j)
+                _, _, tv = PP._block_test(test_p, blk)
+                n = len(tv)
+                sq = float(np.sum((np.asarray(o.pred_mean[:n]) - tv) ** 2)) \
+                    if n else 0.0
+            if n:
+                sq_err += sq
+                n_test += n
+                per_block_rmse[t.i, t.j] = float(np.sqrt(sq / n))
 
     U_posts = [[ctx.U_posts[(i, j)] for j in range(J)] for i in range(I)]
     V_posts = [[ctx.V_posts[(i, j)] for j in range(J)] for i in range(I)]
+    if len(executor.devices) > 1:
+        # per-device streams leave posteriors scattered; colocate for the
+        # single jitted aggregation executable
+        U_posts, V_posts = jax.device_put((U_posts, V_posts),
+                                          executor.devices[0])
     U_agg = PP._aggregate_axis(part, U_posts, axis="row")
     V_agg = PP._aggregate_axis(part, V_posts, axis="col")
 
@@ -345,4 +584,5 @@ def run_phase_graph(key, part: Partition, cfg: BMF.BMFConfig, test: COO,
                        per_block_rmse=per_block_rmse,
                        wall_time_s=time.time() - t_start,
                        phase_times_s=phase_times, n_test=n_test,
-                       block_times_s=block_times, executor=executor.name)
+                       block_times_s=block_times, executor=executor.name,
+                       block_spans_s=spans)

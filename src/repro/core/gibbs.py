@@ -11,6 +11,8 @@ sums (for Posterior Propagation summarization).
 """
 from __future__ import annotations
 
+import contextlib
+import warnings
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -47,19 +49,42 @@ def _summarize(sum_, outer, cnt, ridge=1e-4):
     return POST.from_moments_cov(mean, cov, ridge=ridge)
 
 
-from functools import partial
-
-
-@partial(jax.jit, static_argnames=("cfg", "n_cols_r", "n_cols_c"))
-def _run_gibbs_jit(key, csr_rows_arrs, csr_cols_arrs, test_rows, test_cols,
-                   cfg, n_cols_r, n_cols_c, n_samples, burnin,
-                   U_prior, V_prior, U0, V0):
+def _run_gibbs_dispatch(key, csr_rows_arrs, csr_cols_arrs, test_rows,
+                        test_cols, cfg, n_cols_r, n_cols_c, n_samples, burnin,
+                        U_prior, V_prior, U0, V0):
     # n_samples/burnin are traced: one executable serves any chain length
     # (warm-up runs, reduced phase-b/c chains, ...)
     csr_rows = PaddedCSR(*csr_rows_arrs, n_cols=n_cols_r)
     csr_cols = PaddedCSR(*csr_cols_arrs, n_cols=n_cols_c)
     return _run_gibbs_impl(key, csr_rows, csr_cols, test_rows, test_cols,
                            cfg, n_samples, burnin, U_prior, V_prior, U0, V0)
+
+
+_STATIC = ("cfg", "n_cols_r", "n_cols_c")
+# Donated positions: the padded CSR planes, test indices, and the factor
+# initializations — all per-call buffers the caller never reuses (U0/V0
+# additionally alias the U/V outputs exactly). Priors are deliberately NOT
+# donated: PP shares one propagated posterior across every block of a
+# row/col group and reads it again at final aggregation, so donating it
+# from one block's dispatch would invalidate the others' inputs.
+_DONATE_SINGLE = (1, 2, 3, 4, 12, 13)
+
+_run_gibbs_jit = jax.jit(_run_gibbs_dispatch, static_argnames=_STATIC)
+_run_gibbs_jit_donated = jax.jit(_run_gibbs_dispatch, static_argnames=_STATIC,
+                                 donate_argnums=_DONATE_SINGLE)
+
+
+@contextlib.contextmanager
+def _quiet_donation():
+    """The CSR planes/test indices have no same-shape output to alias, so
+    XLA notes them as 'not usable' — expected: on TPU/GPU their donation
+    still invalidates the caller's handle at dispatch (allocator churn);
+    the CPU runtime ignores unusable donations. U0/V0 alias the U/V
+    outputs on every backend."""
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        yield
 
 
 def run_gibbs(key,
@@ -71,7 +96,8 @@ def run_gibbs(key,
               U_prior: Optional[RowGaussians] = None,
               V_prior: Optional[RowGaussians] = None,
               U0: Optional[jnp.ndarray] = None,
-              V0: Optional[jnp.ndarray] = None) -> GibbsResult:
+              V0: Optional[jnp.ndarray] = None,
+              donate: bool = False) -> GibbsResult:
     """Run cfg.n_samples sweeps (cfg.burnin of them discarded).
 
     U_prior / V_prior: propagated per-row priors (PP phases b/c). When None,
@@ -80,6 +106,15 @@ def run_gibbs(key,
     The whole chain is one cached jitted executable keyed on (shapes, cfg) —
     the PP scheduler buckets all blocks to common shapes precisely so every
     block reuses this compilation.
+
+    donate=True donates the padded CSR planes, test indices, and U0/V0 to
+    XLA: U0/V0 are rewritten in place as the U/V outputs (every backend),
+    and where the runtime supports it (TPU/GPU) the remaining donated
+    buffers are invalidated at dispatch instead of living until the Python
+    refs drop — cutting peak HBM and allocator churn on the PP hot path.
+    Callers that reuse any of those buffers across calls must keep the
+    default. Propagated priors are never donated (shared across a PP
+    row/col group and read again at final aggregation).
     """
     N, D, K = csr_rows.n_rows, csr_cols.n_rows, cfg.K
     k0, key = jax.random.split(key)
@@ -88,20 +123,22 @@ def run_gibbs(key,
         U0 = U0 if U0 is not None else U0_
         V0 = V0 if V0 is not None else V0_
     cfg_key = cfg._replace(n_samples=0, burnin=0, phase_bc_samples=None)
-    return _run_gibbs_jit(key,
-                          (csr_rows.idx, csr_rows.val, csr_rows.mask),
-                          (csr_cols.idx, csr_cols.val, csr_cols.mask),
-                          test_rows, test_cols, cfg_key,
-                          csr_rows.n_cols, csr_cols.n_cols,
-                          jnp.asarray(cfg.n_samples, jnp.int32),
-                          jnp.asarray(cfg.burnin, jnp.int32),
-                          U_prior, V_prior, U0, V0)
+    fn = _run_gibbs_jit_donated if donate else _run_gibbs_jit
+    with (_quiet_donation() if donate else contextlib.nullcontext()):
+        return fn(key,
+                  (csr_rows.idx, csr_rows.val, csr_rows.mask),
+                  (csr_cols.idx, csr_cols.val, csr_cols.mask),
+                  test_rows, test_cols, cfg_key,
+                  csr_rows.n_cols, csr_cols.n_cols,
+                  jnp.asarray(cfg.n_samples, jnp.int32),
+                  jnp.asarray(cfg.burnin, jnp.int32),
+                  U_prior, V_prior, U0, V0)
 
 
-@partial(jax.jit, static_argnames=("cfg", "n_cols_r", "n_cols_c", "mesh"))
-def _run_gibbs_stacked_jit(key_data, csr_rows_arrs, csr_cols_arrs, test_rows,
-                           test_cols, cfg, n_cols_r, n_cols_c, n_samples,
-                           burnin, U_prior, V_prior, U0, V0, mesh=None):
+def _run_gibbs_stacked_dispatch(key_data, csr_rows_arrs, csr_cols_arrs,
+                                test_rows, test_cols, cfg, n_cols_r, n_cols_c,
+                                n_samples, burnin, U_prior, V_prior, U0, V0,
+                                mesh=None):
     """Batched (leading block axis) chain runner.
 
     Every array argument carries a leading axis B; ``mesh`` (hashable,
@@ -136,6 +173,20 @@ def _run_gibbs_stacked_jit(key_data, csr_rows_arrs, csr_cols_arrs, test_rows,
                n_samples, burnin, U_prior, V_prior, U0, V0)
 
 
+_STATIC_STACKED = ("cfg", "n_cols_r", "n_cols_c", "mesh")
+# Stacked donation mirrors _DONATE_SINGLE: per-bucket stacked CSR planes,
+# test indices, and vmapped U0/V0 (aliasing the stacked U/V outputs).
+# Stacked priors are fresh jnp.stack copies at every call site, but stay
+# un-donated for symmetry with the single-block contract.
+_DONATE_STACKED = (1, 2, 3, 4, 12, 13)
+
+_run_gibbs_stacked_jit = jax.jit(_run_gibbs_stacked_dispatch,
+                                 static_argnames=_STATIC_STACKED)
+_run_gibbs_stacked_jit_donated = jax.jit(_run_gibbs_stacked_dispatch,
+                                         static_argnames=_STATIC_STACKED,
+                                         donate_argnums=_DONATE_STACKED)
+
+
 def run_gibbs_stacked(keys,
                       csr_rows: PaddedCSR,      # (B, N, M) leaves
                       csr_cols: PaddedCSR,      # (B, D, M_c) leaves
@@ -144,7 +195,7 @@ def run_gibbs_stacked(keys,
                       cfg: BMF.BMFConfig,
                       U_prior: Optional[RowGaussians] = None,  # (B, N, ...) or None
                       V_prior: Optional[RowGaussians] = None,
-                      block_mesh=None) -> GibbsResult:
+                      block_mesh=None, donate: bool = False) -> GibbsResult:
     """Batched analogue of ``run_gibbs``: one jitted vmapped executable runs
     B identically-shaped blocks' chains at once (the PP StackedExecutor's
     hot path — ``BlockShapes.per_phase`` guarantees the common shapes).
@@ -156,19 +207,24 @@ def run_gibbs_stacked(keys,
     ``block_mesh``: optional 1-D Mesh with axis 'block'; B must be a
     multiple of the mesh size (callers pad the batch). The returned
     GibbsResult's leaves all carry the leading B axis.
+
+    ``donate`` mirrors ``run_gibbs``: the stacked CSR planes, test indices,
+    and U0/V0 are donated to XLA (same caller-must-not-reuse contract).
     """
     N, D, K = csr_rows.idx.shape[1], csr_cols.idx.shape[1], cfg.K
     ks = jax.vmap(jax.random.split)(keys)                     # (B, 2)
     U0, V0 = jax.vmap(lambda k: BMF.init_factors(k, N, D, K))(ks[:, 0])
     cfg_key = cfg._replace(n_samples=0, burnin=0, phase_bc_samples=None)
-    return _run_gibbs_stacked_jit(
-        jax.random.key_data(ks[:, 1]),
-        (csr_rows.idx, csr_rows.val, csr_rows.mask),
-        (csr_cols.idx, csr_cols.val, csr_cols.mask),
-        test_rows, test_cols, cfg_key, csr_rows.n_cols, csr_cols.n_cols,
-        jnp.asarray(cfg.n_samples, jnp.int32),
-        jnp.asarray(cfg.burnin, jnp.int32),
-        U_prior, V_prior, U0, V0, mesh=block_mesh)
+    fn = _run_gibbs_stacked_jit_donated if donate else _run_gibbs_stacked_jit
+    with (_quiet_donation() if donate else contextlib.nullcontext()):
+        return fn(
+            jax.random.key_data(ks[:, 1]),
+            (csr_rows.idx, csr_rows.val, csr_rows.mask),
+            (csr_cols.idx, csr_cols.val, csr_cols.mask),
+            test_rows, test_cols, cfg_key, csr_rows.n_cols, csr_cols.n_cols,
+            jnp.asarray(cfg.n_samples, jnp.int32),
+            jnp.asarray(cfg.burnin, jnp.int32),
+            U_prior, V_prior, U0, V0, mesh=block_mesh)
 
 
 def _run_gibbs_impl(key, csr_rows, csr_cols, test_rows, test_cols, cfg,

@@ -94,9 +94,16 @@ def _occupancy_refine(pc: COO, perm: np.ndarray, splits: np.ndarray,
     return refine[perm]
 
 
-def partition(coo: COO, I: int, J: int, balance: bool = True,
+def partition(coo: COO, I: int, J: int, balance=True,
               seed: int = 0, occupancy_sort: bool = True) -> Partition:
-    if balance:
+    """balance: True = nnz-balance permutation (default), False = random
+    permutation, "none" = identity — keeps deliberately skewed grids intact
+    (the occupancy-skewed engine benchmarks depend on it; occupancy_sort
+    still composes, it only reorders WITHIN stripes)."""
+    if balance == "none":
+        row_perm = np.arange(coo.n_rows, dtype=np.int64)
+        col_perm = np.arange(coo.n_cols, dtype=np.int64)
+    elif balance:
         row_perm = balance_permutation(coo, "row")
         col_perm = balance_permutation(coo, "col")
     else:

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
+from functools import partial
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -52,31 +53,69 @@ class PPResult:
     n_test: int
     block_times_s: Dict[Tuple[int, int], float] = field(default_factory=dict)
     executor: str = "serial"         # engine executor that produced this run
+    # dispatch→resolve spans per block, seconds relative to run start.
+    # Recorded by overlapped executors (async); empty for barrier executors,
+    # whose block_times_s are true per-block seconds (serial) or even bucket
+    # splits (stacked/sharded — prefer phase_times_s there).
+    block_spans_s: Dict[Tuple[int, int], Tuple[float, float]] = \
+        field(default_factory=dict)
+
+    def _dep_graph(self):
+        """Canonical PP dependency structure for this run's grid."""
+        I, J = self.per_block_rmse.shape
+        deps = {(0, 0): ()}
+        deps.update({(i, 0): ((0, 0),) for i in range(1, I)})
+        deps.update({(0, j): ((0, 0),) for j in range(1, J)})
+        deps.update({(i, j): ((i, 0), (0, j))
+                     for i in range(1, I) for j in range(1, J)})
+        return deps
 
     def modeled_parallel_s(self, workers: int) -> float:
-        """Wall-clock under the paper's deployment: blocks within a phase
-        run concurrently on disjoint workers (measured per-block times,
-        greedy rounds). Phase a is serial by construction.
+        """Wall-clock under the paper's deployment: a dependency-aware list
+        schedule of the measured per-block times over ``workers`` — a block
+        starts when its row/col prior sources are done AND a worker frees
+        up, NOT at a phase barrier (overlapped execution is the point of
+        the async executor, and the model matches it).
 
-        Only the serial executor measures true per-block times; under the
-        stacked/sharded executors prefer the MEASURED phase wall-clock in
-        ``phase_times_s`` (this model then just splits bucket time evenly)."""
-        import math
-        t = self.block_times_s.get((0, 0), 0.0)
-        I, J = self.per_block_rmse.shape
-        b = sorted((self.block_times_s[k] for k in self.block_times_s
-                    if (k[0] == 0) ^ (k[1] == 0)), reverse=True)
-        c = sorted((self.block_times_s[k] for k in self.block_times_s
-                    if k[0] > 0 and k[1] > 0), reverse=True)
-        for phase_blocks in (b, c):
-            if not phase_blocks:
-                continue
-            rounds = math.ceil(len(phase_blocks) / workers)
-            # greedy: each round bounded by its slowest block
-            for r in range(rounds):
-                t += max(phase_blocks[r * workers:(r + 1) * workers],
-                         default=0.0)
-        return t
+        block_times_s are true per-block seconds under serial, measured
+        dispatch→resolve spans under async; under stacked/sharded they're
+        even bucket splits, so prefer the MEASURED phase wall-clock in
+        ``phase_times_s`` there."""
+        import heapq
+        deps = self._dep_graph()
+        succ: Dict[Tuple[int, int], list] = {c: [] for c in deps}
+        for c, ds in deps.items():
+            for d in ds:
+                succ[d].append(c)
+        dur = {c: self.block_times_s.get(c, 0.0) for c in deps}
+        free = [0.0] * max(int(workers), 1)
+        heapq.heapify(free)
+        ready = [(0.0, (0, 0))]
+        finish: Dict[Tuple[int, int], float] = {}
+        while ready:
+            ready_t, c = heapq.heappop(ready)
+            start = max(heapq.heappop(free), ready_t)
+            finish[c] = start + dur[c]
+            heapq.heappush(free, finish[c])
+            for s in succ[c]:
+                if all(d in finish for d in deps[s]):
+                    heapq.heappush(ready, (max(finish[d] for d in deps[s]), s))
+        return max(finish.values(), default=0.0)
+
+    def critical_path_s(self) -> float:
+        """Length of the longest dependency chain through the measured
+        per-block times — the wall-clock floor under unbounded workers
+        (what the async executor approaches as barrier stalls vanish)."""
+        deps = self._dep_graph()
+        memo: Dict[Tuple[int, int], float] = {}
+
+        def cp(c):
+            if c not in memo:
+                memo[c] = (self.block_times_s.get(c, 0.0)
+                           + max((cp(d) for d in deps[c]), default=0.0))
+            return memo[c]
+
+        return max((cp(c) for c in deps), default=0.0)
 
 
 def _slice_prior(prior: RowGaussians, ids: np.ndarray) -> RowGaussians:
@@ -152,11 +191,18 @@ def pad_block_inputs(block: Block, shapes: BlockShapes, K: int,
                      test: Optional[COO],
                      U_prior: Optional[RowGaussians],
                      V_prior: Optional[RowGaussians]):
-    """Pad one block's CSR planes, priors, and test indices to its phase
+    """Pad one block's CSR planes, priors, and test entries to its phase
     shape bucket — the single source of truth for bucketed padding.
-    ``run_block`` (serial executor) and ``engine._task_leaves`` (stacked/
-    sharded executors) both call this; the executors' chain-identical
-    parity depends on them never diverging."""
+    ``run_block`` (serial executor), ``engine._task_leaves`` (stacked/
+    sharded executors), and ``engine.AsyncExecutor._dispatch`` all call
+    this; the executors' chain-identical parity depends on them never
+    diverging.
+
+    Returns ``(csr_rows, csr_cols, tr, tc, tv, tmask, U_prior, V_prior)``:
+    padded test indices, VALUES, and a validity mask over the bucket's
+    n_test slots (one submatrix scan serves all three) — tv/tmask let the
+    engine compute each block's squared error as a tiny on-device scalar
+    instead of pulling the (n_test,) prediction vector to the host."""
     csr_rows = coo_to_padded_csr(block.coo, max_nnz=shapes.m_rows,
                                  n_rows_pad=shapes.n_rows,
                                  n_cols_pad=shapes.n_cols)
@@ -167,14 +213,23 @@ def pad_block_inputs(block: Block, shapes: BlockShapes, K: int,
     U_prior = _pad_prior(U_prior, shapes.n_rows, K)
     V_prior = _pad_prior(V_prior, shapes.n_cols, K)
     if test is not None:
-        tr, tc, _ = _block_test(test, block)
+        tr, tc, tv_raw = _block_test(test, block)
     else:
-        tr = np.zeros((1,), np.int32)
-        tc = np.zeros((1,), np.int32)
-    pad = shapes.n_test - len(tr)
-    tr = np.concatenate([tr, np.zeros(max(pad, 0), tr.dtype)])[:shapes.n_test]
-    tc = np.concatenate([tc, np.zeros(max(pad, 0), tc.dtype)])[:shapes.n_test]
-    return csr_rows, csr_cols, tr, tc, U_prior, V_prior
+        tr = np.zeros((0,), np.int32)
+        tc = np.zeros((0,), np.int32)
+        tv_raw = np.zeros((0,), np.float32)
+    n = min(len(tr), shapes.n_test)
+
+    def padded(arr, dtype):
+        out = np.zeros((shapes.n_test,), dtype)
+        out[:n] = arr[:n]
+        return out
+
+    tv = padded(tv_raw.astype(np.float32), np.float32)
+    tmask = np.zeros((shapes.n_test,), np.float32)
+    tmask[:n] = 1.0
+    return (csr_rows, csr_cols, padded(tr, np.int32), padded(tc, np.int32),
+            tv, tmask, U_prior, V_prior)
 
 
 def run_block(key, block: Block, cfg: BMF.BMFConfig,
@@ -193,8 +248,8 @@ def run_block(key, block: Block, cfg: BMF.BMFConfig,
             tr = np.zeros((1,), np.int32)
             tc = np.zeros((1,), np.int32)
     else:
-        csr_rows, csr_cols, tr, tc, U_prior, V_prior = pad_block_inputs(
-            block, shapes, cfg.K, test, U_prior, V_prior)
+        csr_rows, csr_cols, tr, tc, _, _, U_prior, V_prior = \
+            pad_block_inputs(block, shapes, cfg.K, test, U_prior, V_prior)
     if distributed_mesh is not None:
         from repro.core import distributed as DIST
         return DIST.run_gibbs_distributed(
@@ -216,7 +271,10 @@ def run_pp(key, part: Partition, cfg: BMF.BMFConfig, test: COO,
     executor: "serial" (reference: per-block jitted calls, today's exact
       semantics), "stacked" (one vmapped Gibbs call per phase shape bucket),
       "sharded" (the stacked batch shard_map'd over a 'block' device mesh so
-      same-phase blocks run concurrently on separate devices), or an
+      same-phase blocks run concurrently on separate devices), "async"
+      (dependency-driven overlap: readiness counters dispatch each block the
+      moment its propagated priors resolve — phase b and c overlap, buffers
+      are donated, posteriors stay device-resident), or an
       ``engine.Executor`` instance.
     distributed_mesh: intra-block sharding (core.distributed) — forces the
       serial executor; ``block_mesh`` is the inter-block mesh used by
@@ -229,20 +287,14 @@ def run_pp(key, part: Partition, cfg: BMF.BMFConfig, test: COO,
     return ENG.run_phase_graph(key, part, cfg, test, ex, verbose=verbose)
 
 
-def _aggregate_axis(part: Partition, posts, axis: str) -> RowGaussians:
-    """Combine per-block posteriors for one factor.
-
-    For U row-group i: posterior from blocks (i, 0..J-1); blocks 1..J-1 in
-    that row all received the same propagated prior (the phase-b posterior
-    of U^(i) — or phase-a for i=0), counted J times in the product, so J-1
-    copies are divided away (Qin et al. 2019, eq. 5).
-
-    Operates on stacked leaves: blocks of a row (col) group share their row
-    (col) ids, so the J (I) per-block posteriors stack along a leading axis
-    and the natural-parameter sum is one reduction instead of a Python
-    chain of adds.
-    """
-    I, J = part.I, part.J
+@partial(jax.jit, static_argnames=("axis",))
+def _aggregate_axis_jit(posts, axis: str) -> RowGaussians:
+    """Jitted divide-away reduction over a (I, J) nested tuple of
+    device-resident RowGaussians — ONE executable, no host round-trip:
+    the engine keeps posterior summaries on device between phases and this
+    is the only consumer, so natural-parameter sums, prior subtraction, and
+    the final concatenation all stay on device."""
+    I, J = len(posts), len(posts[0])
     out_eta, out_lam = [], []
     if axis == "row":
         for i in range(I):
@@ -260,6 +312,24 @@ def _aggregate_axis(part: Partition, posts, axis: str) -> RowGaussians:
             out_lam.append(lam_stack.sum(0) - (I - 1) * prior.Lambda)
     return RowGaussians(eta=jnp.concatenate(out_eta),
                         Lambda=jnp.concatenate(out_lam))
+
+
+def _aggregate_axis(part: Partition, posts, axis: str) -> RowGaussians:
+    """Combine per-block posteriors for one factor.
+
+    For U row-group i: posterior from blocks (i, 0..J-1); blocks 1..J-1 in
+    that row all received the same propagated prior (the phase-b posterior
+    of U^(i) — or phase-a for i=0), counted J times in the product, so J-1
+    copies are divided away (Qin et al. 2019, eq. 5).
+
+    Operates on stacked leaves: blocks of a row (col) group share their row
+    (col) ids, so the J (I) per-block posteriors stack along a leading axis
+    and the natural-parameter sum is one reduction instead of a Python
+    chain of adds — and the whole reduction is one jitted executable
+    (``_aggregate_axis_jit``) so posteriors never visit the host.
+    """
+    assert len(posts) == part.I and len(posts[0]) == part.J
+    return _aggregate_axis_jit(tuple(tuple(row) for row in posts), axis)
 
 
 def run_full_bmf(key, train: COO, test: COO, cfg: BMF.BMFConfig):

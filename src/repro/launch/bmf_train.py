@@ -9,7 +9,9 @@ Usage:
 (default) runs each PP phase's shape bucket as ONE vmapped Gibbs call;
 'sharded' additionally spreads that batch over all local devices on a
 'block' mesh (set XLA_FLAGS=--xla_force_host_platform_device_count=N to
-fake a mesh on CPU); 'serial' is the reference per-block loop.
+fake a mesh on CPU); 'async' overlaps phases b/c with a dependency-driven
+scheduler (per-device streams when >1 device, donated buffers,
+device-resident posteriors); 'serial' is the reference per-block loop.
 
 --distributed shards each block's Gibbs loop INTERNALLY over all local
 devices (core.distributed shard_map) — this forces the serial executor.
@@ -39,7 +41,7 @@ def main():
     ap.add_argument("--samples", type=int, default=60)
     ap.add_argument("--k", type=int, default=0, help="0 = preset K (capped 16)")
     ap.add_argument("--executor", default="stacked",
-                    choices=["serial", "stacked", "sharded"],
+                    choices=["serial", "stacked", "sharded", "async"],
                     help="phase-graph engine executor (core.engine)")
     ap.add_argument("--distributed", action="store_true",
                     help="intra-block shard_map (forces --executor serial)")
@@ -68,6 +70,9 @@ def main():
         print(f"distributed: {n}-way shard_map per block (serial executor)")
     elif args.executor == "sharded":
         print(f"sharded executor: {len(jax.devices())}-way block mesh")
+    elif args.executor == "async":
+        print(f"async executor: dependency-driven overlap, "
+              f"{len(jax.devices())} device stream(s)")
 
     res = PP.run_pp(jax.random.key(args.seed), part, cfg, test,
                     distributed_mesh=mesh, verbose=True,
@@ -76,6 +81,9 @@ def main():
           f"wall={res.wall_time_s:.1f}s  "
           f"phases={ {k: round(v, 2) for k, v in res.phase_times_s.items()} }")
     print(f"modeled 16-worker wall: {res.modeled_parallel_s(16):.1f}s")
+    if res.block_spans_s:
+        print(f"measured critical path: {res.critical_path_s():.1f}s "
+              f"(dispatch→resolve spans, dependency chain)")
 
     if args.ckpt:
         ckpt.save(args.ckpt, {"U_eta": res.U_agg.eta, "U_Lam": res.U_agg.Lambda,

@@ -14,6 +14,7 @@ import pytest
 
 from repro.core import bmf as BMF
 from repro.core import engine as ENG
+from repro.core import gibbs as GIBBS
 from repro.core import posterior as POST
 from repro.core import pp as PP
 from repro.core.partition import partition
@@ -189,6 +190,192 @@ def test_distributed_mesh_forces_serial():
 
 
 # ---------------------------------------------------------------------------
+# async executor (tentpole: dependency-driven overlap of phases b/c)
+# ---------------------------------------------------------------------------
+
+
+def test_serial_async_identical_rmse(mini_run):
+    part, cfg, test = mini_run
+    key = jax.random.key(1)
+    r_ser = PP.run_pp(key, part, cfg, test, executor="serial")
+    r_asy = PP.run_pp(key, part, cfg, test, executor="async")
+    assert r_asy.executor == "async"
+    assert abs(r_ser.rmse - r_asy.rmse) < 1e-5, (r_ser.rmse, r_asy.rmse)
+    np.testing.assert_allclose(r_ser.per_block_rmse, r_asy.per_block_rmse,
+                               atol=1e-4)
+    # same bucketed per-block executables, same keys -> the device-resident
+    # aggregation is BIT-identical to the serial reference
+    np.testing.assert_array_equal(np.asarray(r_ser.U_agg.eta),
+                                  np.asarray(r_asy.U_agg.eta))
+    np.testing.assert_array_equal(np.asarray(r_ser.V_agg.Lambda),
+                                  np.asarray(r_asy.V_agg.Lambda))
+    # aggregated posteriors never left the device
+    assert isinstance(r_asy.U_agg.eta, jax.Array)
+    # overlapped run records dispatch→resolve spans for every block
+    coords = {(i, j) for i in range(part.I) for j in range(part.J)}
+    assert set(r_asy.block_spans_s) == coords
+    for td, tr in r_asy.block_spans_s.values():
+        assert 0.0 <= td <= tr
+    assert set(r_asy.phase_times_s) == {"a", "b", "c"}
+
+
+class _ShuffledAsync(ENG.AsyncExecutor):
+    """Fake-delay executor: each completion poll flips a seeded coin per
+    in-flight block, deferring its OBSERVED resolution even when the device
+    finished long ago — randomizing the completion order the scheduler
+    reacts to (the fallback path force-resolves the oldest in-flight block,
+    so progress is always made)."""
+
+    def __init__(self, seed, **kw):
+        super().__init__(record_trace=True, **kw)
+        self._rng = np.random.default_rng(seed)
+
+    def _is_resolved(self, coord, signal):
+        return bool(self._rng.random() < 0.4) and signal.is_ready()
+
+
+@pytest.fixture(scope="module")
+def mini_3x3():
+    coo, p = SYN.generate("mini", seed=3)
+    train, test = train_test_split(coo, 0.15, seed=4)
+    cfg = BMF.BMFConfig(K=p.K, n_samples=4, burnin=1)
+    part = partition(train, 3, 3)
+    key = jax.random.key(2)
+    r_ser = PP.run_pp(key, part, cfg, test, executor="serial")
+    return part, cfg, test, key, r_ser
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_async_completion_order_stress(mini_3x3, seed):
+    """Randomized completion order must never let a block dispatch before
+    both its prior sources resolved, and the divide-away aggregation must
+    stay bit-identical to the serial reference regardless of order."""
+    part, cfg, test, key, r_ser = mini_3x3
+    ex = _ShuffledAsync(seed)
+    r_asy = PP.run_pp(key, part, cfg, test, executor=ex)
+
+    graph = {t.coord: t for _, ts in ENG.build_phase_graph(part) for t in ts}
+    resolved = set()
+    dispatched = set()
+    for ev, c in ex.trace:
+        if ev == "dispatch":
+            assert set(graph[c].deps) <= resolved, \
+                f"{c} dispatched before deps {graph[c].deps} resolved"
+            dispatched.add(c)
+        else:
+            assert c in dispatched
+            resolved.add(c)
+    assert resolved == set(graph)          # every block ran exactly once
+    assert len(ex.trace) == 2 * len(graph)
+
+    np.testing.assert_array_equal(np.asarray(r_ser.U_agg.eta),
+                                  np.asarray(r_asy.U_agg.eta))
+    np.testing.assert_array_equal(np.asarray(r_ser.V_agg.eta),
+                                  np.asarray(r_asy.V_agg.eta))
+    assert abs(r_ser.rmse - r_asy.rmse) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# device-resident aggregation (satellite: no host transfers mid-run)
+# ---------------------------------------------------------------------------
+
+
+def _device_posts(rng, I, J, n, k):
+    return [[POST.RowGaussians(
+        eta=jnp.asarray(rng.normal(size=(n, k)).astype(np.float32)),
+        Lambda=jnp.asarray(rng.normal(size=(n, k, k)).astype(np.float32)))
+        for _ in range(J)] for _ in range(I)]
+
+
+def test_aggregate_axis_no_host_transfers():
+    """_aggregate_axis is ONE jitted reduction over device-resident
+    posteriors: running it under jax.transfer_guard('disallow') proves no
+    host round-trip happens mid-run (any implicit device↔host copy would
+    raise)."""
+    rng = np.random.default_rng(7)
+    I, J, n, k = 2, 3, 4, 3
+    part = types.SimpleNamespace(I=I, J=J)
+    posts = _device_posts(rng, I, J, n, k)
+    jax.block_until_ready(PP._aggregate_axis(part, posts, axis="row"))  # warm
+    with jax.transfer_guard("disallow"):
+        agg = PP._aggregate_axis(part, posts, axis="row")
+    jax.block_until_ready(agg)
+    assert isinstance(agg.eta, jax.Array)
+
+
+def test_aggregate_axis_jaxpr_no_blowup():
+    """PR-1 idiom (roofline.jaxpr_cost.iter_avals): the jitted divide-away
+    reduction may not materialize anything beyond the stacked input — its
+    largest aval is exactly the (J, n, K, K) per-group Lambda stack."""
+    from repro.roofline.jaxpr_cost import iter_avals, jaxpr_cost
+
+    rng = np.random.default_rng(8)
+    I, J, n, k = 3, 4, 5, 3
+    posts = tuple(tuple(row) for row in _device_posts(rng, I, J, n, k))
+    jaxpr = jax.make_jaxpr(
+        lambda p: PP._aggregate_axis_jit(p, "row"))(posts)
+    cap = J * n * k * k           # one row-group's stacked Lambda leaves
+    assert max(int(np.prod(a.shape)) for a in iter_avals(jaxpr)
+               if a.shape) <= cap
+    # and it is pure arithmetic: FLOPs bounded by a few passes over inputs
+    cost = jaxpr_cost(jaxpr)
+    assert cost["flops"] <= 16 * I * J * n * k * k
+
+
+# ---------------------------------------------------------------------------
+# donation (satellite: padded input buffers are donated to XLA)
+# ---------------------------------------------------------------------------
+
+
+def test_run_gibbs_donation_matches_and_aliases():
+    """donate=True must not change the chain (same executable semantics)
+    and must alias U0/V0 onto the U/V outputs — the donated initializations
+    are invalidated at dispatch."""
+    from repro.data.sparse import coo_to_padded_csr
+
+    coo, p = SYN.generate("mini", seed=9)
+    csr_r = coo_to_padded_csr(coo)
+    csr_c = coo_to_padded_csr(coo.transpose())
+    cfg = BMF.BMFConfig(K=4, n_samples=3, burnin=1)
+    tr = jnp.zeros((5,), jnp.int32)
+    tc = jnp.zeros((5,), jnp.int32)
+    from repro.core import bmf as BMFmod
+    key = jax.random.key(3)
+    U0, V0 = BMFmod.init_factors(jax.random.key(4), csr_r.n_rows,
+                                 csr_c.n_rows, cfg.K)
+    ref = GIBBS.run_gibbs(key, csr_r, csr_c, tr, tc, cfg,
+                          U0=U0, V0=V0, donate=False)
+
+    U0d, V0d = BMFmod.init_factors(jax.random.key(4), csr_r.n_rows,
+                                   csr_c.n_rows, cfg.K)
+    don = GIBBS.run_gibbs(key, csr_r, csr_c, tr, tc, cfg,
+                          U0=U0d, V0=V0d, donate=True)
+    assert U0d.is_deleted() and V0d.is_deleted()   # aliased in place
+    np.testing.assert_array_equal(np.asarray(ref.U), np.asarray(don.U))
+    np.testing.assert_array_equal(np.asarray(ref.U_post.eta),
+                                  np.asarray(don.U_post.eta))
+
+
+# ---------------------------------------------------------------------------
+# timing semantics (satellite: critical path, not even bucket splits)
+# ---------------------------------------------------------------------------
+
+
+def test_modeled_parallel_is_dependency_aware():
+    res = PP.PPResult(
+        rmse=0.0, U_agg=None, V_agg=None, per_block_rmse=np.zeros((2, 2)),
+        wall_time_s=0.0, phase_times_s={}, n_test=0,
+        block_times_s={(0, 0): 1.0, (1, 0): 2.0, (0, 1): 3.0, (1, 1): 1.0})
+    # longest chain: (0,0) -> (0,1) -> (1,1) = 1 + 3 + 1
+    assert res.critical_path_s() == pytest.approx(5.0)
+    # enough workers: b blocks overlap, c starts when BOTH its sources are
+    # done (not at a phase barrier) -> equals the critical path
+    assert res.modeled_parallel_s(16) == pytest.approx(5.0)
+    # one worker degenerates to the serial sum
+    assert res.modeled_parallel_s(1) == pytest.approx(7.0)
+
+
+# ---------------------------------------------------------------------------
 # sharded executor (subprocess: needs a faked multi-device mesh)
 # ---------------------------------------------------------------------------
 
@@ -226,6 +413,43 @@ def test_sharded_matches_stacked():
     # uneven bucket padding — phase b has 3 blocks over 4 devices — and
     # multi-block-per-device batches)
     assert abs(rec["stacked"] - rec["sharded"]) < 1e-4, rec
+
+
+ASYNC_STREAMS_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import json
+    import jax
+    from repro.core import bmf as BMF, pp as PP
+    from repro.core.partition import partition
+    from repro.data import synthetic as SYN
+    from repro.data.sparse import train_test_split
+
+    coo, p = SYN.generate("mini", seed=3)
+    train, test = train_test_split(coo, 0.15, seed=4)
+    cfg = BMF.BMFConfig(K=p.K, n_samples=6, burnin=2)
+    part = partition(train, 3, 2)
+    key = jax.random.key(1)
+    r_ser = PP.run_pp(key, part, cfg, test, executor="serial")
+    r_asy = PP.run_pp(key, part, cfg, test, executor="async")
+    print(json.dumps({"serial": r_ser.rmse, "async": r_asy.rmse,
+                      "n_devices": len(jax.devices())}))
+""")
+
+
+@pytest.mark.slow
+def test_async_streams_on_faked_mesh():
+    """Per-device streams: with 4 faked devices the async executor places
+    each dispatch round-robin and device_puts propagated priors across
+    streams — RMSE parity with serial must survive the placement."""
+    env = dict(os.environ, PYTHONPATH=str(ROOT / "src"))
+    out = subprocess.run([sys.executable, "-c", ASYNC_STREAMS_SCRIPT],
+                         env=env, capture_output=True, text=True,
+                         timeout=500)
+    assert out.returncode == 0, out.stderr[-3000:]
+    rec = __import__("json").loads(out.stdout.strip().splitlines()[-1])
+    assert rec["n_devices"] == 4
+    assert abs(rec["serial"] - rec["async"]) < 1e-4, rec
 
 
 # ---------------------------------------------------------------------------
