@@ -19,14 +19,28 @@ the skew survives. This is the worst case for barrier executors — every
 bucket is padded to its densest block and phase c waits on the slowest
 phase-b straggler — and the case the async executor is built for.
 
+``--grid I J`` pins the grid explicitly; combined with ``--oversized`` it
+builds the streaming executor's target case: a grid (e.g. 32×8) whose
+stacked phase buckets exceed ``--mem-cap-mb`` of device memory. Executors
+whose estimated footprint breaks the cap are SKIPPED with a printed
+reason; the streaming executor's live peak stays bounded by
+``--window × (depth+1)`` blocks and is measured (``peak_live_mb``,
+benchmarks.common.gibbs_live_peak) and recorded.
+
 Each executor gets one warmup run (compile) and ``--repeats`` timed runs;
 reported phase times are the per-phase minima over repeats. With
-``--json-out`` the run record is APPENDED to the file's "runs" list (one
-file accumulates the plain + skewed grids).
+``--json-out`` the run record is merge-appended into the ``{runs: [...]}``
+schema idempotently: re-running a config (same dataset/grid_kind/grid/K/
+samples) REPLACES its record instead of duplicating it (``merge_runs``).
 
   PYTHONPATH=src:. python benchmarks/bench_pp_engine.py \
       --dataset movielens --blocks 8 --samples 20 \
       --executors serial stacked async --skew 4 \
+      --json-out BENCH_pp_engine.json
+
+  PYTHONPATH=src:. python benchmarks/bench_pp_engine.py \
+      --dataset movielens --grid 32 8 --oversized --samples 10 \
+      --executors serial streaming --window 4 --mem-cap-mb 64 \
       --json-out BENCH_pp_engine.json
 """
 from __future__ import annotations
@@ -42,9 +56,46 @@ from repro.core import bmf as BMF
 from repro.core import pp as PP
 from repro.core.partition import partition, suggest_grid
 from repro.data import synthetic as SYN
-from repro.data.sparse import COO, train_test_split
+from repro.data.sparse import COO, apply_permutation, train_test_split
 
-from benchmarks.common import emit
+from benchmarks.common import emit, gibbs_live_peak
+
+# a run record's config identity: re-running the same config replaces its
+# record in the {runs: [...]} file instead of appending a duplicate
+RUN_KEY = ("dataset", "grid_kind", "grid", "K", "samples")
+
+
+def _run_key(rec: dict) -> tuple:
+    vals = []
+    for f in RUN_KEY:
+        v = rec.get(f)
+        vals.append(tuple(v) if isinstance(v, list) else v)
+    return tuple(vals)
+
+
+def merge_runs(doc, run_rec: dict) -> dict:
+    """Idempotently merge one run record into the ``{runs: [...]}`` schema:
+    an existing record with the same config key (RUN_KEY) is REPLACED, any
+    other record is kept, and the PR-2 single-run layout (top-level
+    ``records``) migrates transparently. Pure function of (previous doc or
+    None, new record) — unit-tested over a temp file in
+    tests/test_bench_json.py."""
+    runs = []
+    if doc:
+        runs = doc.get("runs", [doc] if doc.get("records") else [])
+        runs = [{k: v for k, v in r.items() if k != "benchmark"}
+                for r in runs]
+    runs = [r for r in runs if _run_key(r) != _run_key(run_rec)]
+    runs.append(run_rec)
+    return {"benchmark": "pp_engine", "runs": runs}
+
+
+def merge_json_out(path, run_rec: dict) -> dict:
+    out = Path(path)
+    doc = json.loads(out.read_text()) if out.exists() else None
+    merged = merge_runs(doc, run_rec)
+    out.write_text(json.dumps(merged, indent=2))
+    return merged
 
 
 def make_skewed(p: SYN.DatasetPreset, I: int, J: int, skew: float,
@@ -70,7 +121,11 @@ def make_skewed(p: SYN.DatasetPreset, I: int, J: int, skew: float,
     cols = stripe_draw(col_splits, J, int(nnz * 1.6))
     key = rows.astype(np.int64) * p.n_cols + cols
     _, uniq = np.unique(key, return_index=True)
-    uniq = uniq[:nnz]
+    # shuffle BEFORE truncating: np.unique returns indices sorted by
+    # row-major key, so uniq[:nnz] alone would keep only the smallest row
+    # ids and cut the tail stripes off entirely instead of thinning them
+    # by the documented S^-(i+j) profile
+    uniq = rng.permutation(uniq)[:nnz]
     rows, cols = rows[uniq], cols[uniq]
 
     r = p.true_rank
@@ -86,10 +141,21 @@ def make_skewed(p: SYN.DatasetPreset, I: int, J: int, skew: float,
                n_rows=p.n_rows, n_cols=p.n_cols)
 
 
-def run_one(executor: str, key, part, cfg, test, repeats: int):
+def run_one(executor: str, key, part, cfg, test, repeats: int,
+            window=None, measure_peak: bool = False):
     runs = []
-    for _ in range(1 + repeats):           # first run compiles; dropped
-        runs.append(PP.run_pp(key, part, cfg, test, executor=executor))
+    peak = None
+    for i in range(1 + repeats):           # first run compiles; dropped
+        if i == 0 and measure_peak:
+            # live peak sampled on the (untimed) warmup run so the
+            # per-dispatch live_arrays() walk never pollutes the timings
+            with gibbs_live_peak() as pk:
+                runs.append(PP.run_pp(key, part, cfg, test,
+                                      executor=executor, window=window))
+            peak = pk
+        else:
+            runs.append(PP.run_pp(key, part, cfg, test, executor=executor,
+                                  window=window))
     timed = runs[1:]
     phases = {ph: min(r.phase_times_s[ph] for r in timed)
               for ph in timed[0].phase_times_s}
@@ -100,6 +166,11 @@ def run_one(executor: str, key, part, cfg, test, repeats: int):
         "phase_s": phases,
         "phase_bc_s": phases.get("b", 0.0) + phases.get("c", 0.0),
     }
+    if executor == "streaming":
+        rec["window"] = window
+    if peak is not None:
+        rec["peak_live_mb"] = peak["peak"] / 2**20
+        rec["baseline_live_mb"] = peak["baseline"] / 2**20
     if timed[0].block_spans_s:
         best = min(timed, key=lambda r: r.wall_time_s)
         rec["critical_path_s"] = best.critical_path_s()
@@ -116,9 +187,23 @@ def main():
     ap.add_argument("--skew", type=float, default=0.0,
                     help=">1: occupancy-skewed grid (block density "
                          "∝ skew^-(i+j), identity permutations)")
+    ap.add_argument("--grid", type=int, nargs=2, default=None,
+                    metavar=("I", "J"),
+                    help="explicit block grid (overrides --blocks)")
+    ap.add_argument("--oversized", action="store_true",
+                    help="oversized-grid mode: label the run, measure "
+                         "per-executor live peaks, honor --mem-cap-mb")
+    ap.add_argument("--window", type=int, default=0,
+                    help="streaming executor window W (0 = default)")
+    ap.add_argument("--mem-cap-mb", type=float, default=0.0,
+                    help="skip executors whose estimated live input "
+                         "footprint exceeds this many MB (stacked/sharded "
+                         "hold whole phase buckets; streaming is bounded "
+                         "by its window)")
     ap.add_argument("--executors", nargs="+",
                     default=["serial", "stacked"],
-                    choices=["serial", "stacked", "sharded", "async"])
+                    choices=["serial", "stacked", "sharded", "async",
+                             "streaming"])
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args()
 
@@ -126,8 +211,11 @@ def main():
     K = min(p.K, 16)
     cfg = BMF.BMFConfig(K=K, n_samples=args.samples,
                         burnin=args.samples // 3)
-    if args.skew and args.skew > 1:
+    if args.grid:
+        I, J = args.grid
+    else:
         I, J = suggest_grid(p.n_rows, p.n_cols, args.blocks)
+    if args.skew and args.skew > 1:
         coo = make_skewed(p, I, J, args.skew, seed=51)
         train, test = train_test_split(coo, 0.1, seed=52)
         part = partition(train, I, J, balance="none")
@@ -135,25 +223,58 @@ def main():
     else:
         coo, p = SYN.generate(args.dataset, seed=51)
         train, test = train_test_split(coo, 0.1, seed=52)
-        I, J = suggest_grid(train.n_rows, train.n_cols, args.blocks)
+        if not args.grid:
+            I, J = suggest_grid(train.n_rows, train.n_cols, args.blocks)
         part = partition(train, I, J)
         grid_kind = "balanced"
+    if args.oversized:
+        grid_kind = f"oversized{I}x{J}-{grid_kind}"
     nnz_blocks = np.array([[b.coo.nnz for b in row] for row in part.blocks])
     print(f"dataset={args.dataset} grid={I}x{J} K={K} kind={grid_kind} "
           f"samples={args.samples} devices={len(jax.devices())}")
     print(f"block nnz: max={nnz_blocks.max()} min={nnz_blocks.min()} "
           f"imbalance={nnz_blocks.max() / max(nnz_blocks.mean(), 1):.2f}x")
 
+    # estimated live INPUT footprints (pp.BlockShapes.block_bytes): the
+    # stacked executor holds its largest phase bucket whole, the streaming
+    # executor at most window x (depth+1) blocks of the largest bucket —
+    # W and depth read from a probe instance so the estimate, the skip
+    # decision, and the recorded config track the executor's defaults
+    from repro.core import engine as ENG
+    probe = ENG.make_executor("streaming", window=args.window or None)
+    W = probe.window
+    test_p = apply_permutation(test, part.row_perm, part.col_perm)
+    buckets = PP.BlockShapes.per_phase(part, test_p)
+    per_tag = {tag: sum(1 for b in part.all_blocks() if b.phase == tag)
+               * s.block_bytes(K) for tag, s in buckets.items()}
+    stacked_mb = max(per_tag.values()) / 2**20
+    window_mb = W * (probe.depth + 1) * max(
+        s.block_bytes(K) for s in buckets.values()) / 2**20
+    print(f"est. live inputs: stacked bucket {stacked_mb:.1f}MB, "
+          f"streaming window (W={W}) {window_mb:.1f}MB"
+          + (f", cap {args.mem_cap_mb:.1f}MB" if args.mem_cap_mb else ""))
+
     key = jax.random.key(7)
-    recs = []
+    recs, skipped = [], []
     for ex in args.executors:
-        rec = run_one(ex, key, part, cfg, test, args.repeats)
+        est_mb = {"stacked": stacked_mb, "sharded": stacked_mb,
+                  "streaming": window_mb}.get(ex)
+        if args.mem_cap_mb and est_mb is not None and est_mb > args.mem_cap_mb:
+            print(f"  {ex:9s} SKIPPED: est. {est_mb:.1f}MB live inputs "
+                  f"> cap {args.mem_cap_mb:.1f}MB")
+            skipped.append({"executor": ex, "est_mb": est_mb,
+                            "cap_mb": args.mem_cap_mb})
+            continue
+        rec = run_one(ex, key, part, cfg, test, args.repeats,
+                      window=W, measure_peak=args.oversized)
         recs.append(rec)
         emit(f"pp_engine/{args.dataset}/{grid_kind}/{ex}", rec["wall_s"],
              f"rmse={rec['rmse']:.4f};phase_bc_s={rec['phase_bc_s']:.3f}")
         print(f"  {ex:8s} wall={rec['wall_s']:.2f}s "
               f"phases={ {k: round(v, 3) for k, v in rec['phase_s'].items()} } "
-              f"rmse={rec['rmse']:.4f}")
+              f"rmse={rec['rmse']:.4f}"
+              + (f" peak_live={rec['peak_live_mb']:.1f}MB"
+                 if "peak_live_mb" in rec else ""))
 
     # executors must be RMSE-identical under a fixed key
     for rec in recs[1:]:
@@ -181,23 +302,13 @@ def main():
                    "grid_kind": grid_kind, "skew": args.skew or None,
                    "nnz_imbalance":
                        float(nnz_blocks.max() / max(nnz_blocks.mean(), 1)),
-                   "samples": args.samples, "records": recs}
-        out = Path(args.json_out)
-        doc = {"benchmark": "pp_engine", "runs": []}
-        if out.exists():
-            prev = json.loads(out.read_text())
-            # migrate the PR-2 single-run layout into the runs list
-            runs = prev.get("runs",
-                            [prev] if prev.get("records") else [])
-            doc["runs"] = [{k: v for k, v in r.items() if k != "benchmark"}
-                           for r in runs]
-        doc["runs"] = [r for r in doc["runs"]
-                       if not (r.get("dataset") == args.dataset
-                               and r.get("grid_kind",
-                                         "balanced") == grid_kind)]
-        doc["runs"].append(run_rec)
-        out.write_text(json.dumps(doc, indent=2))
-        print("->", out)
+                   "samples": args.samples,
+                   "est_stacked_bucket_mb": stacked_mb,
+                   "est_streaming_window_mb": window_mb,
+                   "mem_cap_mb": args.mem_cap_mb or None,
+                   "skipped": skipped, "records": recs}
+        merge_json_out(args.json_out, run_rec)
+        print("->", args.json_out)
 
 
 if __name__ == "__main__":

@@ -11,7 +11,8 @@ buffer (the (N, M, K) gathered tensor shows up only in the baseline), and
 the measured wall-clock per call on this host.
 
 ``--gibbs-peak`` measures the PEAK LIVE device-buffer footprint of a full
-PP run under the stacked and async executors, donation off vs on: every
+PP run under the stacked, async, and streaming executors, donation off vs
+on (streaming's peak is bounded by its --window, flat in grid size): every
 ``run_gibbs``/``run_gibbs_stacked`` dispatch samples
 ``sum(nbytes over jax.live_arrays())``, and each run's phase-c chain
 executable is additionally lowered both ways to record XLA's own buffer
@@ -89,10 +90,12 @@ def run_bmf(datasets, use_kernel: str = "both"):
 
 
 def _xla_chain_peak(shapes, n_blocks: int, cfg, stacked: bool, donate: bool,
-                    has_priors: bool):
+                    has_priors: bool, prior_flags: bool = False):
     """Lower the engine's chain executable at one bucket's shapes and read
     XLA's buffer assignment: effective peak = arg + temp + out − alias
-    (aliased donations are written in place, not double-counted)."""
+    (aliased donations are written in place, not double-counted).
+    ``prior_flags`` lowers the per-block prior_use variant — the executable
+    the STREAMING executor actually dispatches per window chunk."""
     import warnings
 
     import jax
@@ -112,13 +115,14 @@ def _xla_chain_peak(shapes, n_blocks: int, cfg, stacked: bool, donate: bool,
              S(lead + (D, Mc), jnp.float32))
     tst = S(lead + (T,), jnp.int32)
     prior_u = prior_v = None
-    if has_priors:
+    if has_priors or prior_flags:
         prior_u = RowGaussians(eta=S(lead + (N, K), jnp.float32),
                                Lambda=S(lead + (N, K, K), jnp.float32))
         prior_v = RowGaussians(eta=S(lead + (D, K), jnp.float32),
                                Lambda=S(lead + (D, K, K), jnp.float32))
     u0, v0 = S(lead + (N, K), jnp.float32), S(lead + (D, K), jnp.float32)
     sc = S((), jnp.int32)
+    use = S((n_blocks,), jnp.float32) if prior_flags else None
     cfg_key = cfg._replace(n_samples=0, burnin=0, phase_bc_samples=None)
     with warnings.catch_warnings():
         warnings.simplefilter("ignore")
@@ -127,7 +131,7 @@ def _xla_chain_peak(shapes, n_blocks: int, cfg, stacked: bool, donate: bool,
                   else GIBBS._run_gibbs_stacked_jit)
             traced = fn.trace(S((n_blocks, 2), jnp.uint32), csr_r, csr_c,
                               tst, tst, cfg_key, D, N, sc, sc,
-                              prior_u, prior_v, u0, v0, mesh=None)
+                              prior_u, prior_v, u0, v0, use, use, mesh=None)
         else:
             fn = (GIBBS._run_gibbs_jit_donated if donate
                   else GIBBS._run_gibbs_jit)
@@ -145,23 +149,21 @@ def _xla_chain_peak(shapes, n_blocks: int, cfg, stacked: bool, donate: bool,
 
 
 def run_gibbs_peak(datasets, samples: int = 10, blocks: int = 4,
-                   json_out=None):
-    """Peak live-buffer bytes of a PP run: stacked/async × donate off/on."""
-    import gc
-
+                   window: int = 2, json_out=None):
+    """Peak live-buffer bytes of a PP run: stacked/async/streaming ×
+    donate off/on. The streaming executor's peak is bounded by its window
+    (W blocks in flight + W prefetched), flat in the grid size — the
+    number that lets oversized grids run at all."""
     import jax
 
     from repro.core import bmf as BMF
     from repro.core import engine as ENG
-    from repro.core import gibbs as GIBBS
     from repro.core import pp as PP
     from repro.core.partition import partition, suggest_grid
     from repro.data import synthetic as SYN
     from repro.data.sparse import apply_permutation, train_test_split
 
-    def live_bytes():
-        return sum(a.nbytes for a in jax.live_arrays()
-                   if not a.is_deleted())
+    from benchmarks.common import gibbs_live_peak
 
     rows = []
     for d in datasets:
@@ -179,14 +181,19 @@ def run_gibbs_peak(datasets, samples: int = 10, blocks: int = 4,
             buckets, key=lambda t: sum(1 for b in part.all_blocks()
                                        if b.phase == t))
         n_tag = sum(1 for b in part.all_blocks() if b.phase == tag)
-        for stacked in (True, False):
-            kind = "stacked_bucket" if stacked else "async_block"
+        # streaming_window lowers the flagged prior_use variant — the
+        # executable StreamingExecutor actually dispatches per chunk
+        for kind, stacked, nb, flags in (
+                ("stacked_bucket", True, n_tag, False),
+                ("streaming_window", True, window, True),
+                ("async_block", False, n_tag, False)):
             for donate in (False, True):
-                ma = _xla_chain_peak(buckets[tag], n_tag, cfg,
+                ma = _xla_chain_peak(buckets[tag], nb, cfg,
                                      stacked=stacked, donate=donate,
-                                     has_priors=(tag != "a"))
+                                     has_priors=(tag != "a"),
+                                     prior_flags=flags)
                 rec = {"dataset": d, "kind": kind, "bucket": tag,
-                       "n_blocks": n_tag, "donate": donate, **ma}
+                       "n_blocks": nb, "donate": donate, **ma}
                 rows.append(rec)
                 emit(f"gibbs_xla_peak/{d}/{kind}/donate={int(donate)}",
                      0.0,
@@ -197,40 +204,24 @@ def run_gibbs_peak(datasets, samples: int = 10, blocks: int = 4,
                       f"xla effective peak={ma['effective_peak_mb']:.2f}MB "
                       f"(alias {ma['alias_mb']:.2f}MB)")
 
-        for ex_name, make in (("stacked", ENG.StackedExecutor),
-                              ("async", ENG.AsyncExecutor)):
+        for ex_name, make in (
+                ("stacked", ENG.StackedExecutor),
+                ("async", ENG.AsyncExecutor),
+                ("streaming",
+                 lambda donate: ENG.StreamingExecutor(window=window,
+                                                      donate=donate))):
             for donate in (False, True):
-                peak = {"v": 0}
-
-                def sample():
-                    peak["v"] = max(peak["v"], live_bytes())
-
-                orig_g, orig_s = GIBBS.run_gibbs, GIBBS.run_gibbs_stacked
-
-                def g(*a, **k):
-                    r = orig_g(*a, **k)
-                    sample()        # post-dispatch: donated inputs already
-                    return r        # invalidated, others still held
-
-                def s(*a, **k):
-                    r = orig_s(*a, **k)
-                    sample()
-                    return r
-
-                GIBBS.run_gibbs, GIBBS.run_gibbs_stacked = g, s
-                try:
-                    gc.collect()
-                    base = live_bytes()
+                with gibbs_live_peak() as peak:
                     res = PP.run_pp(jax.random.key(7), part, cfg, test,
                                     executor=make(donate=donate))
                     jax.block_until_ready((res.U_agg, res.V_agg))
-                finally:
-                    GIBBS.run_gibbs, GIBBS.run_gibbs_stacked = orig_g, orig_s
                 rec = {"dataset": d, "executor": ex_name, "donate": donate,
                        "rmse": res.rmse,
-                       "baseline_mb": base / 2**20,
-                       "peak_live_mb": peak["v"] / 2**20,
-                       "delta_mb": (peak["v"] - base) / 2**20}
+                       "baseline_mb": peak["baseline"] / 2**20,
+                       "peak_live_mb": peak["peak"] / 2**20,
+                       "delta_mb": (peak["peak"] - peak["baseline"]) / 2**20}
+                if ex_name == "streaming":
+                    rec["window"] = window
                 del res
                 rows.append(rec)
                 emit(f"gibbs_peak/{d}/{ex_name}/donate={int(donate)}",
@@ -244,7 +235,8 @@ def run_gibbs_peak(datasets, samples: int = 10, blocks: int = 4,
     if json_out:
         Path(json_out).write_text(json.dumps(
             {"benchmark": "gibbs_peak", "samples": samples,
-             "blocks": blocks, "records": rows}, indent=2))
+             "blocks": blocks, "window": window, "records": rows},
+            indent=2))
         print("->", json_out)
     return rows
 
@@ -260,6 +252,8 @@ def main():
                          "stacked/async x donation off/on")
     ap.add_argument("--samples", type=int, default=10)
     ap.add_argument("--blocks", type=int, default=4)
+    ap.add_argument("--window", type=int, default=2,
+                    help="streaming executor window for --gibbs-peak")
     ap.add_argument("--json-out", default=None)
     ap.add_argument("--datasets", nargs="+", default=["movielens"])
     ap.add_argument("--use-kernel", choices=["on", "off", "both"],
@@ -267,7 +261,8 @@ def main():
     args = ap.parse_args()
     if args.gibbs_peak:
         run_gibbs_peak(args.datasets, samples=args.samples,
-                       blocks=args.blocks, json_out=args.json_out)
+                       blocks=args.blocks, window=args.window,
+                       json_out=args.json_out)
         return
     if args.bmf:
         run_bmf(args.datasets, args.use_kernel)

@@ -6,6 +6,7 @@ metric (RMSE, speedup, bytes, ...).
 """
 from __future__ import annotations
 
+import contextlib
 import time
 from typing import Callable
 
@@ -24,3 +25,46 @@ def timed(fn: Callable, *args, repeats: int = 1):
 
 def emit(name: str, seconds: float, derived):
     print(f"{name},{seconds * 1e6:.1f},{derived}")
+
+
+@contextlib.contextmanager
+def gibbs_live_peak():
+    """Sample the peak live device-buffer bytes at every
+    ``run_gibbs``/``run_gibbs_stacked`` dispatch inside the block: yields a
+    dict whose ``peak``/``baseline`` fields are filled in (bytes). Shared
+    by bench_roofline --gibbs-peak and bench_pp_engine's oversized-grid
+    mode so both report the same live-footprint metric."""
+    import gc
+
+    import jax
+
+    from repro.core import gibbs as GIBBS
+
+    def live_bytes():
+        return sum(a.nbytes for a in jax.live_arrays()
+                   if not a.is_deleted())
+
+    rec = {"peak": 0, "baseline": 0}
+
+    def sample():
+        rec["peak"] = max(rec["peak"], live_bytes())
+
+    orig_g, orig_s = GIBBS.run_gibbs, GIBBS.run_gibbs_stacked
+
+    def g(*a, **k):
+        r = orig_g(*a, **k)
+        sample()        # post-dispatch: donated inputs already invalidated
+        return r
+
+    def s(*a, **k):
+        r = orig_s(*a, **k)
+        sample()
+        return r
+
+    GIBBS.run_gibbs, GIBBS.run_gibbs_stacked = g, s
+    try:
+        gc.collect()
+        rec["baseline"] = live_bytes()
+        yield rec
+    finally:
+        GIBBS.run_gibbs, GIBBS.run_gibbs_stacked = orig_g, orig_s

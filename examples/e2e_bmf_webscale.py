@@ -25,6 +25,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="smaller dataset + chains (CI-friendly)")
+    ap.add_argument("--streaming", action="store_true",
+                    help="oversized grid streamed through a bounded window "
+                         "of donated block buffers (flat live peak — the "
+                         "configuration for grids that exceed device "
+                         "memory under the stacked executor)")
     args = ap.parse_args()
 
     dataset = "movielens" if args.fast else "yahoo"
@@ -35,14 +40,18 @@ def main():
 
     K = min(preset.K, 16)
     cfg = BMF.BMFConfig(K=K, n_samples=samples, burnin=samples // 3)
-    I, J = suggest_grid(train.n_rows, train.n_cols, n_blocks=4)
+    n_blocks = 32 if args.streaming else 4
+    I, J = suggest_grid(train.n_rows, train.n_cols, n_blocks=n_blocks)
     part = partition(train, I, J)
     print(f"grid {I}x{J}, balance {nnz_balance_stats(part)}")
 
     t0 = time.time()
-    # stacked executor: each PP phase bucket runs as ONE vmapped Gibbs call
-    res = PP.run_pp(jax.random.key(0), part, cfg, test, executor="stacked",
-                    verbose=True)
+    # stacked executor: each PP phase bucket runs as ONE vmapped Gibbs
+    # call; --streaming instead bounds the live footprint to a 4-block
+    # window (prefetched, donated, critical-path-first)
+    executor = "streaming" if args.streaming else "stacked"
+    res = PP.run_pp(jax.random.key(0), part, cfg, test, executor=executor,
+                    window=4 if args.streaming else None, verbose=True)
     print(f"BMF+PP[{res.executor}] RMSE={res.rmse:.4f} in "
           f"{time.time() - t0:.1f}s ({res.n_test} test ratings)")
     print(f"phase times: { {k: round(v,1) for k, v in res.phase_times_s.items()} }")

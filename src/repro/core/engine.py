@@ -37,6 +37,18 @@ and executes it through a pluggable ``Executor``:
                    device each dispatch lands on the next device
                    round-robin: per-device streams instead of one sharded
                    bucket (``distributed.stream_devices``).
+  StreamingExecutor the same ready queue, but blocks stream through a
+                   bounded window of W donated block buffers: host-side
+                   chunk assembly + double-buffered ``device_put``
+                   prefetch, ``run_gibbs_stacked(donate=True)`` recycling,
+                   live peak ≤ W×(depth+1)×block_bytes — flat in the grid
+                   size, for grids whose stacked buckets exceed HBM.
+
+The async and streaming ready queues dispatch CRITICAL-PATH-FIRST: ready
+blocks pop in descending bottom-level order (``critical_path_priority`` —
+estimated block cost plus the longest estimated successor chain, the same
+dependency-aware list-schedule depth ``PPResult.modeled_parallel_s``
+schedules measured times with), FIFO among ties.
 
 Executor contract
 -----------------
@@ -63,7 +75,6 @@ envelopes and may sum to more than the wall time —
 from __future__ import annotations
 
 import time
-from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -186,9 +197,33 @@ def _block_sq_err(pred_sum, pred_cnt, vals, mask):
 
 
 class Executor:
-    """Runs the PP phase graph; subclasses choose the schedule."""
+    """Runs the PP phase graph; subclasses choose the schedule.
+
+    Every executor records an optional event trace (``record_trace=True``):
+    ("dispatch"|"resolve", coord) pairs appended in real order. "dispatch"
+    means the block's chain was handed to the runtime (its priors were
+    read), "resolve" means its results were observed complete. The
+    conformance suite (tests/test_executor_conformance.py) asserts on this
+    trace that no executor ever dispatches a block before its dependencies
+    resolved — new executors get that check for free by reporting honestly.
+    """
     name = "base"
     devices: Tuple = ()    # AsyncExecutor's per-device streams
+
+    def __init__(self, record_trace: bool = False):
+        self.record_trace = record_trace
+        self.trace: List[Tuple[str, Coord]] = []
+
+    def _reset_run_state(self):
+        """Clear per-run mutable state. Every ``run_graph`` implementation
+        calls this first, so one executor instance is safely reusable
+        across ``run_pp`` calls (warmup + timed runs, repeated benches)
+        without traces or peak counters leaking between runs."""
+        self.trace = []
+
+    def _record(self, event: str, coord: Coord):
+        if self.record_trace:
+            self.trace.append((event, coord))
 
     def run_phase(self, ctx: PhaseContext, phase: str,
                   tasks: Sequence[BlockTask]) -> Dict[Coord, BlockOutcome]:
@@ -200,6 +235,7 @@ class Executor:
         boundary. Returns ``(outcomes, phase_times_s, spans)``; spans is
         empty — per-block dispatch→resolve timing only exists under an
         overlapped schedule."""
+        self._reset_run_state()
         outcomes: Dict[Coord, BlockOutcome] = {}
         phase_times: Dict[str, float] = {}
         for phase, tasks in graph:
@@ -236,7 +272,8 @@ class SerialExecutor(Executor):
     ``distributed_mesh``: each block's chain is itself shard_map'd."""
     name = "serial"
 
-    def __init__(self, distributed_mesh=None):
+    def __init__(self, distributed_mesh=None, record_trace: bool = False):
+        super().__init__(record_trace=record_trace)
         self.distributed_mesh = distributed_mesh
 
     def run_phase(self, ctx, phase, tasks):
@@ -244,11 +281,13 @@ class SerialExecutor(Executor):
         for t in tasks:
             blk = ctx.part.block(t.i, t.j)
             up, vp = ctx.priors(t)
+            self._record("dispatch", t.coord)
             t0 = time.time()
             res = PP.run_block(ctx.keys[t.i, t.j], blk, ctx.block_cfg(t),
                                ctx.test_p, up, vp, self.distributed_mesh,
                                shapes=ctx.shapes[t.phase])
             jax.block_until_ready(res.U)
+            self._record("resolve", t.coord)
             out[t.coord] = _outcome(res, blk, time.time() - t0)
         return out
 
@@ -278,7 +317,8 @@ class StackedExecutor(Executor):
     name = "stacked"
     block_mesh = None      # ShardedExecutor sets this
 
-    def __init__(self, donate: bool = True):
+    def __init__(self, donate: bool = True, record_trace: bool = False):
+        super().__init__(record_trace=record_trace)
         self.donate = donate
 
     def run_phase(self, ctx, phase, tasks):
@@ -298,6 +338,8 @@ class StackedExecutor(Executor):
     def _run_bucket(self, ctx, tag, group):
         s = ctx.shapes[tag]
         t0 = time.time()
+        for t in group:
+            self._record("dispatch", t.coord)
         leaves = _stack_trees([_task_leaves(ctx, t) for t in group])
         rows_arrs, cols_arrs, test_rows, test_cols, up, vp = leaves
         ii = np.array([t.i for t in group])
@@ -321,6 +363,8 @@ class StackedExecutor(Executor):
             U_prior=up, V_prior=vp, block_mesh=self.block_mesh,
             donate=self.donate)
         jax.block_until_ready(res.U)
+        for t in group:
+            self._record("resolve", t.coord)
         per = (time.time() - t0) / len(group)
         out = {}
         for b, t in enumerate(group):
@@ -338,12 +382,153 @@ class ShardedExecutor(StackedExecutor):
     communication budget."""
     name = "sharded"
 
-    def __init__(self, block_mesh=None, donate: bool = True):
-        super().__init__(donate=donate)
+    def __init__(self, block_mesh=None, donate: bool = True,
+                 record_trace: bool = False):
+        super().__init__(donate=donate, record_trace=record_trace)
         if block_mesh is None:
             from repro.core.distributed import make_block_mesh
             block_mesh = make_block_mesh()
         self.block_mesh = block_mesh
+
+
+def critical_path_priority(tasks: Dict[Coord, BlockTask],
+                           est: Dict[Coord, float],
+                           succ: Optional[Dict[Coord, List[Coord]]] = None
+                           ) -> Dict[Coord, float]:
+    """Bottom-level of every task: its estimated cost plus the longest
+    estimated chain through its successors — the same dependency-aware
+    list-schedule depth ``PPResult.modeled_parallel_s`` schedules measured
+    times with, computed a priori from cost estimates. Dispatching ready
+    blocks in DESCENDING bottom-level order (critical-path-first) closes
+    the longest chain earliest, which is where skewed grids lose time under
+    FIFO dispatch: a near-empty phase-b block can otherwise delay the dense
+    column of phase-c blocks behind it. ``succ`` may be passed pre-built
+    (``_dep_state`` shares its copy)."""
+    if succ is None:
+        succ = {c: [] for c in tasks}
+        for t in tasks.values():
+            for d in t.deps:
+                succ[d].append(t.coord)
+    memo: Dict[Coord, float] = {}
+
+    def bottom(c: Coord) -> float:
+        if c not in memo:
+            memo[c] = (est.get(c, 0.0)
+                       + max((bottom(s) for s in succ[c]), default=0.0))
+        return memo[c]
+
+    return {c: bottom(c) for c in tasks}
+
+
+def _block_cost_estimates(ctx: PhaseContext,
+                          tasks: Dict[Coord, BlockTask]) -> Dict[Coord, float]:
+    """A-priori per-block cost proxy for priority dispatch: the block's nnz
+    (+1 so empty blocks still order deterministically). Within a shape
+    bucket the padded compute is nominally shape-bound, but the fused
+    kernel's nnz-aware tile skip and the test-entry count both track nnz,
+    and on skewed grids nnz spans orders of magnitude."""
+    return {c: float(ctx.part.block(t.i, t.j).coo.nnz + 1)
+            for c, t in tasks.items()}
+
+
+def _dep_state(ctx: PhaseContext, graph, priority: bool, make_queue=None):
+    """Shared ready-queue scaffolding for the overlapped schedulers
+    (async + streaming): task/phase maps, readiness counters, successor
+    lists, and the priority ready queue seeded with the dep-free blocks.
+    ``make_queue(prio, tasks)`` lets callers substitute a queue type (the
+    streaming executor uses a per-group view). Returns
+    ``(tasks, phase_of, waiting, succ, ready)``."""
+    tasks = {t.coord: t for _, ts in graph for t in ts}
+    phase_of = {t.coord: ph for ph, ts in graph for t in ts}
+    waiting = {c: len(t.deps) for c, t in tasks.items()}
+    succ: Dict[Coord, List[Coord]] = {c: [] for c in tasks}
+    for t in tasks.values():
+        for d in t.deps:
+            succ[d].append(t.coord)
+    prio = (critical_path_priority(tasks, _block_cost_estimates(ctx, tasks),
+                                   succ=succ)
+            if priority else None)
+    ready = make_queue(prio, tasks) if make_queue else _ReadyQueue(prio)
+    for c, w in waiting.items():
+        if w == 0:
+            ready.push(c)
+    return tasks, phase_of, waiting, succ, ready
+
+
+class _ReadyQueue:
+    """Priority ready queue shared by the async and streaming schedulers:
+    pops in descending critical-path (bottom-level) order, FIFO among ties
+    — with priorities disabled it degenerates to the PR-3 FIFO exactly."""
+
+    def __init__(self, prio: Optional[Dict[Coord, float]] = None):
+        import heapq
+        self._heapq = heapq
+        self._prio = prio or {}
+        self._seq = 0
+        self._heap: List[Tuple[float, int, Coord]] = []
+
+    def push(self, c: Coord):
+        self._heapq.heappush(self._heap,
+                             (-self._prio.get(c, 0.0), self._seq, c))
+        self._seq += 1
+
+    def pop(self) -> Coord:
+        return self._heapq.heappop(self._heap)[2]
+
+    def __len__(self):
+        return len(self._heap)
+
+    def __bool__(self):
+        return bool(self._heap)
+
+
+class _GroupedReadyQueue:
+    """Streaming ready queue: a global priority heap for lead selection
+    plus one heap per chunk-group key, so forming a chunk is O(W log n)
+    instead of draining and re-pushing the whole queue whenever many
+    groups interleave (hundreds of phase-c blocks behind a lone phase-b
+    lead on the oversized grids streaming targets). Entries popped
+    through one view are lazily skipped in the other."""
+
+    def __init__(self, prio, group_of):
+        self._prio = prio
+        self._group_of = group_of
+        self._global = _ReadyQueue(prio)
+        self._groups: Dict = {}
+        self._taken: set = set()
+        self._n = 0
+
+    def push(self, c: Coord):
+        self._global.push(c)
+        self._groups.setdefault(self._group_of(c),
+                                _ReadyQueue(self._prio)).push(c)
+        self._n += 1
+
+    def __len__(self):
+        return self._n
+
+    def __bool__(self):
+        return self._n > 0
+
+    def pop_chunk(self, max_n: int) -> List[Coord]:
+        """Highest-priority ready block plus up to ``max_n - 1`` more from
+        its group, in priority order."""
+        while True:
+            lead = self._global.pop()
+            if lead not in self._taken:
+                break
+        self._taken.add(lead)
+        self._n -= 1
+        take = [lead]
+        grp = self._groups[self._group_of(lead)]
+        while grp and len(take) < max_n:
+            c = grp.pop()
+            if c in self._taken:
+                continue
+            self._taken.add(c)
+            self._n -= 1
+            take.append(c)
+        return take
 
 
 class AsyncExecutor(Executor):
@@ -379,16 +564,23 @@ class AsyncExecutor(Executor):
     block ever dispatches before its dependencies resolved.
     ``_is_resolved`` is the completion-detection seam tests override to
     fake arbitrary completion orders.
+
+    ``priority=True`` (default) pops the ready queue critical-path-first:
+    ready blocks are ordered by their bottom-level (estimated cost + the
+    longest estimated chain through their successors,
+    ``critical_path_priority``), so on skewed grids the dense phase-b
+    blocks that gate whole phase-c rows/columns dispatch before the
+    near-empty stragglers. ``priority=False`` restores plain FIFO.
     """
     name = "async"
 
     def __init__(self, donate: bool = True, block_mesh=None,
-                 record_trace: bool = False):
+                 record_trace: bool = False, priority: bool = True):
         from repro.core.distributed import stream_devices
+        super().__init__(record_trace=record_trace)
         self.donate = donate
         self.devices = stream_devices(block_mesh)
-        self.record_trace = record_trace
-        self.trace: List[Tuple[str, Coord]] = []
+        self.priority = priority
         self._n_dispatched = 0
 
     def run_phase(self, ctx, phase, tasks):
@@ -400,19 +592,14 @@ class AsyncExecutor(Executor):
     def _is_resolved(self, coord: Coord, signal) -> bool:
         return signal.is_ready()
 
-    def _record(self, event: str, coord: Coord):
-        if self.record_trace:
-            self.trace.append((event, coord))
+    def _reset_run_state(self):
+        super()._reset_run_state()
+        self._n_dispatched = 0
 
     def run_graph(self, ctx, graph, verbose: bool = False):
-        tasks = {t.coord: t for _, ts in graph for t in ts}
-        phase_of = {t.coord: ph for ph, ts in graph for t in ts}
-        waiting = {c: len(t.deps) for c, t in tasks.items()}
-        succ: Dict[Coord, List[Coord]] = {c: [] for c in tasks}
-        for t in tasks.values():
-            for d in t.deps:
-                succ[d].append(t.coord)
-        ready = deque(c for c, w in waiting.items() if w == 0)
+        self._reset_run_state()
+        tasks, phase_of, waiting, succ, ready = _dep_state(
+            ctx, graph, self.priority)
         inflight: Dict[Coord, Tuple] = {}   # coord -> (signal, outcome, t_d)
         outcomes: Dict[Coord, BlockOutcome] = {}
         spans: Dict[Coord, Tuple[float, float]] = {}
@@ -422,7 +609,7 @@ class AsyncExecutor(Executor):
         t0 = time.time()
         while ready or inflight:
             while ready:
-                c = ready.popleft()
+                c = ready.pop()
                 self._record("dispatch", c)
                 td = time.time()
                 signal, out = self._dispatch(ctx, tasks[c])
@@ -457,7 +644,7 @@ class AsyncExecutor(Executor):
                 for s in succ[c]:
                     waiting[s] -= 1
                     if waiting[s] == 0:
-                        ready.append(s)
+                        ready.push(s)
         # per-phase envelopes: first dispatch → last resolve. Phases
         # overlap, so these may sum to MORE than the wall time.
         phase_times = {ph: last_r[ph] - first_d[ph] for ph in first_d}
@@ -507,29 +694,334 @@ class AsyncExecutor(Executor):
         return sq, out
 
 
-def make_executor(spec, distributed_mesh=None, block_mesh=None) -> Executor:
-    """Resolve run_pp's ``executor=`` argument: a name or an instance.
-    An intra-block ``distributed_mesh`` forces the serial executor — the
-    two shard_map levels don't compose (yet)."""
+# Per-block masked Σ(pred-val)² over a (W, n_test) window chunk — the SAME
+# scalar as _block_sq_err, batched: one tiny (W,) vector is the chunk's
+# completion signal AND its RMSE numerators.
+_chunk_sq_err = jax.jit(jax.vmap(_block_sq_err))
+
+
+def _dummy_prior(n: int, K: int) -> RowGaussians:
+    """Placeholder prior rows for flag=0 slots of a window chunk. Never
+    selected (the per-block flag routes those blocks to the resampled NW
+    hyperprior); only has to be finite so the unused ``where`` branch is
+    well-defined."""
+    return RowGaussians(eta=jnp.zeros((n, K)),
+                        Lambda=jnp.broadcast_to(jnp.eye(K), (n, K, K)))
+
+
+@dataclass
+class _StagedChunk:
+    """A window chunk whose host→device transfer has been issued (the
+    prefetch): device leaves + per-block metadata, waiting to dispatch."""
+    tasks: List[BlockTask]        # true tasks, ≤ W (repeat-padded to W)
+    shape: "PP.BlockShapes"
+    cfg: BMF.BMFConfig
+    dev: Tuple                    # (ri, rv, rm, ci, cv, cm, tr, tc, tv, tm)
+    keys: jax.Array               # (W,) typed PRNG keys
+    U_prior: RowGaussians         # (W, n_rows, ...) padded (dummies where off)
+    V_prior: RowGaussians
+    u_use: jax.Array              # (W,) {0,1} prior flags
+    v_use: jax.Array
+    n_obs: List[int]
+
+
+class StreamingExecutor(Executor):
+    """Bounded-window streaming schedule for out-of-memory block grids.
+
+    The stacked executor materializes a whole phase bucket on device at
+    once — ``num_blocks_in_bucket × block_bytes`` — which web-scale grids
+    (thousands of blocks) cannot co-resident in HBM. This executor runs the
+    SAME dependency-driven ready queue as the async scheduler but moves
+    blocks through a bounded window of ``W`` donated block buffers:
+
+      * ready blocks are popped critical-path-first (``_ReadyQueue`` over
+        ``critical_path_priority``) and grouped into chunks of up to W
+        blocks sharing one window shape and chain config (short chunks are
+        repeat-padded to exactly W so ONE executable serves every chunk);
+      * each chunk's CSR planes/test entries are assembled on the HOST
+        (``pp.pad_block_inputs_host``) and shipped with one async
+        ``device_put`` — the double-buffered prefetch: the next chunk's
+        H2D transfer runs while the current chunk computes;
+      * chunks dispatch through ``gibbs.run_gibbs_stacked(donate=True)``:
+        XLA recycles the window buffers (U0/V0 alias the U/V outputs, the
+        planes return to the allocator), so the live input footprint is
+        ``≤ W × (depth + 1) × block_bytes`` — flat in the grid size
+        (``peak_window_blocks`` records the realized bound;
+        ``bench_roofline --gibbs-peak`` measures it);
+      * completion is detected by non-blocking ``is_ready()`` polls on each
+        chunk's (W,) squared-error vector, falling back to blocking on the
+        OLDEST in-flight chunk only — same contract as the async executor,
+        and the same ``_is_resolved`` seam for the conformance fake-delay
+        stress;
+      * per-phase shape buckets are COALESCED first
+        (``pp.BlockShapes.coalesce`` / ``partition.coalesce_shapes``):
+        buckets within the waste budget share one window shape, and the
+        per-block prior flags (``run_gibbs_stacked(prior_use=...)``) let
+        that single executable serve phase-a/b/c blocks despite their
+        different prior structures.
+
+    Per-block chains are the stacked executor's vmapped semantics (same
+    keys, same padding), so RMSE matches serial to batched-fp tolerance
+    and results are bit-identical across runs regardless of how completion
+    timing regroups the chunks.
+
+    ``max_waste`` defaults to 1.0 — only bit-identical shapes merge, which
+    preserves exact chain parity with the serial/stacked reference (the
+    padded row count feeds the NW hyper-resample and the RNG shapes, so
+    ANY padding change perturbs the chains). Raising it trades that strict
+    parity for fewer window executables and a single recycled buffer pool:
+    results remain valid Gibbs chains, just not the reference's draws.
+    """
+    name = "streaming"
+
+    def __init__(self, window: int = 4, donate: bool = True,
+                 max_waste: float = 1.0, priority: bool = True,
+                 depth: int = 2, record_trace: bool = False):
+        super().__init__(record_trace=record_trace)
+        self.window = max(1, int(window))
+        self.donate = donate
+        self.max_waste = max_waste
+        self.priority = priority
+        self.depth = max(1, int(depth))       # in-flight chunks before block
+        self.peak_window_blocks = 0           # realized live-buffer bound
+        self.window_shapes: Optional[Dict[str, "PP.BlockShapes"]] = None
+
+    def run_phase(self, ctx, phase, tasks):
+        raise NotImplementedError(
+            "StreamingExecutor streams whole graphs through its window "
+            "(run_graph), not single phases")
+
+    # -- completion-detection seam (tests fake completion order here) -----
+    def _is_resolved(self, coord: Coord, signal) -> bool:
+        return signal.is_ready()
+
+    def _group_key(self, ctx, task, shapes):
+        cfg = ctx.block_cfg(task)
+        return (id(shapes[task.phase]), cfg.n_samples, cfg.burnin)
+
+    def _pop_chunk(self, ctx, ready: _GroupedReadyQueue,
+                   tasks) -> List[BlockTask]:
+        """Up to W ready blocks sharing the top-priority block's window
+        shape and chain config — priority order within the group."""
+        return [tasks[c] for c in ready.pop_chunk(self.window)]
+
+    def _stage(self, ctx: PhaseContext, chunk: List[BlockTask],
+               shapes) -> _StagedChunk:
+        """Assemble one chunk on the host and issue its (async) H2D
+        transfer. Deps are resolved (the chunk came off the ready queue),
+        so the device-resident priors are read here too."""
+        s = shapes[chunk[0].phase]
+        K = ctx.cfg.K
+        W = self.window
+        sel = list(range(len(chunk))) + [len(chunk) - 1] * (W - len(chunk))
+        host = [PP.pad_block_inputs_host(ctx.part.block(t.i, t.j), s,
+                                         ctx.test_p) for t in chunk]
+
+        def stack(get):
+            return np.stack([get(host[i]) for i in sel])
+
+        host_leaves = (stack(lambda h: h[0].idx), stack(lambda h: h[0].val),
+                       stack(lambda h: h[0].mask),
+                       stack(lambda h: h[1].idx), stack(lambda h: h[1].val),
+                       stack(lambda h: h[1].mask),
+                       stack(lambda h: h[2]), stack(lambda h: h[3]),
+                       stack(lambda h: h[4]), stack(lambda h: h[5]))
+        dev = jax.device_put(host_leaves)     # ONE async transfer per chunk
+
+        ups, vps, uf, vf = [], [], [], []
+        for t in chunk:
+            up, vp = ctx.priors(t)
+            ups.append(PP._pad_prior(up, s.n_rows, K) if up is not None
+                       else _dummy_prior(s.n_rows, K))
+            vps.append(PP._pad_prior(vp, s.n_cols, K) if vp is not None
+                       else _dummy_prior(s.n_cols, K))
+            uf.append(float(up is not None))
+            vf.append(float(vp is not None))
+        sel_tasks = [chunk[i] for i in sel]
+        ii = np.array([t.i for t in sel_tasks])
+        jj = np.array([t.j for t in sel_tasks])
+        return _StagedChunk(
+            tasks=chunk, shape=s, cfg=ctx.block_cfg(chunk[0]), dev=dev,
+            keys=ctx.keys[ii, jj],
+            U_prior=_stack_trees([ups[i] for i in sel]),
+            V_prior=_stack_trees([vps[i] for i in sel]),
+            u_use=jnp.asarray([uf[i] for i in sel], jnp.float32),
+            v_use=jnp.asarray([vf[i] for i in sel], jnp.float32),
+            n_obs=[int(h[5].sum()) for h in host])
+
+    def _dispatch(self, ctx: PhaseContext, st: _StagedChunk):
+        """Dispatch one staged chunk; returns (signal, outcomes). The
+        window buffers are donated — after this call nothing holds them
+        and XLA recycles their storage for the next chunk."""
+        ri, rv, rm, ci, cv, cm, tr, tc, tv, tmask = st.dev
+        res = GIBBS.run_gibbs_stacked(
+            st.keys,
+            PaddedCSR(ri, rv, rm, n_cols=st.shape.n_cols),
+            PaddedCSR(ci, cv, cm, n_cols=st.shape.n_rows),
+            tr, tc, st.cfg,
+            U_prior=st.U_prior, V_prior=st.V_prior,
+            prior_use=(st.u_use, st.v_use), donate=self.donate)
+        sq = _chunk_sq_err(res.acc.pred_sum, res.acc.pred_cnt, tv, tmask)
+        outs: Dict[Coord, BlockOutcome] = {}
+        for b, t in enumerate(st.tasks):      # padded duplicates dropped
+            blk = ctx.part.block(t.i, t.j)
+            nr, nc = len(blk.row_ids), len(blk.col_ids)
+            U_post = RowGaussians(eta=res.U_post.eta[b, :nr],
+                                  Lambda=res.U_post.Lambda[b, :nr])
+            V_post = RowGaussians(eta=res.V_post.eta[b, :nc],
+                                  Lambda=res.V_post.Lambda[b, :nc])
+            ctx.U_posts[t.coord] = U_post
+            ctx.V_posts[t.coord] = V_post
+            outs[t.coord] = BlockOutcome(U_post=U_post, V_post=V_post,
+                                         pred_mean=None, seconds=0.0,
+                                         sq_err=sq[b], n_obs=st.n_obs[b])
+        return sq, outs
+
+    def _reset_run_state(self):
+        super()._reset_run_state()
+        self.peak_window_blocks = 0
+        self.window_shapes = None
+
+    def run_graph(self, ctx, graph, verbose: bool = False):
+        self._reset_run_state()
+        shapes = PP.BlockShapes.coalesce(ctx.shapes, ctx.cfg.K,
+                                         self.max_waste)
+        tasks, phase_of, waiting, succ, ready = _dep_state(
+            ctx, graph, self.priority,
+            make_queue=lambda prio, ts: _GroupedReadyQueue(
+                prio, lambda c: self._group_key(ctx, ts[c], shapes)))
+        self.window_shapes = shapes
+        if verbose:
+            n_buckets = len({id(s) for s in shapes.values()})
+            print(f"[pp:{self.name}] window={self.window} depth={self.depth} "
+                  f"{n_buckets} coalesced bucket(s) over {len(shapes)} phase "
+                  f"tag(s)", flush=True)
+
+        staged: Optional[_StagedChunk] = None
+        inflight: List[Tuple[List[BlockTask], jax.Array,
+                             Dict[Coord, BlockOutcome], float]] = []
+        outcomes: Dict[Coord, BlockOutcome] = {}
+        spans: Dict[Coord, Tuple[float, float]] = {}
+        first_d: Dict[str, float] = {}
+        last_r: Dict[str, float] = {}
+        remaining = {ph: len(ts) for ph, ts in graph}
+        t0 = time.time()
+
+        def note_peak():
+            live = self.window * (len(inflight) + (staged is not None))
+            self.peak_window_blocks = max(self.peak_window_blocks, live)
+
+        while ready or staged is not None or inflight:
+            if staged is None and ready:
+                staged = self._stage(ctx, self._pop_chunk(ctx, ready, tasks),
+                                     shapes)
+                note_peak()
+            if staged is not None and len(inflight) < self.depth:
+                ch, staged = staged, None
+                for t in ch.tasks:
+                    self._record("dispatch", t.coord)
+                td = time.time()
+                signal, outs = self._dispatch(ctx, ch)
+                inflight.append((ch.tasks, signal, outs, td))
+                for t in ch.tasks:
+                    first_d.setdefault(phase_of[t.coord], td - t0)
+                # double-buffered prefetch: the NEXT chunk's H2D transfer
+                # overlaps this chunk's compute
+                if ready:
+                    staged = self._stage(ctx,
+                                         self._pop_chunk(ctx, ready, tasks),
+                                         shapes)
+                note_peak()
+                continue
+            # window full (or nothing stageable): retire chunks
+            idxs = [i for i, (ts_, sig, _, _) in enumerate(inflight)
+                    if self._is_resolved(ts_[0].coord, sig)]
+            if not idxs:
+                jax.block_until_ready(inflight[0][1])
+                idxs = [0]
+            for i in sorted(idxs, reverse=True):
+                chunk_tasks, sig, outs, td = inflight.pop(i)
+                tr_ = time.time()
+                # one executable ran the whole chunk: split its wall evenly
+                # across members (mirrors StackedExecutor's bucket split)
+                per = (tr_ - td) / len(chunk_tasks)
+                for t in chunk_tasks:
+                    c = t.coord
+                    self._record("resolve", c)
+                    out = outs[c]
+                    out.seconds = per
+                    spans[c] = (td - t0, tr_ - t0)
+                    outcomes[c] = out
+                    ph = phase_of[c]
+                    remaining[ph] -= 1
+                    last_r[ph] = tr_ - t0
+                    if verbose and remaining[ph] == 0:
+                        ts2 = [t2 for t2 in tasks.values()
+                               if phase_of[t2.coord] == ph]
+                        print(f"[pp:{self.name}] phase {ph}: {len(ts2)} "
+                              f"block(s) {_phase_desc(ctx, ts2)} "
+                              f"{last_r[ph] - first_d[ph]:.2f}s "
+                              f"(dispatch→resolve envelope; phases overlap)",
+                              flush=True)
+                    for s2 in succ[c]:
+                        waiting[s2] -= 1
+                        if waiting[s2] == 0:
+                            ready.push(s2)
+        phase_times = {ph: last_r[ph] - first_d[ph] for ph in first_d}
+        return outcomes, phase_times, spans
+
+
+EXECUTORS: Dict[str, type] = {
+    "serial": SerialExecutor,
+    "stacked": StackedExecutor,
+    "sharded": ShardedExecutor,
+    "async": AsyncExecutor,
+    "streaming": StreamingExecutor,
+}
+"""Executor registry. ``run_pp(executor=<name>)`` resolves here, and the
+conformance suite (tests/test_executor_conformance.py) parametrizes over
+exactly these names — registering a new executor auto-enrolls it in the
+battery (fixed-key RMSE parity, bitwise determinism, dependency-safe
+dispatch trace, transfer-guard-clean aggregation). Every executor class
+must accept ``record_trace=`` and report dispatch/resolve events honestly.
+"""
+
+
+def make_executor(spec, distributed_mesh=None, block_mesh=None,
+                  window=None) -> Executor:
+    """Resolve run_pp's ``executor=`` argument: a registry name or an
+    instance. An intra-block ``distributed_mesh`` forces the serial
+    executor — the two shard_map levels don't compose (yet). ``window``
+    is the streaming executor's window size (ignored by the others)."""
     if isinstance(spec, Executor):
         if distributed_mesh is not None:
             raise ValueError(
                 "distributed_mesh with an Executor instance is ambiguous — "
                 "construct SerialExecutor(distributed_mesh) yourself or pass "
                 "executor='serial'")
+        if window is not None:
+            raise ValueError(
+                "window with an Executor instance is ambiguous — construct "
+                "StreamingExecutor(window=...) yourself or pass "
+                "executor='streaming'")
         return spec
     if distributed_mesh is not None:
         spec = "serial"
-    if spec == "serial":
-        return SerialExecutor(distributed_mesh)
-    if spec == "stacked":
-        return StackedExecutor()
-    if spec == "sharded":
-        return ShardedExecutor(block_mesh)
-    if spec == "async":
-        return AsyncExecutor(block_mesh=block_mesh)
-    raise ValueError(f"unknown executor {spec!r} "
-                     "(expected serial | stacked | sharded | async)")
+    if spec not in EXECUTORS:
+        raise ValueError(f"unknown executor {spec!r} "
+                         f"(expected {' | '.join(EXECUTORS)})")
+    factories = {
+        "serial": lambda: SerialExecutor(distributed_mesh),
+        "stacked": lambda: StackedExecutor(),
+        "sharded": lambda: ShardedExecutor(block_mesh),
+        "async": lambda: AsyncExecutor(block_mesh=block_mesh),
+        "streaming": lambda: StreamingExecutor(
+            **({} if window is None else {"window": int(window)})),
+    }
+    # a registered executor without a dedicated factory gets default
+    # construction — never a silent fallthrough to a different class
+    factory = factories.get(spec, EXECUTORS[spec])
+    return factory()
 
 
 def run_phase_graph(key, part: Partition, cfg: BMF.BMFConfig, test: COO,

@@ -138,7 +138,7 @@ def run_gibbs(key,
 def _run_gibbs_stacked_dispatch(key_data, csr_rows_arrs, csr_cols_arrs,
                                 test_rows, test_cols, cfg, n_cols_r, n_cols_c,
                                 n_samples, burnin, U_prior, V_prior, U0, V0,
-                                mesh=None):
+                                u_use=None, v_use=None, mesh=None):
     """Batched (leading block axis) chain runner.
 
     Every array argument carries a leading axis B; ``mesh`` (hashable,
@@ -147,30 +147,38 @@ def _run_gibbs_stacked_dispatch(key_data, csr_rows_arrs, csr_cols_arrs,
     collectives inside the phase (communication stays at phase boundaries,
     which live on the host between calls).
 
+    ``u_use`` / ``v_use`` are optional per-block {0,1} flags: when given
+    (streaming window chunks), block b uses the fixed prior where its flag
+    is 1 and the resampled NW hyperprior where it is 0 — one executable
+    then serves blocks of EVERY phase tag (see ``_run_gibbs_impl``).
+
     Keys travel as raw uint32 key data so the leaves are plain arrays for
     vmap/shard_map; per-block semantics are EXACTLY ``_run_gibbs_impl``'s.
     """
-    def batched(kd, rows_arrs, cols_arrs, tr, tc, ns, bi, up, vp, u0, v0):
-        def one(kd1, ra, ca, tr1, tc1, up1, vp1, u01, v01):
+    def batched(kd, rows_arrs, cols_arrs, tr, tc, ns, bi, up, vp, u0, v0,
+                uu, vv):
+        def one(kd1, ra, ca, tr1, tc1, up1, vp1, u01, v01, uu1, vv1):
             return _run_gibbs_impl(
                 jax.random.wrap_key_data(kd1),
                 PaddedCSR(*ra, n_cols=n_cols_r),
                 PaddedCSR(*ca, n_cols=n_cols_c),
-                tr1, tc1, cfg, ns, bi, up1, vp1, u01, v01)
-        return jax.vmap(one)(kd, rows_arrs, cols_arrs, tr, tc, up, vp, u0, v0)
+                tr1, tc1, cfg, ns, bi, up1, vp1, u01, v01, uu1, vv1)
+        return jax.vmap(one)(kd, rows_arrs, cols_arrs, tr, tc, up, vp,
+                             u0, v0, uu, vv)
 
     if mesh is None:
         return batched(key_data, csr_rows_arrs, csr_cols_arrs, test_rows,
-                       test_cols, n_samples, burnin, U_prior, V_prior, U0, V0)
+                       test_cols, n_samples, burnin, U_prior, V_prior, U0, V0,
+                       u_use, v_use)
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
     blk = P("block")
     fsh = shard_map(batched, mesh=mesh,
                     in_specs=(blk, blk, blk, blk, blk, P(), P(),
-                              blk, blk, blk, blk),
+                              blk, blk, blk, blk, blk, blk),
                     out_specs=blk, check_rep=False)
     return fsh(key_data, csr_rows_arrs, csr_cols_arrs, test_rows, test_cols,
-               n_samples, burnin, U_prior, V_prior, U0, V0)
+               n_samples, burnin, U_prior, V_prior, U0, V0, u_use, v_use)
 
 
 _STATIC_STACKED = ("cfg", "n_cols_r", "n_cols_c", "mesh")
@@ -195,7 +203,8 @@ def run_gibbs_stacked(keys,
                       cfg: BMF.BMFConfig,
                       U_prior: Optional[RowGaussians] = None,  # (B, N, ...) or None
                       V_prior: Optional[RowGaussians] = None,
-                      block_mesh=None, donate: bool = False) -> GibbsResult:
+                      block_mesh=None, donate: bool = False,
+                      prior_use: Optional[Tuple] = None) -> GibbsResult:
     """Batched analogue of ``run_gibbs``: one jitted vmapped executable runs
     B identically-shaped blocks' chains at once (the PP StackedExecutor's
     hot path — ``BlockShapes.per_phase`` guarantees the common shapes).
@@ -210,11 +219,22 @@ def run_gibbs_stacked(keys,
 
     ``donate`` mirrors ``run_gibbs``: the stacked CSR planes, test indices,
     and U0/V0 are donated to XLA (same caller-must-not-reuse contract).
+
+    ``prior_use``: optional ``(u_use, v_use)`` per-block {0,1} flag arrays
+    (B,). With flags, ``U_prior``/``V_prior`` must be full (B, ...) arrays
+    (dummy rows where a block has no propagated prior) and block b follows
+    its flags: 1 = the fixed propagated prior, 0 = the hierarchical NW
+    prior resampled each sweep — bit-identical per block to the dedicated
+    with/without-prior executables, because the hyper-sampling keys are
+    split unconditionally either way. This is the streaming executor's
+    buffer-shape reuse lever: ONE window executable serves phase a, b and
+    c blocks instead of one executable per prior structure.
     """
     N, D, K = csr_rows.idx.shape[1], csr_cols.idx.shape[1], cfg.K
     ks = jax.vmap(jax.random.split)(keys)                     # (B, 2)
     U0, V0 = jax.vmap(lambda k: BMF.init_factors(k, N, D, K))(ks[:, 0])
     cfg_key = cfg._replace(n_samples=0, burnin=0, phase_bc_samples=None)
+    u_use, v_use = prior_use if prior_use is not None else (None, None)
     fn = _run_gibbs_stacked_jit_donated if donate else _run_gibbs_stacked_jit
     with (_quiet_donation() if donate else contextlib.nullcontext()):
         return fn(
@@ -224,11 +244,12 @@ def run_gibbs_stacked(keys,
             test_rows, test_cols, cfg_key, csr_rows.n_cols, csr_cols.n_cols,
             jnp.asarray(cfg.n_samples, jnp.int32),
             jnp.asarray(cfg.burnin, jnp.int32),
-            U_prior, V_prior, U0, V0, mesh=block_mesh)
+            U_prior, V_prior, U0, V0, u_use, v_use, mesh=block_mesh)
 
 
 def _run_gibbs_impl(key, csr_rows, csr_cols, test_rows, test_cols, cfg,
-                    n_samples, burnin, U_prior, V_prior, U0, V0) -> GibbsResult:
+                    n_samples, burnin, U_prior, V_prior, U0, V0,
+                    u_use=None, v_use=None) -> GibbsResult:
     N, D, K = csr_rows.n_rows, csr_cols.n_rows, cfg.K
     nw = POST.default_nw(K)
 
@@ -238,20 +259,27 @@ def _run_gibbs_impl(key, csr_rows, csr_cols, test_rows, test_cols, cfg,
         U_sum=jnp.zeros((N, K)), U_outer=jnp.zeros((N, K, K)),
         V_sum=jnp.zeros((D, K)), V_outer=jnp.zeros((D, K, K)))
 
+    def pick_prior(fixed, use, kh, X, n):
+        """Prior for one factor this sweep. ``use=None`` keeps the two
+        dedicated structures (fixed prior XOR NW resample); a traced
+        ``use`` flag selects per block between the fixed prior and the
+        resampled hyperprior — both sides are elementwise identical to the
+        dedicated paths (the hyper key was split unconditionally), so
+        flagged executables are bit-compatible per block."""
+        if fixed is not None and use is None:
+            return fixed
+        mu, Lam = BMF.sample_hyper(kh, X, nw)
+        hier = POST.broadcast_prior(mu, Lam, n)
+        if fixed is None:
+            return hier
+        return jax.tree.map(lambda f, h: jnp.where(use, f, h), fixed, hier)
+
     def sweep(i, carry):
         key, U, V, acc = carry
         key, kh1, kh2, ku, kv = jax.random.split(key, 5)
 
-        if U_prior is None:
-            muU, LamU = BMF.sample_hyper(kh1, U, nw)
-            u_prior = POST.broadcast_prior(muU, LamU, N)
-        else:
-            u_prior = U_prior
-        if V_prior is None:
-            muV, LamV = BMF.sample_hyper(kh2, V, nw)
-            v_prior = POST.broadcast_prior(muV, LamV, D)
-        else:
-            v_prior = V_prior
+        u_prior = pick_prior(U_prior, u_use, kh1, U, N)
+        v_prior = pick_prior(V_prior, v_use, kh2, V, D)
 
         U = BMF.sample_factor(ku, csr_rows, V, cfg.tau, u_prior,
                               cfg.use_kernel)

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import Callable, Dict, Hashable, List, Optional, Tuple
 
 import numpy as np
 
@@ -133,6 +133,48 @@ def partition(coo: COO, I: int, J: int, balance=True,
     return Partition(I=I, J=J, row_perm=row_perm, col_perm=col_perm,
                      row_splits=row_splits, col_splits=col_splits,
                      blocks=blocks)
+
+
+def coalesce_shapes(shapes: Dict[Hashable, Tuple[int, ...]],
+                    footprint: Callable[[Tuple[int, ...]], float],
+                    max_waste: float = 1.5) -> Dict[Hashable, Tuple[int, ...]]:
+    """Bucket-coalescing: merge shape buckets so ONE padded shape (the
+    elementwise max of its members) serves many blocks, as long as no
+    member's ``footprint`` is inflated by more than ``max_waste``.
+
+    The streaming executor's window buffers have one shape per bucket, so
+    fewer buckets = fewer window executables and better buffer reuse across
+    phase tags — but merging a sparse bucket into a dense one would pad the
+    sparse blocks to the dense worst case, which is compute as well as
+    memory (the Gibbs einsum work scales with padded M). The waste budget is
+    the compatibility rule: a merge happens only if, for EVERY member of the
+    resulting group, footprint(merged) <= max_waste * footprint(member).
+
+    ``shapes`` maps bucket keys to same-length int tuples; returns the same
+    keys mapped to their group's merged tuple (coalesced keys share one
+    tuple object). ``footprint`` must be monotone in each dimension.
+    """
+    assert max_waste >= 1.0, max_waste
+    order = sorted(shapes, key=lambda k: (-footprint(shapes[k]), str(k)))
+    groups: List[Tuple[Tuple[int, ...], List[Hashable]]] = []
+    for k in order:
+        s = shapes[k]
+        placed = False
+        for gi, (gshape, members) in enumerate(groups):
+            merged = tuple(max(a, b) for a, b in zip(gshape, s))
+            fm = footprint(merged)
+            if all(fm <= max_waste * footprint(shapes[m])
+                   for m in members + [k]):
+                groups[gi] = (merged, members + [k])
+                placed = True
+                break
+        if not placed:
+            groups.append((s, [k]))
+    out: Dict[Hashable, Tuple[int, ...]] = {}
+    for gshape, members in groups:
+        for m in members:
+            out[m] = gshape
+    return out
 
 
 def nnz_balance_stats(part: Partition) -> dict:

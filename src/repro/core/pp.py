@@ -39,7 +39,7 @@ from repro.core import bmf as BMF
 from repro.core import gibbs as GIBBS
 from repro.core.partition import Block, Partition
 from repro.core.posterior import RowGaussians
-from repro.data.sparse import COO, coo_to_padded_csr
+from repro.data.sparse import COO, PaddedCSR, coo_to_padded_csr
 
 
 @dataclass
@@ -146,6 +146,42 @@ class BlockShapes:
     m_cols: int       # max nnz per item row
     n_test: int
 
+    def astuple(self) -> Tuple[int, int, int, int, int]:
+        return (self.n_rows, self.n_cols, self.m_rows, self.m_cols,
+                self.n_test)
+
+    def block_bytes(self, K: int) -> int:
+        """Device bytes ONE block occupies at this bucket's padding: CSR
+        planes in both orientations (idx/val/mask), the four test vectors
+        (row/col indices, values, mask), both propagated priors (eta +
+        Lambda), and the U0/V0
+        factor initializations — i.e. what a stacked executor multiplies
+        by its batch size, and what the streaming executor multiplies by
+        its window."""
+        csr = 3 * 4 * (self.n_rows * self.m_rows + self.n_cols * self.m_cols)
+        tst = 4 * 4 * self.n_test        # tr, tc, tv, tmask
+        priors = 4 * (self.n_rows + self.n_cols) * (K + K * K)
+        factors = 4 * (self.n_rows + self.n_cols) * K
+        return csr + tst + priors + factors
+
+    @staticmethod
+    def coalesce(per_phase: Dict[str, "BlockShapes"], K: int,
+                 max_waste: float = 1.5) -> Dict[str, "BlockShapes"]:
+        """Bucket-coalescing for the streaming window: merge per-phase
+        buckets whose padded footprints are within ``max_waste`` of each
+        other (``partition.coalesce_shapes``), so one window shape — and
+        therefore ONE window executable and one recycled buffer pool —
+        serves blocks of several phase tags. Tags that coalesce share one
+        ``BlockShapes`` instance (identity marks the group)."""
+        from repro.core.partition import coalesce_shapes
+        merged = coalesce_shapes(
+            {tag: s.astuple() for tag, s in per_phase.items()},
+            footprint=lambda t: BlockShapes(*t).block_bytes(K),
+            max_waste=max_waste)
+        uniq: Dict[Tuple[int, ...], BlockShapes] = {}
+        return {tag: uniq.setdefault(t, BlockShapes(*t))
+                for tag, t in merged.items()}
+
     @staticmethod
     def of(part: Partition, test: Optional[COO],
            phases: Optional[Tuple[str, ...]] = None) -> "BlockShapes":
@@ -187,31 +223,25 @@ def _pad_prior(prior: Optional[RowGaussians], n: int, K: int):
     return RowGaussians(eta=eta, Lambda=Lam)
 
 
-def pad_block_inputs(block: Block, shapes: BlockShapes, K: int,
-                     test: Optional[COO],
-                     U_prior: Optional[RowGaussians],
-                     V_prior: Optional[RowGaussians]):
-    """Pad one block's CSR planes, priors, and test entries to its phase
-    shape bucket — the single source of truth for bucketed padding.
-    ``run_block`` (serial executor), ``engine._task_leaves`` (stacked/
-    sharded executors), and ``engine.AsyncExecutor._dispatch`` all call
-    this; the executors' chain-identical parity depends on them never
-    diverging.
+def pad_block_inputs_host(block: Block, shapes: BlockShapes,
+                          test: Optional[COO]):
+    """Host-side (numpy) padding of one block's CSR planes and test
+    entries to a shape bucket — the transferable part of
+    ``pad_block_inputs``, kept in numpy so the streaming executor can
+    assemble a whole window chunk on the host and ship it with ONE async
+    ``device_put`` (the double-buffered prefetch H2D transfer) while the
+    previous chunk is still computing. Priors are NOT built here: they are
+    device-resident outputs of earlier blocks.
 
-    Returns ``(csr_rows, csr_cols, tr, tc, tv, tmask, U_prior, V_prior)``:
-    padded test indices, VALUES, and a validity mask over the bucket's
-    n_test slots (one submatrix scan serves all three) — tv/tmask let the
-    engine compute each block's squared error as a tiny on-device scalar
-    instead of pulling the (n_test,) prediction vector to the host."""
+    Returns ``(csr_rows, csr_cols, tr, tc, tv, tmask)`` with numpy leaves.
+    """
     csr_rows = coo_to_padded_csr(block.coo, max_nnz=shapes.m_rows,
                                  n_rows_pad=shapes.n_rows,
-                                 n_cols_pad=shapes.n_cols)
+                                 n_cols_pad=shapes.n_cols, as_numpy=True)
     csr_cols = coo_to_padded_csr(block.coo.transpose(),
                                  max_nnz=shapes.m_cols,
                                  n_rows_pad=shapes.n_cols,
-                                 n_cols_pad=shapes.n_rows)
-    U_prior = _pad_prior(U_prior, shapes.n_rows, K)
-    V_prior = _pad_prior(V_prior, shapes.n_cols, K)
+                                 n_cols_pad=shapes.n_rows, as_numpy=True)
     if test is not None:
         tr, tc, tv_raw = _block_test(test, block)
     else:
@@ -229,7 +259,39 @@ def pad_block_inputs(block: Block, shapes: BlockShapes, K: int,
     tmask = np.zeros((shapes.n_test,), np.float32)
     tmask[:n] = 1.0
     return (csr_rows, csr_cols, padded(tr, np.int32), padded(tc, np.int32),
-            tv, tmask, U_prior, V_prior)
+            tv, tmask)
+
+
+def pad_block_inputs(block: Block, shapes: BlockShapes, K: int,
+                     test: Optional[COO],
+                     U_prior: Optional[RowGaussians],
+                     V_prior: Optional[RowGaussians]):
+    """Pad one block's CSR planes, priors, and test entries to its phase
+    shape bucket — the single source of truth for bucketed padding.
+    ``run_block`` (serial executor), ``engine._task_leaves`` (stacked/
+    sharded executors), ``engine.AsyncExecutor._dispatch``, and the
+    streaming executor's chunk assembly (via ``pad_block_inputs_host``)
+    all go through the same numpy fill; the executors' chain-identical
+    parity depends on them never diverging.
+
+    Returns ``(csr_rows, csr_cols, tr, tc, tv, tmask, U_prior, V_prior)``:
+    padded test indices, VALUES, and a validity mask over the bucket's
+    n_test slots (one submatrix scan serves all three) — tv/tmask let the
+    engine compute each block's squared error as a tiny on-device scalar
+    instead of pulling the (n_test,) prediction vector to the host."""
+    csr_rows_h, csr_cols_h, tr, tc, tv, tmask = pad_block_inputs_host(
+        block, shapes, test)
+    csr_rows = PaddedCSR(idx=jnp.asarray(csr_rows_h.idx),
+                         val=jnp.asarray(csr_rows_h.val),
+                         mask=jnp.asarray(csr_rows_h.mask),
+                         n_cols=csr_rows_h.n_cols)
+    csr_cols = PaddedCSR(idx=jnp.asarray(csr_cols_h.idx),
+                         val=jnp.asarray(csr_cols_h.val),
+                         mask=jnp.asarray(csr_cols_h.mask),
+                         n_cols=csr_cols_h.n_cols)
+    U_prior = _pad_prior(U_prior, shapes.n_rows, K)
+    V_prior = _pad_prior(V_prior, shapes.n_cols, K)
+    return (csr_rows, csr_cols, tr, tc, tv, tmask, U_prior, V_prior)
 
 
 def run_block(key, block: Block, cfg: BMF.BMFConfig,
@@ -262,7 +324,8 @@ def run_block(key, block: Block, cfg: BMF.BMFConfig,
 
 def run_pp(key, part: Partition, cfg: BMF.BMFConfig, test: COO,
            distributed_mesh=None, verbose: bool = False,
-           executor="serial", block_mesh=None) -> PPResult:
+           executor="serial", block_mesh=None,
+           window: Optional[int] = None) -> PPResult:
     """Full three-phase Posterior Propagation over the partition.
 
     Thin wrapper over the phase-graph engine (core.engine): the run is an
@@ -274,16 +337,20 @@ def run_pp(key, part: Partition, cfg: BMF.BMFConfig, test: COO,
       same-phase blocks run concurrently on separate devices), "async"
       (dependency-driven overlap: readiness counters dispatch each block the
       moment its propagated priors resolve — phase b and c overlap, buffers
-      are donated, posteriors stay device-resident), or an
-      ``engine.Executor`` instance.
+      are donated, posteriors stay device-resident), "streaming" (bounded
+      window of donated block buffers streamed through the same ready
+      queue — for grids whose stacked buckets don't fit device memory), or
+      an ``engine.Executor`` instance.
     distributed_mesh: intra-block sharding (core.distributed) — forces the
       serial executor; ``block_mesh`` is the inter-block mesh used by
       executor="sharded" (defaults to all local devices).
+    window: streaming executor's window size W (blocks per chunk); ignored
+      by the other executors.
     verbose: per-phase progress lines (block count, shape buckets, wall time).
     """
     from repro.core import engine as ENG
     ex = ENG.make_executor(executor, distributed_mesh=distributed_mesh,
-                           block_mesh=block_mesh)
+                           block_mesh=block_mesh, window=window)
     return ENG.run_phase_graph(key, part, cfg, test, ex, verbose=verbose)
 
 

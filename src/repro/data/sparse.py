@@ -67,10 +67,15 @@ class PaddedCSR:
 def coo_to_padded_csr(coo: COO, max_nnz: Optional[int] = None,
                       pad_to_multiple: int = 8,
                       n_rows_pad: Optional[int] = None,
-                      n_cols_pad: Optional[int] = None) -> PaddedCSR:
+                      n_cols_pad: Optional[int] = None,
+                      as_numpy: bool = False) -> PaddedCSR:
     """``n_rows_pad`` / ``n_cols_pad`` / ``max_nnz`` let callers bucket many
     matrices to ONE shape so a single jitted executable serves all blocks
-    (the PP scheduler pads every block of a phase to common shapes)."""
+    (the PP scheduler pads every block of a phase to common shapes).
+
+    ``as_numpy=True`` keeps the planes on the host: the streaming executor
+    assembles whole window chunks in numpy and ships each chunk with ONE
+    async ``device_put`` instead of one transfer per plane."""
     order = np.argsort(coo.row, kind="stable")
     rows, cols, vals = coo.row[order], coo.col[order], coo.val[order]
     counts = np.bincount(rows, minlength=coo.n_rows)
@@ -94,6 +99,8 @@ def coo_to_padded_csr(coo: COO, max_nnz: Optional[int] = None,
     val[r_k, s_k] = vals[keep]
     mask[r_k, s_k] = 1.0
     n_cols = n_cols_pad if n_cols_pad is not None else coo.n_cols
+    if as_numpy:
+        return PaddedCSR(idx=idx, val=val, mask=mask, n_cols=n_cols)
     return PaddedCSR(idx=jnp.asarray(idx), val=jnp.asarray(val),
                      mask=jnp.asarray(mask), n_cols=n_cols)
 

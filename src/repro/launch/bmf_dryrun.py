@@ -127,6 +127,66 @@ def lower_pp_phase(n_blocks: int, N: int, D: int, M: int, K: int,
     }
 
 
+def lower_pp_window(window: int, n_blocks: int, N: int, D: int, M: int,
+                    K: int, chain_len: int):
+    """Lower the STREAMING executor's unit of work — one window chunk:
+    the stacked chain at batch W with per-block prior-use flags and
+    donated buffers (gibbs._run_gibbs_stacked_jit_donated, exactly what
+    StreamingExecutor dispatches per chunk) — and the full-bucket stacked
+    executable at batch B=n_blocks for comparison. XLA's buffer assignment
+    (arg + temp + out − alias) shows the streaming point: the per-dispatch
+    peak scales with W, flat in the grid size, while the stacked bucket
+    scales with B."""
+    import warnings
+
+    from repro.core import gibbs as GIBBS
+    from repro.core.posterior import RowGaussians
+
+    cfg = BMF.BMFConfig(K=K)._replace(n_samples=0, burnin=0,
+                                      phase_bc_samples=None)
+    m_c = max(8, (M * N // D // 8) * 8)
+    n_test = 1024
+    S = jax.ShapeDtypeStruct
+
+    def effective_peak(B, flags):
+        args = (
+            S((B, 2), jnp.uint32),
+            (S((B, N, M), jnp.int32), S((B, N, M), jnp.float32),
+             S((B, N, M), jnp.float32)),
+            (S((B, D, m_c), jnp.int32), S((B, D, m_c), jnp.float32),
+             S((B, D, m_c), jnp.float32)),
+            S((B, n_test), jnp.int32), S((B, n_test), jnp.int32),
+            S((), jnp.int32), S((), jnp.int32),
+            RowGaussians(eta=S((B, N, K), jnp.float32),
+                         Lambda=S((B, N, K, K), jnp.float32)),
+            RowGaussians(eta=S((B, D, K), jnp.float32),
+                         Lambda=S((B, D, K, K), jnp.float32)),
+            S((B, N, K), jnp.float32), S((B, D, K), jnp.float32),
+        )
+        uu = S((B,), jnp.float32) if flags else None
+        with warnings.catch_warnings():
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            traced = GIBBS._run_gibbs_stacked_jit_donated.trace(
+                args[0], args[1], args[2], args[3], args[4], cfg, D, N,
+                args[5], args[6], args[7], args[8], args[9], args[10],
+                uu, uu, mesh=None)
+            ma = traced.lower().compile().memory_analysis()
+        return (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+
+    win = effective_peak(window, flags=True)
+    bucket = effective_peak(n_blocks, flags=False)
+    return {
+        "variant": "pp_window_streaming_donated",
+        "window": window, "n_blocks": n_blocks,
+        "N": N, "D": D, "M": M, "K": K, "chain_len": chain_len,
+        "window_effective_peak_bytes": int(win),
+        "stacked_bucket_effective_peak_bytes": int(bucket),
+        "peak_ratio": float(win / max(bucket, 1)),
+    }
+
+
 def lower_pp_block_async(N: int, D: int, M: int, K: int, chain_len: int):
     """Lower the async executor's per-block unit: ONE interior (phase-c)
     block's chain with donated input buffers (gibbs._run_gibbs_jit_donated
@@ -207,6 +267,8 @@ def main():
                          "(16 interior blocks of a 5x5 grid)")
     ap.add_argument("--samples", type=int, default=60,
                     help="chain length used to scale --pp-engine flop terms")
+    ap.add_argument("--window", type=int, default=4,
+                    help="streaming window W lowered by --pp-engine")
     args = ap.parse_args()
 
     results = []
@@ -234,6 +296,15 @@ def main():
               f"donated={rec['donated_input_bytes']/1e6:.0f}MB "
               f"intra-phase collective bytes="
               f"{rec['intra_phase_collective_bytes']:.0f}")
+        rec = lower_pp_window(args.window, 16, args.n // 5 + 1,
+                              args.d // 5 + 1, max(8, args.m // 4), args.k,
+                              args.samples)
+        results.append(rec)
+        print(f"{rec['variant']} W={rec['window']} "
+              f"window peak={rec['window_effective_peak_bytes']/1e6:.0f}MB "
+              f"vs stacked bucket="
+              f"{rec['stacked_bucket_effective_peak_bytes']/1e6:.0f}MB "
+              f"(x{rec['peak_ratio']:.2f})")
     OUT.write_text(json.dumps(results, indent=1))
     print("->", OUT)
 

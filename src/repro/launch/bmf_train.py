@@ -11,7 +11,10 @@ Usage:
 'block' mesh (set XLA_FLAGS=--xla_force_host_platform_device_count=N to
 fake a mesh on CPU); 'async' overlaps phases b/c with a dependency-driven
 scheduler (per-device streams when >1 device, donated buffers,
-device-resident posteriors); 'serial' is the reference per-block loop.
+device-resident posteriors); 'streaming' bounds the live device footprint
+to a window of --window donated block buffers (prefetched host planes,
+critical-path-first dispatch) for grids whose stacked buckets don't fit
+device memory; 'serial' is the reference per-block loop.
 
 --distributed shards each block's Gibbs loop INTERNALLY over all local
 devices (core.distributed shard_map) — this forces the serial executor.
@@ -41,8 +44,11 @@ def main():
     ap.add_argument("--samples", type=int, default=60)
     ap.add_argument("--k", type=int, default=0, help="0 = preset K (capped 16)")
     ap.add_argument("--executor", default="stacked",
-                    choices=["serial", "stacked", "sharded", "async"],
+                    choices=["serial", "stacked", "sharded", "async",
+                             "streaming"],
                     help="phase-graph engine executor (core.engine)")
+    ap.add_argument("--window", type=int, default=0,
+                    help="streaming executor window size W (0 = default)")
     ap.add_argument("--distributed", action="store_true",
                     help="intra-block shard_map (forces --executor serial)")
     ap.add_argument("--phase-bc-samples", type=int, default=0)
@@ -73,10 +79,14 @@ def main():
     elif args.executor == "async":
         print(f"async executor: dependency-driven overlap, "
               f"{len(jax.devices())} device stream(s)")
+    elif args.executor == "streaming":
+        print(f"streaming executor: bounded window of "
+              f"{args.window or 4} donated block buffers, "
+              f"critical-path-first dispatch")
 
     res = PP.run_pp(jax.random.key(args.seed), part, cfg, test,
                     distributed_mesh=mesh, verbose=True,
-                    executor=args.executor)
+                    executor=args.executor, window=args.window or None)
     print(f"executor={res.executor}  RMSE={res.rmse:.4f}  "
           f"wall={res.wall_time_s:.1f}s  "
           f"phases={ {k: round(v, 2) for k, v in res.phase_times_s.items()} }")

@@ -1,0 +1,66 @@
+"""bench_pp_engine --json-out merge semantics: idempotent merge-append
+into the {runs: [...]} schema (re-running a config replaces its record),
+including migration of the PR-2 single-run layout."""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT))
+
+bench = pytest.importorskip("benchmarks.bench_pp_engine")
+
+
+def _rec(dataset="movielens", grid_kind="balanced", grid=(8, 2), K=10,
+         samples=20, wall=1.0):
+    return {"dataset": dataset, "grid_kind": grid_kind,
+            "grid": list(grid), "K": K, "samples": samples,
+            "records": [{"executor": "serial", "wall_s": wall}]}
+
+
+def test_merge_same_config_replaces(tmp_path):
+    out = tmp_path / "bench.json"
+    bench.merge_json_out(out, _rec(wall=1.0))
+    bench.merge_json_out(out, _rec(wall=2.0))       # same config, re-run
+    doc = json.loads(out.read_text())
+    assert doc["benchmark"] == "pp_engine"
+    assert len(doc["runs"]) == 1                    # replaced, not appended
+    assert doc["runs"][0]["records"][0]["wall_s"] == 2.0
+
+
+def test_merge_distinct_configs_coexist(tmp_path):
+    out = tmp_path / "bench.json"
+    bench.merge_json_out(out, _rec(samples=20))
+    bench.merge_json_out(out, _rec(samples=40))          # different samples
+    bench.merge_json_out(out, _rec(grid=(32, 8),
+                                   grid_kind="oversized32x8-balanced"))
+    bench.merge_json_out(out, _rec(dataset="amazon"))
+    doc = json.loads(out.read_text())
+    assert len(doc["runs"]) == 4
+    # and re-running any one of them stays idempotent
+    bench.merge_json_out(out, _rec(samples=40, wall=9.0))
+    doc = json.loads(out.read_text())
+    assert len(doc["runs"]) == 4
+    hit = [r for r in doc["runs"] if r["samples"] == 40]
+    assert len(hit) == 1 and hit[0]["records"][0]["wall_s"] == 9.0
+
+
+def test_merge_migrates_legacy_single_run_layout(tmp_path):
+    out = tmp_path / "bench.json"
+    legacy = {"benchmark": "pp_engine", **_rec(dataset="netflix")}
+    out.write_text(json.dumps(legacy))
+    bench.merge_json_out(out, _rec(dataset="movielens"))
+    doc = json.loads(out.read_text())
+    assert len(doc["runs"]) == 2
+    assert {r["dataset"] for r in doc["runs"]} == {"netflix", "movielens"}
+    assert all("benchmark" not in r for r in doc["runs"])
+
+
+def test_merge_runs_pure_function_roundtrip():
+    doc = bench.merge_runs(None, _rec())
+    doc2 = bench.merge_runs(doc, _rec(wall=3.0))
+    assert len(doc2["runs"]) == 1
+    assert doc2["runs"][0]["records"][0]["wall_s"] == 3.0
+    assert bench._run_key(doc2["runs"][0]) == bench._run_key(_rec())

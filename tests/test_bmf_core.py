@@ -163,6 +163,45 @@ def test_occupancy_permutation_groups_heavy_rows():
     assert (np.diff(permuted_counts) <= 0).all(), permuted_counts
 
 
+def test_sample_nw_moments_match_analytic():
+    """Statistical correctness of the NW sampler + conjugate update (both
+    rewritten onto Cholesky factor/solve in PR 1): empirical moments of
+    ``sample_nw`` draws from ``nw_posterior(prior, X)`` must converge to
+    the analytic Normal-Wishart values under a fixed seed —
+      E[Λ] = ν·W,  E[μ] = μ0,  Cov(μ) = E[(βΛ)⁻¹] = W⁻¹ / (β(ν−K−1)).
+    """
+    K = 3
+    prior = POST.NormalWishart(
+        mu0=jnp.asarray([1.0, -2.0, 0.5]),
+        beta0=jnp.asarray(2.0),
+        W0=jnp.asarray([[1.0, 0.3, 0.0],
+                        [0.3, 2.0, 0.2],
+                        [0.0, 0.2, 0.5]]),
+        nu0=jnp.asarray(float(K + 3)))      # ν−K−1 = 2 > 0: Cov(μ) finite
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.normal(0.5, 1.2, (60, K)).astype(np.float32))
+    post = POST.nw_posterior(prior, X)
+    # conjugate bookkeeping is exact
+    np.testing.assert_allclose(float(post.beta0), 2.0 + 60)
+    np.testing.assert_allclose(float(post.nu0), K + 3 + 60)
+
+    T = 4000
+    keys = jax.random.split(jax.random.key(11), T)
+    mus, lams = jax.vmap(lambda k: POST.sample_nw(k, post))(keys)
+    mus, lams = np.asarray(mus), np.asarray(lams)
+
+    E_lam = float(post.nu0) * np.asarray(post.W0)
+    scale_lam = np.abs(E_lam).max()
+    np.testing.assert_allclose(lams.mean(0), E_lam,
+                               atol=0.02 * scale_lam)
+    np.testing.assert_allclose(mus.mean(0), np.asarray(post.mu0), atol=0.02)
+    Winv = np.linalg.inv(np.asarray(post.W0))
+    cov_analytic = Winv / (float(post.beta0)
+                           * (float(post.nu0) - K - 1))
+    np.testing.assert_allclose(np.cov(mus.T), cov_analytic,
+                               atol=0.15 * np.abs(cov_analytic).max())
+
+
 def test_from_moments_cov_matches_inverse():
     """Cholesky factor/solve summarization == explicit-inverse natural
     params (the path it replaced)."""

@@ -1,0 +1,195 @@
+"""Executor conformance suite — the registration battery for the
+phase-graph engine.
+
+``engine.EXECUTORS`` is the registry: every name in it is parametrized
+through the SAME battery, so registering a new executor auto-enrolls it.
+The battery asserts the contract every executor must honor:
+
+  * fixed-key RMSE parity with the serial reference (identical per-block
+    keys + identical bucket padding => identical chains up to batched-fp
+    scheduling);
+  * bitwise-deterministic results across repeated runs — completion-timing
+    races (async polling, streaming chunk regrouping) may NOT leak into
+    the numbers;
+  * dependency-safe dispatch: the executor's event trace
+    (``record_trace=True``) never shows a block dispatching before both
+    its prior sources resolved, including under randomized fake completion
+    orders for executors with a completion-detection seam;
+  * transfer-guard cleanliness: the final divide-away aggregation runs
+    under ``jax.transfer_guard("disallow")`` — executors must leave
+    posterior summaries device-resident.
+"""
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bmf as BMF
+from repro.core import engine as ENG
+from repro.core import pp as PP
+from repro.core.partition import partition
+from repro.data import synthetic as SYN
+from repro.data.sparse import train_test_split
+
+EXECUTOR_NAMES = sorted(ENG.EXECUTORS)
+# executors with a completion-detection seam (_is_resolved) that the
+# fake-delay stress can scramble
+OVERLAPPED = [n for n in EXECUTOR_NAMES
+              if hasattr(ENG.EXECUTORS[n], "_is_resolved")]
+
+
+def _make(name, **kw):
+    """Fresh executor instance for the battery. The sharded executor gets
+    an explicit 1-device 'block' mesh so the battery runs on any host."""
+    if name == "sharded":
+        from repro.core.distributed import make_block_mesh
+        return ENG.ShardedExecutor(make_block_mesh(1), **kw)
+    if name == "streaming":
+        # a window smaller than the phase-b/c buckets exercises chunking
+        return ENG.StreamingExecutor(window=2, **kw)
+    return ENG.EXECUTORS[name](**kw)
+
+
+def _fake_delay(ex, seed):
+    """Scramble the completion order the scheduler OBSERVES: each poll
+    flips a seeded coin per in-flight unit (the fallback path force-
+    resolves the oldest, so progress is always made)."""
+    rng = np.random.default_rng(seed)
+    orig = ex._is_resolved
+
+    def shuffled(coord, signal):
+        return bool(rng.random() < 0.4) and orig(coord, signal)
+
+    ex._is_resolved = shuffled
+    return ex
+
+
+@pytest.fixture(scope="module")
+def conf_run():
+    coo, p = SYN.generate("mini", seed=13)
+    train, test = train_test_split(coo, 0.15, seed=14)
+    cfg = BMF.BMFConfig(K=p.K, n_samples=5, burnin=1)
+    part = partition(train, 3, 3)          # covers all four phase tags
+    key = jax.random.key(5)
+    ref = PP.run_pp(key, part, cfg, test, executor="serial")
+    return part, cfg, test, key, ref
+
+
+@pytest.fixture(scope="module")
+def results(conf_run):
+    """One traced run per executor, shared across the battery's asserts."""
+    part, cfg, test, key, _ = conf_run
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            ex = _make(name, record_trace=True)
+            cache[name] = (ex, PP.run_pp(key, part, cfg, test, executor=ex))
+        return cache[name]
+
+    return get
+
+
+def test_registry_names_resolve():
+    for name in EXECUTOR_NAMES:
+        assert ENG.make_executor(name).name == name
+    with pytest.raises(ValueError):
+        ENG.make_executor("warp")
+    # the battery covers the WHOLE registry — a new executor that isn't
+    # parametrized here means this module is stale
+    assert set(EXECUTOR_NAMES) == set(ENG.EXECUTORS)
+    # the fake-delay stress knows about every overlapped executor
+    assert set(OVERLAPPED) >= {"async", "streaming"}
+
+
+@pytest.mark.parametrize("name", EXECUTOR_NAMES)
+def test_fixed_key_rmse_parity(conf_run, results, name):
+    part, cfg, test, key, ref = conf_run
+    _, res = results(name)
+    assert res.executor == name
+    assert abs(res.rmse - ref.rmse) < 1e-5, (name, res.rmse, ref.rmse)
+    np.testing.assert_allclose(res.per_block_rmse, ref.per_block_rmse,
+                               atol=1e-4)
+    assert res.n_test == ref.n_test > 0
+    assert set(res.phase_times_s) == set(ref.phase_times_s)
+    # (aggregated natural params are deliberately NOT compared across
+    # executors here: with short conformance chains the moment covariances
+    # are near-singular and Λ⁻¹ amplifies benign batched-fp scheduling
+    # noise unboundedly. Cross-run bitwise identity is asserted in
+    # test_bitwise_deterministic_aggregation instead.)
+
+
+@pytest.mark.parametrize("name", EXECUTOR_NAMES)
+def test_bitwise_deterministic_aggregation(conf_run, results, name):
+    """Same key, fresh executor => BIT-identical final aggregation.
+    Completion-timing races must never reach the numbers."""
+    part, cfg, test, key, _ = conf_run
+    _, res1 = results(name)
+    res2 = PP.run_pp(key, part, cfg, test, executor=_make(name))
+    assert res1.rmse == res2.rmse
+    np.testing.assert_array_equal(np.asarray(res1.U_agg.eta),
+                                  np.asarray(res2.U_agg.eta))
+    np.testing.assert_array_equal(np.asarray(res1.V_agg.Lambda),
+                                  np.asarray(res2.V_agg.Lambda))
+
+
+def _assert_trace_dep_safe(trace, part):
+    graph = {t.coord: t for _, ts in ENG.build_phase_graph(part) for t in ts}
+    dispatched, resolved = set(), set()
+    for ev, c in trace:
+        if ev == "dispatch":
+            assert set(graph[c].deps) <= resolved, \
+                f"{c} dispatched before deps {graph[c].deps} resolved"
+            assert c not in dispatched, f"{c} dispatched twice"
+            dispatched.add(c)
+        else:
+            assert ev == "resolve" and c in dispatched
+            resolved.add(c)
+    assert resolved == set(graph)          # every block ran exactly once
+    assert len(trace) == 2 * len(graph)
+
+
+@pytest.mark.parametrize("name", EXECUTOR_NAMES)
+def test_no_dispatch_before_deps_resolve(conf_run, results, name):
+    part, _, _, _, _ = conf_run
+    ex, _ = results(name)
+    _assert_trace_dep_safe(ex.trace, part)
+
+
+@pytest.mark.parametrize("name", sorted(OVERLAPPED))
+@pytest.mark.parametrize("seed", range(2))
+def test_fake_delay_completion_order(conf_run, results, name, seed):
+    """Randomized observed-completion order: dispatch stays dependency-
+    safe and the aggregation stays bit-identical to the undelayed run."""
+    part, cfg, test, key, _ = conf_run
+    _, res_ref = results(name)
+    ex = _fake_delay(_make(name, record_trace=True), seed)
+    res = PP.run_pp(key, part, cfg, test, executor=ex)
+    _assert_trace_dep_safe(ex.trace, part)
+    np.testing.assert_array_equal(np.asarray(res_ref.U_agg.eta),
+                                  np.asarray(res.U_agg.eta))
+    np.testing.assert_array_equal(np.asarray(res_ref.V_agg.eta),
+                                  np.asarray(res.V_agg.eta))
+    assert res.rmse == res_ref.rmse
+
+
+@pytest.mark.parametrize("name", EXECUTOR_NAMES)
+def test_aggregation_transfer_guard_clean(conf_run, results, name,
+                                          monkeypatch):
+    """The divide-away aggregation must see device-resident posteriors:
+    run it under transfer_guard('disallow') (the executable is warm from
+    the cached run, so any failure is a genuine host round-trip)."""
+    part, cfg, test, key, _ = conf_run
+    results(name)                              # warm the executables
+    orig = PP._aggregate_axis
+
+    def guarded(p, posts, axis):
+        with jax.transfer_guard("disallow"):
+            return orig(p, posts, axis)
+
+    monkeypatch.setattr(PP, "_aggregate_axis", guarded)
+    res = PP.run_pp(key, part, cfg, test, executor=_make(name))
+    assert isinstance(res.U_agg.eta, jax.Array)
+    jax.block_until_ready((res.U_agg, res.V_agg))

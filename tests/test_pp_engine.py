@@ -189,6 +189,52 @@ def test_distributed_mesh_forces_serial():
     assert isinstance(ex, ENG.SerialExecutor)
 
 
+def test_window_with_instance_rejected():
+    """window= only configures the named streaming executor; silently
+    dropping it on a pre-built instance would hand the user a different
+    window than they asked for."""
+    assert ENG.make_executor("streaming", window=7).window == 7
+    with pytest.raises(ValueError):
+        ENG.make_executor(ENG.StreamingExecutor(), window=7)
+
+
+def test_executor_instances_reusable_across_runs(mini_run):
+    """run_graph resets per-run state: reusing one instance (warmup +
+    timed runs) must not accumulate traces or peak counters."""
+    part, cfg, test = mini_run
+    fast = cfg._replace(n_samples=2, burnin=0)
+    key = jax.random.key(3)
+    ex = ENG.AsyncExecutor(record_trace=True)
+    PP.run_pp(key, part, fast, test, executor=ex)
+    n_events = len(ex.trace)
+    PP.run_pp(key, part, fast, test, executor=ex)
+    assert len(ex.trace) == n_events == 2 * part.I * part.J
+    st = ENG.StreamingExecutor(window=2, record_trace=True)
+    PP.run_pp(key, part, fast, test, executor=st)
+    assert len(st.trace) == 2 * part.I * part.J
+    first_peak = st.peak_window_blocks
+    PP.run_pp(key, part, fast, test, executor=st)
+    assert st.peak_window_blocks == first_peak
+    assert len(st.trace) == 2 * part.I * part.J
+
+
+def test_grouped_ready_queue_chunks_by_group():
+    groups = {(0, 0): "a", (1, 0): "a", (2, 0): "a", (0, 1): "b",
+              (1, 1): "b"}
+    prio = {(0, 0): 1.0, (1, 0): 3.0, (2, 0): 2.0, (0, 1): 9.0,
+            (1, 1): 8.0}
+    q = ENG._GroupedReadyQueue(prio, groups.__getitem__)
+    for c in groups:
+        q.push(c)
+    # lead = highest priority overall; chunk filled from ITS group only,
+    # in priority order — other groups untouched
+    assert q.pop_chunk(3) == [(0, 1), (1, 1)]
+    assert len(q) == 3
+    assert q.pop_chunk(2) == [(1, 0), (2, 0)]
+    assert q.pop_chunk(2) == [(0, 0)]
+    assert not q
+
+
 # ---------------------------------------------------------------------------
 # async executor (tentpole: dependency-driven overlap of phases b/c)
 # ---------------------------------------------------------------------------
@@ -273,6 +319,164 @@ def test_async_completion_order_stress(mini_3x3, seed):
     np.testing.assert_array_equal(np.asarray(r_ser.V_agg.eta),
                                   np.asarray(r_asy.V_agg.eta))
     assert abs(r_ser.rmse - r_asy.rmse) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# streaming executor (tentpole: bounded window for out-of-memory grids)
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_window_bounds_live_blocks(mini_3x3):
+    """The streaming executor's realized live-buffer bound: at no point do
+    more than window x (depth + 1) blocks' worth of input buffers exist
+    (in-flight chunks + the prefetched one) — the property that lets
+    grids with num_blocks x block_bytes >> HBM run at a flat peak."""
+    part, cfg, test, key, r_ser = mini_3x3
+    ex = ENG.StreamingExecutor(window=2, depth=2)
+    r_str = PP.run_pp(key, part, cfg, test, executor=ex)
+    assert 0 < ex.peak_window_blocks <= 2 * (2 + 1)
+    assert abs(r_str.rmse - r_ser.rmse) < 1e-5
+    # 9 blocks through windows of 2: at least 5 chunks => the bound binds
+    assert ex.peak_window_blocks < part.I * part.J
+
+
+def test_streaming_chunks_record_spans_and_phases(mini_3x3):
+    part, cfg, test, key, _ = mini_3x3
+    r = PP.run_pp(key, part, cfg, test, executor="streaming", window=3)
+    coords = {(i, j) for i in range(part.I) for j in range(part.J)}
+    assert set(r.block_spans_s) == coords
+    for td, tr in r.block_spans_s.values():
+        assert 0.0 <= td <= tr
+    assert set(r.phase_times_s) == {"a", "b", "c"}
+    assert r.executor == "streaming"
+
+
+def test_streaming_coalesced_buckets_still_sample(mini_3x3):
+    """max_waste > 1 merges phase buckets into fewer window shapes (the
+    one-window-shape-serves-many-blocks lever). Padding then differs from
+    the reference buckets, so chains are DIFFERENT (the NW hyper-resample
+    sees the padded rows) but must remain a valid sampler: RMSE stays in
+    the same range, and every phase tag maps to a coalesced shape that
+    dominates its own bucket."""
+    part, cfg, test, key, r_ser = mini_3x3
+    ex = ENG.StreamingExecutor(window=2, max_waste=4.0)
+    r = PP.run_pp(key, part, cfg, test, executor=ex)
+    shapes = PP.BlockShapes.per_phase(
+        part, None)  # row/col/m dims don't depend on the test split
+    n_groups = len({id(s) for s in ex.window_shapes.values()})
+    assert n_groups < len(ex.window_shapes)       # something coalesced
+    for tag, merged in ex.window_shapes.items():
+        assert merged.n_rows >= shapes[tag].n_rows
+        assert merged.n_cols >= shapes[tag].n_cols
+        assert merged.m_rows >= shapes[tag].m_rows
+    assert abs(r.rmse - r_ser.rmse) < 0.15        # same model, other draws
+
+
+def test_stacked_prior_use_flags_bit_match_dedicated():
+    """gibbs.run_gibbs_stacked(prior_use=...): a flagged chunk mixing
+    with-prior and without-prior blocks must reproduce the DEDICATED
+    stacked executables (fixed-prior pytree / no-prior pytree) bit-exactly
+    per block — the invariant that lets one streaming window executable
+    serve every phase tag. (Comparison is stacked-vs-stacked: the single-
+    block executable differs in benign vmap fp scheduling.)"""
+    from repro.core.posterior import RowGaussians
+    from repro.data.sparse import PaddedCSR, coo_to_padded_csr
+
+    coo, p = SYN.generate("mini", seed=21)
+    csr_r = coo_to_padded_csr(coo)
+    csr_c = coo_to_padded_csr(coo.transpose())
+    cfg = BMF.BMFConfig(K=4, n_samples=3, burnin=1)
+    keys = jax.random.split(jax.random.key(9), 2)
+    rng = np.random.default_rng(5)
+    prior_u = RowGaussians(
+        eta=jnp.asarray(rng.normal(size=(coo.n_rows, 4)).astype(np.float32)),
+        Lambda=jnp.broadcast_to(2.0 * jnp.eye(4), (coo.n_rows, 4, 4)))
+    prior_v = RowGaussians(
+        eta=jnp.asarray(rng.normal(size=(coo.n_cols, 4)).astype(np.float32)),
+        Lambda=jnp.broadcast_to(3.0 * jnp.eye(4), (coo.n_cols, 4, 4)))
+
+    def stack2(csr):
+        return PaddedCSR(idx=jnp.stack([csr.idx] * 2),
+                         val=jnp.stack([csr.val] * 2),
+                         mask=jnp.stack([csr.mask] * 2), n_cols=csr.n_cols)
+
+    tr2 = jnp.zeros((2, 6), jnp.int32)
+    both = jax.tree.map(lambda x: jnp.stack([x] * 2), (prior_u, prior_v))
+    ded_with = GIBBS.run_gibbs_stacked(keys, stack2(csr_r), stack2(csr_c),
+                                       tr2, tr2, cfg, U_prior=both[0],
+                                       V_prior=both[1])
+    ded_wo = GIBBS.run_gibbs_stacked(keys, stack2(csr_r), stack2(csr_c),
+                                     tr2, tr2, cfg)
+
+    # flagged mixed chunk: block 0 fixed priors, block 1 NW hyperprior
+    # (dummy zero rows where the flag is off)
+    mixed = jax.tree.map(lambda x: jnp.stack([x, jnp.zeros_like(x)]),
+                         (prior_u, prior_v))
+    res = GIBBS.run_gibbs_stacked(
+        keys, stack2(csr_r), stack2(csr_c), tr2, tr2, cfg,
+        U_prior=mixed[0], V_prior=mixed[1],
+        prior_use=(jnp.asarray([1.0, 0.0]), jnp.asarray([1.0, 0.0])))
+    np.testing.assert_array_equal(np.asarray(res.U[0]),
+                                  np.asarray(ded_with.U[0]))
+    np.testing.assert_array_equal(np.asarray(res.U_post.eta[0]),
+                                  np.asarray(ded_with.U_post.eta[0]))
+    np.testing.assert_array_equal(np.asarray(res.U[1]),
+                                  np.asarray(ded_wo.U[1]))
+    np.testing.assert_array_equal(np.asarray(res.V_post.eta[1]),
+                                  np.asarray(ded_wo.V_post.eta[1]))
+
+
+# ---------------------------------------------------------------------------
+# critical-path-first priority dispatch (tentpole: ready-queue ordering)
+# ---------------------------------------------------------------------------
+
+
+def test_critical_path_priority_bottom_levels():
+    graph = {t.coord: t for _, ts in _graph_for(3, 3) for t in ts}
+    est = {c: 1.0 for c in graph}
+    est[(1, 0)] = 5.0                      # heavy phase-b row source
+    prio = ENG.critical_path_priority(graph, est)
+    # bottom levels: interior = own cost; b blocks add their successors'
+    # longest chain; (0,0) tops everything
+    assert prio[(1, 1)] == pytest.approx(1.0)
+    assert prio[(1, 0)] == pytest.approx(6.0)    # 5 + deepest c successor
+    assert prio[(0, 1)] == pytest.approx(2.0)
+    assert prio[(0, 0)] == pytest.approx(1.0 + 6.0)
+    # heavy source outranks every other phase-b block
+    assert prio[(1, 0)] > max(prio[c] for c in ((2, 0), (0, 1), (0, 2)))
+
+
+def test_ready_queue_orders_by_priority_fifo_ties():
+    q = ENG._ReadyQueue({(0, 0): 1.0, (1, 0): 5.0, (0, 1): 5.0,
+                         (1, 1): 0.0})
+    for c in ((0, 0), (1, 0), (0, 1), (1, 1)):
+        q.push(c)
+    # descending priority, FIFO among ties
+    assert [q.pop() for _ in range(len(q))] == \
+        [(1, 0), (0, 1), (0, 0), (1, 1)]
+    # and without priorities it degenerates to pure FIFO
+    q2 = ENG._ReadyQueue(None)
+    for c in ((2, 2), (0, 0), (1, 1)):
+        q2.push(c)
+    assert [q2.pop() for _ in range(3)] == [(2, 2), (0, 0), (1, 1)]
+
+
+def test_async_priority_dispatch_order(mini_3x3):
+    """With priorities on, the async scheduler drains the phase-b ready
+    set critical-path-first: dispatch order of phase-b blocks follows
+    descending bottom-level (nnz-weighted)."""
+    part, cfg, test, key, r_ser = mini_3x3
+    ex = ENG.AsyncExecutor(record_trace=True, priority=True)
+    r = PP.run_pp(key, part, cfg, test, executor=ex)
+    assert abs(r.rmse - r_ser.rmse) < 1e-5
+    graph = {t.coord: t for _, ts in ENG.build_phase_graph(part) for t in ts}
+    est = {c: float(part.block(*c).coo.nnz + 1) for c in graph}
+    prio = ENG.critical_path_priority(graph, est)
+    b_coords = [c for c in graph if graph[c].phase in ("b_row", "b_col")]
+    order = [c for ev, c in ex.trace if ev == "dispatch" and c in b_coords]
+    # phase b becomes ready all at once (single dep on (0,0)), so its
+    # dispatch order is exactly the priority order
+    assert order == sorted(b_coords, key=lambda c: -prio[c])
 
 
 # ---------------------------------------------------------------------------

@@ -8,8 +8,10 @@ pytest.importorskip("hypothesis")   # container images without hypothesis
 from hypothesis import given, settings, strategies as st
 
 from repro.core import posterior as POST
-from repro.core.partition import partition, suggest_grid
-from repro.data.sparse import COO, balance_permutation, coo_to_padded_csr
+from repro.core.partition import (coalesce_shapes, nnz_balance_stats,
+                                  partition, suggest_grid)
+from repro.data.sparse import (COO, apply_permutation, balance_permutation,
+                               coo_to_padded_csr)
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -126,6 +128,96 @@ def test_suggest_grid_factors(n, d, blocks):
     I, J = suggest_grid(n, d, blocks)
     assert I * J == blocks
     assert I >= 1 and J >= 1
+
+
+@_settings
+@given(random_coo(), st.integers(1, 4), st.integers(1, 4),
+       st.sampled_from([True, False, "none"]))
+def test_occupancy_sorted_perms_are_permutations(coo, I, J, balance):
+    """occupancy_sort composes a within-stripe refinement onto the global
+    permutation — the result must remain a TRUE permutation for every
+    balance mode (including the identity-permutation 'none' mode the
+    skewed benchmarks rely on)."""
+    part = partition(coo, I, J, balance=balance, occupancy_sort=True)
+    assert sorted(part.row_perm.tolist()) == list(range(coo.n_rows))
+    assert sorted(part.col_perm.tolist()) == list(range(coo.n_cols))
+
+
+@_settings
+@given(random_coo(), st.integers(1, 4), st.integers(1, 4),
+       st.sampled_from([True, False, "none"]))
+def test_occupancy_sort_preserves_stripes_and_balance(coo, I, J, balance):
+    """occupancy_sort only reorders WITHIN stripes: stripe membership,
+    per-block nnz balance, and total nnz are invariant — and within each
+    stripe the rating counts end up non-increasing."""
+    kw = dict(balance=balance, seed=3)
+    p_sorted = partition(coo, I, J, occupancy_sort=True, **kw)
+    p_plain = partition(coo, I, J, occupancy_sort=False, **kw)
+    assert nnz_balance_stats(p_sorted) == nnz_balance_stats(p_plain)
+    assert sum(b.coo.nnz for b in p_sorted.all_blocks()) == coo.nnz
+    # stripe membership: the same original rows land in each stripe
+    for perm_s, perm_p, splits in (
+            (p_sorted.row_perm, p_plain.row_perm, p_sorted.row_splits),
+            (p_sorted.col_perm, p_plain.col_perm, p_sorted.col_splits)):
+        inv_s = np.argsort(perm_s)
+        inv_p = np.argsort(perm_p)
+        for lo, hi in zip(splits[:-1], splits[1:]):
+            assert set(inv_s[lo:hi]) == set(inv_p[lo:hi])
+    # within-stripe counts are non-increasing after the sort
+    pc = apply_permutation(coo, p_sorted.row_perm, p_sorted.col_perm)
+    counts = np.bincount(pc.row, minlength=coo.n_rows)
+    for lo, hi in zip(p_sorted.row_splits[:-1], p_sorted.row_splits[1:]):
+        assert (np.diff(counts[lo:hi]) <= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Bucket coalescing (streaming window shapes)
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def shape_dicts(draw):
+    n = draw(st.integers(1, 8))
+    dims = draw(st.integers(1, 5))
+    return {f"b{i}": tuple(draw(st.integers(1, 512)) for _ in range(dims))
+            for i in range(n)}
+
+
+def _footprint(t):
+    return float(np.prod(t))
+
+
+@_settings
+@given(shape_dicts(), st.floats(1.0, 3.0))
+def test_coalesce_never_merges_incompatible_shapes(shapes, max_waste):
+    """The waste budget IS the compatibility rule: every bucket's merged
+    shape must (a) dominate its own shape elementwise — merging never
+    shrinks a buffer below what its blocks need — and (b) inflate its
+    footprint by at most max_waste."""
+    merged = coalesce_shapes(shapes, _footprint, max_waste=max_waste)
+    assert set(merged) == set(shapes)
+    for k, s in shapes.items():
+        m = merged[k]
+        assert all(a >= b for a, b in zip(m, s)), (k, m, s)
+        assert _footprint(m) <= max_waste * _footprint(s) + 1e-9
+    # group shapes are the elementwise max of their members
+    groups = {}
+    for k, m in merged.items():
+        groups.setdefault(m, []).append(k)
+    for m, members in groups.items():
+        assert m == tuple(max(shapes[k][d] for k in members)
+                          for d in range(len(m)))
+
+
+@_settings
+@given(shape_dicts())
+def test_coalesce_exact_budget_only_merges_identical(shapes):
+    """max_waste=1.0 (the streaming executor's default) merges ONLY
+    bit-identical shapes — the setting under which streaming chains stay
+    exactly parity with the serial reference."""
+    merged = coalesce_shapes(shapes, _footprint, max_waste=1.0)
+    for k, s in shapes.items():
+        assert merged[k] == s
 
 
 # ---------------------------------------------------------------------------
