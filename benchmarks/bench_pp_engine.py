@@ -19,6 +19,13 @@ the skew survives. This is the worst case for barrier executors — every
 bucket is padded to its densest block and phase c waits on the slowest
 phase-b straggler — and the case the async executor is built for.
 
+``--topology B D`` places the sharded/async/streaming executors on the
+unified 2-D ('block','data') mesh (core.topology): B device groups run
+blocks concurrently, each block's chain sharded over D devices — the
+paper's combined system. Records gain a ``topology`` field (part of the
+run identity) and streaming records a ``window_streams`` count
+(one W-window per group).
+
 ``--grid I J`` pins the grid explicitly; combined with ``--oversized`` it
 builds the streaming executor's target case: a grid (e.g. 32×8) whose
 stacked phase buckets exceed ``--mem-cap-mb`` of device memory. Executors
@@ -62,7 +69,7 @@ from benchmarks.common import emit, gibbs_live_peak
 
 # a run record's config identity: re-running the same config replaces its
 # record in the {runs: [...]} file instead of appending a duplicate
-RUN_KEY = ("dataset", "grid_kind", "grid", "K", "samples")
+RUN_KEY = ("dataset", "grid_kind", "grid", "K", "samples", "topology")
 
 
 def _run_key(rec: dict) -> tuple:
@@ -142,7 +149,10 @@ def make_skewed(p: SYN.DatasetPreset, I: int, J: int, skew: float,
 
 
 def run_one(executor: str, key, part, cfg, test, repeats: int,
-            window=None, measure_peak: bool = False):
+            window=None, measure_peak: bool = False, topology=None):
+    # the serial/stacked references are placement-free; topology composes
+    # with the sharded/async/streaming executors
+    topo = topology if executor in ("sharded", "async", "streaming") else None
     runs = []
     peak = None
     for i in range(1 + repeats):           # first run compiles; dropped
@@ -151,11 +161,12 @@ def run_one(executor: str, key, part, cfg, test, repeats: int,
             # per-dispatch live_arrays() walk never pollutes the timings
             with gibbs_live_peak() as pk:
                 runs.append(PP.run_pp(key, part, cfg, test,
-                                      executor=executor, window=window))
+                                      executor=executor, window=window,
+                                      topology=topo))
             peak = pk
         else:
             runs.append(PP.run_pp(key, part, cfg, test, executor=executor,
-                                  window=window))
+                                  window=window, topology=topo))
     timed = runs[1:]
     phases = {ph: min(r.phase_times_s[ph] for r in timed)
               for ph in timed[0].phase_times_s}
@@ -168,6 +179,11 @@ def run_one(executor: str, key, part, cfg, test, repeats: int,
     }
     if executor == "streaming":
         rec["window"] = window
+        if topo is not None:
+            # number of concurrent window STREAMS (one W-window per group)
+            rec["window_streams"] = topo.block
+    if topo is not None:
+        rec["topology"] = [topo.block, topo.data]
     if peak is not None:
         rec["peak_live_mb"] = peak["peak"] / 2**20
         rec["baseline_live_mb"] = peak["baseline"] / 2**20
@@ -200,6 +216,11 @@ def main():
                          "footprint exceeds this many MB (stacked/sharded "
                          "hold whole phase buckets; streaming is bounded "
                          "by its window)")
+    ap.add_argument("--topology", type=int, nargs=2, default=None,
+                    metavar=("BLOCK", "DATA"),
+                    help="2-D ('block','data') placement for the sharded/"
+                         "async/streaming executors: BLOCK device groups "
+                         "x DATA devices per group (core.topology)")
     ap.add_argument("--executors", nargs="+",
                     default=["serial", "stacked"],
                     choices=["serial", "stacked", "sharded", "async",
@@ -254,6 +275,12 @@ def main():
           f"streaming window (W={W}) {window_mb:.1f}MB"
           + (f", cap {args.mem_cap_mb:.1f}MB" if args.mem_cap_mb else ""))
 
+    topology = None
+    if args.topology:
+        from repro.core.topology import Topology
+        topology = Topology(block=args.topology[0], data=args.topology[1])
+        print(topology.describe())
+
     key = jax.random.key(7)
     recs, skipped = [], []
     for ex in args.executors:
@@ -266,7 +293,8 @@ def main():
                             "cap_mb": args.mem_cap_mb})
             continue
         rec = run_one(ex, key, part, cfg, test, args.repeats,
-                      window=W, measure_peak=args.oversized)
+                      window=W, measure_peak=args.oversized,
+                      topology=topology)
         recs.append(rec)
         emit(f"pp_engine/{args.dataset}/{grid_kind}/{ex}", rec["wall_s"],
              f"rmse={rec['rmse']:.4f};phase_bc_s={rec['phase_bc_s']:.3f}")
@@ -306,6 +334,8 @@ def main():
                    "est_stacked_bucket_mb": stacked_mb,
                    "est_streaming_window_mb": window_mb,
                    "mem_cap_mb": args.mem_cap_mb or None,
+                   "topology": (list(args.topology) if args.topology
+                                else None),
                    "skipped": skipped, "records": recs}
         merge_json_out(args.json_out, run_rec)
         print("->", args.json_out)

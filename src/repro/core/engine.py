@@ -10,9 +10,9 @@ This module makes the graph explicit (``BlockTask`` / ``build_phase_graph``)
 and executes it through a pluggable ``Executor``:
 
   SerialExecutor   reference semantics: one jitted Gibbs call per block with
-                   a host sync after each — what ``run_pp`` always did. The
-                   only executor that composes with an intra-block
-                   ``distributed_mesh`` (core.distributed's shard_map).
+                   a host sync after each — what ``run_pp`` always did.
+                   Composes with an intra-block ``distributed_mesh`` /
+                   ``Topology(block=1, data=S)``.
   StackedExecutor  stacks all blocks of a phase shape bucket along a leading
                    axis and runs ONE jitted vmapped chain per bucket
                    (``gibbs.run_gibbs_stacked``) — the per-block Python
@@ -34,15 +34,25 @@ and executes it through a pluggable ``Executor``:
                    scalars. Posterior summaries stay device-resident
                    between phases, padded input buffers are donated to XLA
                    (``gibbs.run_gibbs(donate=True)``), and with >1 local
-                   device each dispatch lands on the next device
-                   round-robin: per-device streams instead of one sharded
-                   bucket (``distributed.stream_devices``).
+                   device each dispatch lands on the next topology GROUP
+                   round-robin: per-group streams instead of one sharded
+                   bucket (groups of 1 device = the legacy per-device
+                   streams; groups of >1 run each chain 'data'-sharded).
   StreamingExecutor the same ready queue, but blocks stream through a
                    bounded window of W donated block buffers: host-side
                    chunk assembly + double-buffered ``device_put``
                    prefetch, ``run_gibbs_stacked(donate=True)`` recycling,
-                   live peak ≤ W×(depth+1)×block_bytes — flat in the grid
-                   size, for grids whose stacked buckets exceed HBM.
+                   live peak ≤ W×(depth+1)×block_bytes per stream — flat
+                   in the grid size, for grids whose stacked buckets
+                   exceed HBM. With a multi-group ``Topology`` it keeps
+                   ONE such window per device group (per-stream prefetch).
+
+Device placement is unified behind ``core.topology.Topology`` — a single
+2-D ('block', 'data') mesh whose groups run blocks concurrently while the
+'data' axis shards each block's Gibbs sweep (the intra-block distributed
+chain of core.distributed). Executors consume the same object instead of
+ad-hoc device lists; ``topology=Topology(block=2, data=2)`` turns any of
+sharded/async/streaming into the paper's combined two-level system.
 
 The async and streaming ready queues dispatch CRITICAL-PATH-FIRST: ready
 blocks pop in descending bottom-level order (``critical_path_priority`` —
@@ -87,6 +97,7 @@ from repro.core import gibbs as GIBBS
 from repro.core import pp as PP
 from repro.core.partition import Partition
 from repro.core.posterior import RowGaussians
+from repro.core.topology import Topology
 from repro.data.sparse import COO, PaddedCSR, apply_permutation
 
 Coord = Tuple[int, int]
@@ -269,11 +280,25 @@ def _phase_desc(ctx: PhaseContext, tasks: Sequence[BlockTask]) -> str:
 class SerialExecutor(Executor):
     """One jitted Gibbs call + host sync per block (reference semantics,
     bit-for-bit today's ``run_pp`` loop). Composes with an intra-block
-    ``distributed_mesh``: each block's chain is itself shard_map'd."""
+    ``distributed_mesh``: each block's chain is itself shard_map'd.
+    A ``topology`` (block must be 1 — serial runs one block at a time)
+    is the unified way to say the same thing: its single group's 'data'
+    mesh becomes the intra-block mesh."""
     name = "serial"
 
-    def __init__(self, distributed_mesh=None, record_trace: bool = False):
+    def __init__(self, distributed_mesh=None, record_trace: bool = False,
+                 topology: Optional[Topology] = None):
         super().__init__(record_trace=record_trace)
+        if topology is not None:
+            if distributed_mesh is not None:
+                raise ValueError("pass distributed_mesh OR topology, not both")
+            if topology.block != 1:
+                raise ValueError(
+                    f"serial executor runs one block at a time — a topology "
+                    f"with block={topology.block} device groups needs the "
+                    f"sharded/async/streaming executor")
+            if topology.data > 1:
+                distributed_mesh = topology.data_mesh(0)
         self.distributed_mesh = distributed_mesh
 
     def run_phase(self, ctx, phase, tasks):
@@ -346,22 +371,20 @@ class StackedExecutor(Executor):
         jj = np.array([t.j for t in group])
         keys = ctx.keys[ii, jj]
         pad = self._batch_pad(len(group))
+        sel = np.arange(len(group))
         if pad:
             # round the batch up to the block mesh size by repeating the
             # last block (its duplicate results are dropped below)
-            sel = np.concatenate([np.arange(len(group)),
-                                  np.full(pad, len(group) - 1)])
+            sel = np.concatenate([sel, np.full(pad, len(group) - 1)])
             rows_arrs, cols_arrs, test_rows, test_cols, up, vp = jax.tree.map(
                 lambda x: x[sel],
                 (rows_arrs, cols_arrs, test_rows, test_cols, up, vp))
             keys = keys[sel]
-        res = GIBBS.run_gibbs_stacked(
-            keys,
+        res = self._dispatch_stacked(
+            ctx, s, keys, [group[i] for i in sel],
             PaddedCSR(*rows_arrs, n_cols=s.n_cols),
             PaddedCSR(*cols_arrs, n_cols=s.n_rows),
-            test_rows, test_cols, ctx.block_cfg(group[0]),
-            U_prior=up, V_prior=vp, block_mesh=self.block_mesh,
-            donate=self.donate)
+            test_rows, test_cols, ctx.block_cfg(group[0]), up, vp)
         jax.block_until_ready(res.U)
         for t in group:
             self._record("resolve", t.coord)
@@ -373,22 +396,88 @@ class StackedExecutor(Executor):
             out[t.coord] = _outcome(res_b, blk, per)
         return out
 
+    def _dispatch_stacked(self, ctx, s, keys, tasks, csr_r, csr_c,
+                          test_rows, test_cols, cfg, up, vp):
+        """Bucket-dispatch seam: the stacked executor runs one vmapped
+        executable; the sharded executor overrides placement (1-D 'block'
+        mesh, or the composed 2-D chain when its topology has a 'data'
+        axis). ``tasks`` lists the batch's tasks AFTER padding (duplicates
+        included) so overrides can assemble per-block host planes."""
+        return GIBBS.run_gibbs_stacked(
+            keys, csr_r, csr_c, test_rows, test_cols, cfg,
+            U_prior=up, V_prior=vp, block_mesh=self.block_mesh,
+            donate=self.donate)
+
+
+def _stacked_csrt(ctx, tasks, s, n_shards: int, scatter: bool):
+    """Host-assembled per-shard transposed planes for a stacked batch —
+    (B, S, D_pad, m_cols) numpy leaves feeding the composed chain's
+    'psum'/'scatter' V-step (``distributed.shard_transposed_planes``).
+    ``tasks`` may contain batch-padding duplicates; the O(nnz) host
+    assembly runs once per distinct block and duplicates are stacked by
+    reference."""
+    from repro.core import distributed as DIST
+    N_pad = ((s.n_rows + n_shards - 1) // n_shards) * n_shards
+    D_pad = (((s.n_cols + n_shards - 1) // n_shards) * n_shards
+             if scatter else s.n_cols)
+    cache: Dict[Coord, tuple] = {}
+    for t in tasks:
+        if t.coord not in cache:
+            blk = ctx.part.block(t.i, t.j)
+            cache[t.coord] = DIST.shard_transposed_planes(
+                blk.coo.row, blk.coo.col, blk.coo.val, n_shards, N_pad,
+                D_pad, s.m_cols)
+    planes = [cache[t.coord] for t in tasks]
+    return tuple(np.stack([p[k] for p in planes]) for k in range(3))
+
 
 class ShardedExecutor(StackedExecutor):
-    """StackedExecutor with the bucket batch shard_map'd over a 1-D 'block'
-    device mesh: blocks of a phase run concurrently on separate devices.
-    No collective ever runs inside a phase — posterior summaries return to
-    the host at the phase boundary, which is the paper's entire
-    communication budget."""
+    """StackedExecutor with the bucket batch placed by a ``Topology``.
+
+    data == 1 (default): the historical 1-D 'block' mesh — the stacked
+    batch shard_map'd so blocks of a phase run concurrently on separate
+    devices with NO collective inside a phase.
+
+    data > 1: the paper's combined system — the batch splits over the
+    'block' axis (device groups) while each block's Gibbs sweep runs the
+    intra-block distributed chain over the 'data' axis
+    (``distributed.run_gibbs_stacked_2d``). ``comm`` picks the intra-block
+    exchange: 'gather' (factor exchange, chain-parity with serial),
+    'psum' (ref [16] item-stat reduction), 'scatter' (§Perf H6
+    reduce-scatter). Either way no collective EVER runs on the 'block'
+    axis — posterior summaries return to the host at the phase boundary,
+    which is the paper's entire communication budget."""
     name = "sharded"
 
-    def __init__(self, block_mesh=None, donate: bool = True,
-                 record_trace: bool = False):
+    def __init__(self, topology=None, donate: bool = True,
+                 record_trace: bool = False, comm: str = "gather"):
         super().__init__(donate=donate, record_trace=record_trace)
-        if block_mesh is None:
-            from repro.core.distributed import make_block_mesh
-            block_mesh = make_block_mesh()
-        self.block_mesh = block_mesh
+        self.topology = Topology.from_spec(topology)
+        self.comm = comm
+        # data==1 keeps the legacy single-level executable; the base class
+        # dispatch seam reads block_mesh
+        self.block_mesh = (self.topology.block_mesh()
+                           if self.topology.data == 1 else None)
+        if self.topology.data > 1 and self.topology.n_devices > 1:
+            self.devices = self.topology.devices
+
+    def _batch_pad(self, n_tasks: int) -> int:
+        return (-n_tasks) % self.topology.block
+
+    def _dispatch_stacked(self, ctx, s, keys, tasks, csr_r, csr_c,
+                          test_rows, test_cols, cfg, up, vp):
+        if self.topology.data == 1:
+            return super()._dispatch_stacked(ctx, s, keys, tasks, csr_r,
+                                             csr_c, test_rows, test_cols,
+                                             cfg, up, vp)
+        from repro.core import distributed as DIST
+        csrt = (None if self.comm == "gather" else
+                _stacked_csrt(ctx, tasks, s, self.topology.data,
+                              scatter=(self.comm == "scatter")))
+        return DIST.run_gibbs_stacked_2d(
+            keys, csr_r, csr_c, test_rows, test_cols, cfg, self.topology,
+            U_prior=up, V_prior=vp, donate=self.donate, comm=self.comm,
+            csrt=csrt)
 
 
 def critical_path_priority(tasks: Dict[Coord, BlockTask],
@@ -553,11 +642,13 @@ class AsyncExecutor(Executor):
         supports it — and holding ONE block's planes at a time instead of a
         whole stacked bucket is itself the larger live-footprint cut
         (``bench_roofline --gibbs-peak`` measures both);
-      * with >1 device, dispatches round-robin over
-        ``distributed.stream_devices(block_mesh)``: per-device streams, so
-        ready blocks genuinely overlap across devices with zero intra-phase
-        collectives (priors device_put to the target stream are the
-        phase-boundary O(K²) summaries — the paper's whole budget).
+      * with >1 device, dispatches round-robin over the topology's
+        device GROUPS: per-group streams, so ready blocks genuinely
+        overlap across groups with zero inter-group collectives (priors
+        device_put to the target group are the phase-boundary O(K²)
+        summaries — the paper's whole budget); a group of >1 devices runs
+        the block's chain 'data'-sharded (``distributed.run_gibbs_group``,
+        intra-group collectives only).
 
     ``record_trace=True`` appends ("dispatch"|"resolve", coord) events to
     ``self.trace`` in real order; the stress tests use it to assert no
@@ -575,11 +666,21 @@ class AsyncExecutor(Executor):
     name = "async"
 
     def __init__(self, donate: bool = True, block_mesh=None,
-                 record_trace: bool = False, priority: bool = True):
-        from repro.core.distributed import stream_devices
+                 record_trace: bool = False, priority: bool = True,
+                 topology: Optional[Topology] = None, comm: str = "gather"):
         super().__init__(record_trace=record_trace)
+        if topology is None:
+            # legacy spellings: a 1-D 'block' mesh (or None = all local
+            # devices) means single-device streams
+            topology = Topology.from_spec(block_mesh)
+        elif block_mesh is not None:
+            raise ValueError("pass block_mesh OR topology, not both")
+        else:
+            topology = Topology.from_spec(topology)
+        self.topology = topology
+        self.comm = comm
         self.donate = donate
-        self.devices = stream_devices(block_mesh)
+        self.devices = topology.devices
         self.priority = priority
         self._n_dispatched = 0
 
@@ -661,22 +762,43 @@ class AsyncExecutor(Executor):
             blk, s, ctx.cfg.K, ctx.test_p, up, vp)
         n_obs = int(tmask.sum())
         key = ctx.keys[task.i, task.j]
-        if len(self.devices) > 1:
-            dev = self.devices[self._n_dispatched % len(self.devices)]
-            # per-device streams: the block's padded planes plus the O(K²)
-            # prior summaries move to the target stream — the latter IS the
-            # paper's phase-boundary communication, made explicit
+        topo = self.topology
+        g = self._n_dispatched % topo.block
+        if topo.n_devices > 1:
+            # per-GROUP streams: the block's padded planes plus the O(K²)
+            # prior summaries move to the target group — the latter IS the
+            # paper's phase-boundary communication, made explicit. With
+            # data == 1 a group is the single device of the legacy
+            # round-robin; with data > 1 the planes are replicated across
+            # the group and the chain shards its sweep over them.
+            if topo.data == 1:
+                target = topo.group(g)[0]
+            else:
+                from jax.sharding import NamedSharding, PartitionSpec
+                target = NamedSharding(topo.group_mesh_2d(g),
+                                       PartitionSpec())
             (ra, ca, tr, tc, up, vp, tv, tmask, key) = jax.device_put(
                 ((csr_r.idx, csr_r.val, csr_r.mask),
                  (csr_c.idx, csr_c.val, csr_c.mask),
-                 tr, tc, up, vp, tv, tmask, key), dev)
+                 tr, tc, up, vp, tv, tmask, key), target)
             csr_r = PaddedCSR(*ra, n_cols=csr_r.n_cols)
             csr_c = PaddedCSR(*ca, n_cols=csr_c.n_cols)
         self._n_dispatched += 1
-        res = GIBBS.run_gibbs(key, csr_r, csr_c,
-                              jnp.asarray(tr), jnp.asarray(tc),
-                              ctx.block_cfg(task), U_prior=up, V_prior=vp,
-                              donate=self.donate)
+        if topo.data > 1:
+            from repro.core import distributed as DIST
+            csrt = (None if self.comm == "gather" else
+                    tuple(x[0] for x in _stacked_csrt(
+                        ctx, [task], s, topo.data,
+                        scatter=(self.comm == "scatter"))))
+            res = DIST.run_gibbs_group(
+                key, csr_r, csr_c, jnp.asarray(tr), jnp.asarray(tc),
+                ctx.block_cfg(task), topo, group=g, U_prior=up, V_prior=vp,
+                donate=self.donate, comm=self.comm, csrt=csrt)
+        else:
+            res = GIBBS.run_gibbs(key, csr_r, csr_c,
+                                  jnp.asarray(tr), jnp.asarray(tc),
+                                  ctx.block_cfg(task), U_prior=up,
+                                  V_prior=vp, donate=self.donate)
         nr, nc = len(blk.row_ids), len(blk.col_ids)
         U_post = RowGaussians(eta=res.U_post.eta[:nr],
                               Lambda=res.U_post.Lambda[:nr])
@@ -723,6 +845,7 @@ class _StagedChunk:
     u_use: jax.Array              # (W,) {0,1} prior flags
     v_use: jax.Array
     n_obs: List[int]
+    group: int = 0                # topology device group this chunk targets
 
 
 class StreamingExecutor(Executor):
@@ -776,13 +899,26 @@ class StreamingExecutor(Executor):
 
     def __init__(self, window: int = 4, donate: bool = True,
                  max_waste: float = 1.0, priority: bool = True,
-                 depth: int = 2, record_trace: bool = False):
+                 depth: int = 2, record_trace: bool = False,
+                 topology: Optional[Topology] = None, comm: str = "gather"):
         super().__init__(record_trace=record_trace)
         self.window = max(1, int(window))
         self.donate = donate
         self.max_waste = max_waste
         self.priority = priority
         self.depth = max(1, int(depth))       # in-flight chunks before block
+        self.topology = Topology.from_spec(topology) if topology is not None \
+            else Topology(block=1, data=1)
+        if comm != "gather":
+            # window chunks use prior_use-flagged executables; only the
+            # 'gather' intra-group exchange composes with them (and at
+            # data == 1 no other mode means anything)
+            raise ValueError(
+                f"streaming executor supports comm='gather' only, "
+                f"got {comm!r}")
+        self.comm = comm
+        if self.topology.n_devices > 1:
+            self.devices = self.topology.devices
         self.peak_window_blocks = 0           # realized live-buffer bound
         self.window_shapes: Optional[Dict[str, "PP.BlockShapes"]] = None
 
@@ -805,11 +941,26 @@ class StreamingExecutor(Executor):
         shape and chain config — priority order within the group."""
         return [tasks[c] for c in ready.pop_chunk(self.window)]
 
+    def _group_target(self, g: int):
+        """device_put destination for group ``g``'s window buffers: the
+        group's device (data == 1) or a replicated sharding over its
+        (1, data) submesh — the per-STREAM prefetch lands the H2D transfer
+        on the group that will compute the chunk."""
+        if self.topology.n_devices == 1:
+            return None
+        if self.topology.data == 1:
+            return self.topology.group(g)[0]
+        from jax.sharding import NamedSharding, PartitionSpec
+        return NamedSharding(self.topology.group_mesh_2d(g),
+                             PartitionSpec())
+
     def _stage(self, ctx: PhaseContext, chunk: List[BlockTask],
-               shapes) -> _StagedChunk:
+               shapes, group: int = 0) -> _StagedChunk:
         """Assemble one chunk on the host and issue its (async) H2D
-        transfer. Deps are resolved (the chunk came off the ready queue),
-        so the device-resident priors are read here too."""
+        transfer to the target group. Deps are resolved (the chunk came
+        off the ready queue), so the device-resident priors are read here
+        too — moving them to the group is the phase-boundary O(K²)
+        communication, made explicit."""
         s = shapes[chunk[0].phase]
         K = ctx.cfg.K
         W = self.window
@@ -826,41 +977,57 @@ class StreamingExecutor(Executor):
                        stack(lambda h: h[1].mask),
                        stack(lambda h: h[2]), stack(lambda h: h[3]),
                        stack(lambda h: h[4]), stack(lambda h: h[5]))
-        dev = jax.device_put(host_leaves)     # ONE async transfer per chunk
+        target = self._group_target(group)
+        # ONE async transfer per chunk, onto the chunk's group
+        dev = (jax.device_put(host_leaves) if target is None
+               else jax.device_put(host_leaves, target))
 
         ups, vps, uf, vf = [], [], [], []
         for t in chunk:
             up, vp = ctx.priors(t)
+            uf.append(float(up is not None))
+            vf.append(float(vp is not None))
             ups.append(PP._pad_prior(up, s.n_rows, K) if up is not None
                        else _dummy_prior(s.n_rows, K))
             vps.append(PP._pad_prior(vp, s.n_cols, K) if vp is not None
                        else _dummy_prior(s.n_cols, K))
-            uf.append(float(up is not None))
-            vf.append(float(vp is not None))
         sel_tasks = [chunk[i] for i in sel]
         ii = np.array([t.i for t in sel_tasks])
         jj = np.array([t.j for t in sel_tasks])
+        U_pri = _stack_trees([ups[i] for i in sel])
+        V_pri = _stack_trees([vps[i] for i in sel])
+        keys = ctx.keys[ii, jj]
+        if target is not None:
+            # posteriors may live on another group: colocate prior
+            # summaries and keys with the chunk's window buffers
+            U_pri, V_pri, keys = jax.device_put((U_pri, V_pri, keys), target)
         return _StagedChunk(
             tasks=chunk, shape=s, cfg=ctx.block_cfg(chunk[0]), dev=dev,
-            keys=ctx.keys[ii, jj],
-            U_prior=_stack_trees([ups[i] for i in sel]),
-            V_prior=_stack_trees([vps[i] for i in sel]),
+            keys=keys, U_prior=U_pri, V_prior=V_pri,
             u_use=jnp.asarray([uf[i] for i in sel], jnp.float32),
             v_use=jnp.asarray([vf[i] for i in sel], jnp.float32),
-            n_obs=[int(h[5].sum()) for h in host])
+            n_obs=[int(h[5].sum()) for h in host], group=group)
 
     def _dispatch(self, ctx: PhaseContext, st: _StagedChunk):
         """Dispatch one staged chunk; returns (signal, outcomes). The
         window buffers are donated — after this call nothing holds them
         and XLA recycles their storage for the next chunk."""
         ri, rv, rm, ci, cv, cm, tr, tc, tv, tmask = st.dev
-        res = GIBBS.run_gibbs_stacked(
-            st.keys,
-            PaddedCSR(ri, rv, rm, n_cols=st.shape.n_cols),
-            PaddedCSR(ci, cv, cm, n_cols=st.shape.n_rows),
-            tr, tc, st.cfg,
-            U_prior=st.U_prior, V_prior=st.V_prior,
-            prior_use=(st.u_use, st.v_use), donate=self.donate)
+        csr_r = PaddedCSR(ri, rv, rm, n_cols=st.shape.n_cols)
+        csr_c = PaddedCSR(ci, cv, cm, n_cols=st.shape.n_rows)
+        if self.topology.data > 1:
+            from repro.core import distributed as DIST
+            res = DIST.run_gibbs_stacked_2d(
+                st.keys, csr_r, csr_c, tr, tc, st.cfg, self.topology,
+                U_prior=st.U_prior, V_prior=st.V_prior,
+                prior_use=(st.u_use, st.v_use), donate=self.donate,
+                comm=self.comm,
+                mesh=self.topology.group_mesh_2d(st.group))
+        else:
+            res = GIBBS.run_gibbs_stacked(
+                st.keys, csr_r, csr_c, tr, tc, st.cfg,
+                U_prior=st.U_prior, V_prior=st.V_prior,
+                prior_use=(st.u_use, st.v_use), donate=self.donate)
         sq = _chunk_sq_err(res.acc.pred_sum, res.acc.pred_cnt, tv, tmask)
         outs: Dict[Coord, BlockOutcome] = {}
         for b, t in enumerate(st.tasks):      # padded duplicates dropped
@@ -891,15 +1058,20 @@ class StreamingExecutor(Executor):
             make_queue=lambda prio, ts: _GroupedReadyQueue(
                 prio, lambda c: self._group_key(ctx, ts[c], shapes)))
         self.window_shapes = shapes
+        G = self.topology.block
         if verbose:
             n_buckets = len({id(s) for s in shapes.values()})
             print(f"[pp:{self.name}] window={self.window} depth={self.depth} "
                   f"{n_buckets} coalesced bucket(s) over {len(shapes)} phase "
-                  f"tag(s)", flush=True)
+                  f"tag(s), {G} stream group(s) x {self.topology.data} "
+                  f"device(s)", flush=True)
 
-        staged: Optional[_StagedChunk] = None
-        inflight: List[Tuple[List[BlockTask], jax.Array,
-                             Dict[Coord, BlockOutcome], float]] = []
+        # one W-bounded donated window PER DEVICE GROUP: each group runs
+        # its own stream of chunks (own prefetch slot + own in-flight list)
+        staged: List[Optional[_StagedChunk]] = [None] * G
+        inflight: List[List[Tuple[List[BlockTask], jax.Array,
+                                  Dict[Coord, BlockOutcome], float]]] = \
+            [[] for _ in range(G)]
         outcomes: Dict[Coord, BlockOutcome] = {}
         spans: Dict[Coord, Tuple[float, float]] = {}
         first_d: Dict[str, float] = {}
@@ -908,39 +1080,52 @@ class StreamingExecutor(Executor):
         t0 = time.time()
 
         def note_peak():
-            live = self.window * (len(inflight) + (staged is not None))
+            live = self.window * (sum(len(f) for f in inflight)
+                                  + sum(st is not None for st in staged))
             self.peak_window_blocks = max(self.peak_window_blocks, live)
 
-        while ready or staged is not None or inflight:
-            if staged is None and ready:
-                staged = self._stage(ctx, self._pop_chunk(ctx, ready, tasks),
-                                     shapes)
-                note_peak()
-            if staged is not None and len(inflight) < self.depth:
-                ch, staged = staged, None
-                for t in ch.tasks:
-                    self._record("dispatch", t.coord)
-                td = time.time()
-                signal, outs = self._dispatch(ctx, ch)
-                inflight.append((ch.tasks, signal, outs, td))
-                for t in ch.tasks:
-                    first_d.setdefault(phase_of[t.coord], td - t0)
-                # double-buffered prefetch: the NEXT chunk's H2D transfer
-                # overlaps this chunk's compute
-                if ready:
-                    staged = self._stage(ctx,
-                                         self._pop_chunk(ctx, ready, tasks),
-                                         shapes)
-                note_peak()
+        while (ready or any(st is not None for st in staged)
+               or any(inflight)):
+            dispatched = False
+            for g in range(G):
+                if staged[g] is None and ready:
+                    staged[g] = self._stage(
+                        ctx, self._pop_chunk(ctx, ready, tasks), shapes,
+                        group=g)
+                    note_peak()
+                if staged[g] is not None and len(inflight[g]) < self.depth:
+                    ch, staged[g] = staged[g], None
+                    for t in ch.tasks:
+                        self._record("dispatch", t.coord)
+                    td = time.time()
+                    signal, outs = self._dispatch(ctx, ch)
+                    inflight[g].append((ch.tasks, signal, outs, td))
+                    for t in ch.tasks:
+                        first_d.setdefault(phase_of[t.coord], td - t0)
+                    # per-stream double-buffered prefetch: the group's NEXT
+                    # chunk's H2D transfer overlaps this chunk's compute
+                    if ready:
+                        staged[g] = self._stage(
+                            ctx, self._pop_chunk(ctx, ready, tasks), shapes,
+                            group=g)
+                    note_peak()
+                    dispatched = True
+            if dispatched:
                 continue
-            # window full (or nothing stageable): retire chunks
-            idxs = [i for i, (ts_, sig, _, _) in enumerate(inflight)
+            # every group's window is full (or nothing stageable): retire
+            idxs = [(g, i) for g in range(G)
+                    for i, (ts_, sig, _, _) in enumerate(inflight[g])
                     if self._is_resolved(ts_[0].coord, sig)]
             if not idxs:
-                jax.block_until_ready(inflight[0][1])
-                idxs = [0]
-            for i in sorted(idxs, reverse=True):
-                chunk_tasks, sig, outs, td = inflight.pop(i)
+                assert any(inflight), "streaming scheduler stalled"
+                g0, i0 = min(
+                    ((g, i) for g in range(G)
+                     for i in range(len(inflight[g]))),
+                    key=lambda gi: inflight[gi[0]][gi[1]][3])
+                jax.block_until_ready(inflight[g0][i0][1])
+                idxs = [(g0, i0)]
+            for g, i in sorted(idxs, reverse=True):
+                chunk_tasks, sig, outs, td = inflight[g].pop(i)
                 tr_ = time.time()
                 # one executable ran the whole chunk: split its wall evenly
                 # across members (mirrors StackedExecutor's bucket split)
@@ -988,34 +1173,45 @@ must accept ``record_trace=`` and report dispatch/resolve events honestly.
 
 
 def make_executor(spec, distributed_mesh=None, block_mesh=None,
-                  window=None) -> Executor:
+                  window=None, topology=None) -> Executor:
     """Resolve run_pp's ``executor=`` argument: a registry name or an
-    instance. An intra-block ``distributed_mesh`` forces the serial
-    executor — the two shard_map levels don't compose (yet). ``window``
-    is the streaming executor's window size (ignored by the others)."""
+    instance. ``topology`` is the unified 2-D ('block', 'data') placement
+    (core.topology.Topology, an ``(block, data)`` pair, or a legacy 1-D
+    mesh) consumed by the serial (block must be 1), sharded, async, and
+    streaming executors. An intra-block ``distributed_mesh`` is the legacy
+    spelling of ``topology=Topology(block=1, data=S)`` and forces the
+    serial executor. ``window`` is the streaming executor's window size
+    (ignored by the others)."""
     if isinstance(spec, Executor):
-        if distributed_mesh is not None:
-            raise ValueError(
-                "distributed_mesh with an Executor instance is ambiguous — "
-                "construct SerialExecutor(distributed_mesh) yourself or pass "
-                "executor='serial'")
-        if window is not None:
-            raise ValueError(
-                "window with an Executor instance is ambiguous — construct "
-                "StreamingExecutor(window=...) yourself or pass "
-                "executor='streaming'")
+        for arg, name in ((distributed_mesh, "distributed_mesh"),
+                          (window, "window"), (topology, "topology")):
+            if arg is not None:
+                raise ValueError(
+                    f"{name} with an Executor instance is ambiguous — "
+                    f"construct the executor with it yourself or pass the "
+                    f"executor by name")
         return spec
     if distributed_mesh is not None:
+        if topology is not None:
+            raise ValueError("pass distributed_mesh OR topology, not both")
         spec = "serial"
     if spec not in EXECUTORS:
         raise ValueError(f"unknown executor {spec!r} "
                          f"(expected {' | '.join(EXECUTORS)})")
+    topo = None if topology is None else Topology.from_spec(topology)
+    if spec == "stacked" and topo is not None:
+        raise ValueError(
+            "the stacked executor is single-executable (no device "
+            "placement) — use executor='sharded' with a topology")
     factories = {
-        "serial": lambda: SerialExecutor(distributed_mesh),
+        "serial": lambda: SerialExecutor(distributed_mesh, topology=topo),
         "stacked": lambda: StackedExecutor(),
-        "sharded": lambda: ShardedExecutor(block_mesh),
-        "async": lambda: AsyncExecutor(block_mesh=block_mesh),
+        "sharded": lambda: ShardedExecutor(
+            topo if topo is not None else block_mesh),
+        "async": lambda: AsyncExecutor(block_mesh=block_mesh,
+                                       topology=topo),
         "streaming": lambda: StreamingExecutor(
+            topology=topo,
             **({} if window is None else {"window": int(window)})),
     }
     # a registered executor without a dedicated factory gets default

@@ -249,9 +249,30 @@ def run_gibbs_stacked(keys,
 
 def _run_gibbs_impl(key, csr_rows, csr_cols, test_rows, test_cols, cfg,
                     n_samples, burnin, U_prior, V_prior, U0, V0,
-                    u_use=None, v_use=None) -> GibbsResult:
-    N, D, K = csr_rows.n_rows, csr_cols.n_rows, cfg.K
+                    u_use=None, v_use=None,
+                    u_sampler=None, v_sampler=None,
+                    n_rows=None, n_cols=None) -> GibbsResult:
+    """Chain body shared by every executor path.
+
+    ``u_sampler`` / ``v_sampler`` are the factor-step seams:
+    ``sampler(key, csr, other, prior) -> factor``, defaulting to the
+    single-device ``BMF.sample_factor``. The intra-block distributed
+    sweep (core.distributed) swaps in 'data'-mesh-sharded samplers —
+    everything else (key splitting, prior selection, accumulators,
+    summaries) is THIS code, so the composed chains share the reference
+    semantics by construction. ``n_rows`` / ``n_cols`` override the
+    factor sizes when ``csr_rows`` / ``csr_cols`` hold only a device's
+    local shard (the carry factors stay full-size and replicated)."""
+    N = csr_rows.n_rows if n_rows is None else n_rows
+    D = csr_cols.n_rows if n_cols is None else n_cols
+    K = cfg.K
     nw = POST.default_nw(K)
+    if u_sampler is None:
+        u_sampler = lambda k, csr, other, prior: BMF.sample_factor(
+            k, csr, other, cfg.tau, prior, cfg.use_kernel)
+    if v_sampler is None:
+        v_sampler = lambda k, csr, other, prior: BMF.sample_factor(
+            k, csr, other, cfg.tau, prior, cfg.use_kernel)
 
     acc0 = GibbsAccumulators(
         pred_sum=jnp.zeros_like(test_rows, dtype=jnp.float32),
@@ -281,10 +302,8 @@ def _run_gibbs_impl(key, csr_rows, csr_cols, test_rows, test_cols, cfg,
         u_prior = pick_prior(U_prior, u_use, kh1, U, N)
         v_prior = pick_prior(V_prior, v_use, kh2, V, D)
 
-        U = BMF.sample_factor(ku, csr_rows, V, cfg.tau, u_prior,
-                              cfg.use_kernel)
-        V = BMF.sample_factor(kv, csr_cols, U, cfg.tau, v_prior,
-                              cfg.use_kernel)
+        U = u_sampler(ku, csr_rows, V, u_prior)
+        V = v_sampler(kv, csr_cols, U, v_prior)
 
         keep = (i >= burnin).astype(jnp.float32)
         pred = BMF.predict(U, V, test_rows, test_cols)

@@ -90,17 +90,27 @@ def from_samples(samples, ridge: float = 1e-4) -> RowGaussians:
     return from_moments_cov(mean, cov, ridge=ridge)
 
 
-def sample_rows(key, g: RowGaussians, jitter: float = 1e-6):
-    """Draw one row each: x_n ~ N(Λ_n⁻¹ η_n, Λ_n⁻¹), via Cholesky of Λ."""
-    N, K = g.eta.shape
+def sample_rows_noise(g: RowGaussians, z: jnp.ndarray,
+                      jitter: float = 1e-6):
+    """``sample_rows`` with the standard-normal draw ``z`` (N, K) supplied
+    by the caller. Row-local math — the data-sharded intra-block sweep
+    feeds each shard the SLICE of the full replicated draw so its local
+    rows match the single-device sample bit-for-bit."""
+    K = g.eta.shape[-1]
     Lam = g.Lambda + jitter * jnp.eye(K)
     chol = jnp.linalg.cholesky(Lam)
     mu = jax.scipy.linalg.cho_solve((chol, True), g.eta[..., None])[..., 0]
-    z = jax.random.normal(key, (N, K), dtype=g.eta.dtype)
     # x = mu + L^-T z has covariance Λ⁻¹
     delta = jax.scipy.linalg.solve_triangular(
         jnp.swapaxes(chol, -1, -2), z[..., None], lower=False)[..., 0]
     return mu + delta
+
+
+def sample_rows(key, g: RowGaussians, jitter: float = 1e-6):
+    """Draw one row each: x_n ~ N(Λ_n⁻¹ η_n, Λ_n⁻¹), via Cholesky of Λ."""
+    N, K = g.eta.shape
+    z = jax.random.normal(key, (N, K), dtype=g.eta.dtype)
+    return sample_rows_noise(g, z, jitter)
 
 
 # ---------------------------------------------------------------------------

@@ -325,7 +325,7 @@ def run_block(key, block: Block, cfg: BMF.BMFConfig,
 def run_pp(key, part: Partition, cfg: BMF.BMFConfig, test: COO,
            distributed_mesh=None, verbose: bool = False,
            executor="serial", block_mesh=None,
-           window: Optional[int] = None) -> PPResult:
+           window: Optional[int] = None, topology=None) -> PPResult:
     """Full three-phase Posterior Propagation over the partition.
 
     Thin wrapper over the phase-graph engine (core.engine): the run is an
@@ -341,16 +341,25 @@ def run_pp(key, part: Partition, cfg: BMF.BMFConfig, test: COO,
       window of donated block buffers streamed through the same ready
       queue — for grids whose stacked buckets don't fit device memory), or
       an ``engine.Executor`` instance.
-    distributed_mesh: intra-block sharding (core.distributed) — forces the
-      serial executor; ``block_mesh`` is the inter-block mesh used by
-      executor="sharded" (defaults to all local devices).
+    topology: unified 2-D device placement (core.topology.Topology or an
+      ``(block, data)`` pair): 'block' counts device groups running blocks
+      concurrently, 'data' counts devices INSIDE each block's Gibbs chain
+      (the intra-block distributed sweep of core.distributed). E.g.
+      ``run_pp(..., executor="sharded", topology=Topology(block=2, data=2))``
+      on 4 devices runs 2 blocks at a time, each chain sharded 2-way —
+      the paper's combined system. Consumed by serial (block must be 1),
+      sharded, async (group streams), and streaming (per-group windows).
+    distributed_mesh: legacy spelling of ``topology=Topology(1, S)`` —
+      intra-block sharding only, forces the serial executor; ``block_mesh``
+      is the legacy 1-D inter-block mesh for executor="sharded".
     window: streaming executor's window size W (blocks per chunk); ignored
       by the other executors.
     verbose: per-phase progress lines (block count, shape buckets, wall time).
     """
     from repro.core import engine as ENG
     ex = ENG.make_executor(executor, distributed_mesh=distributed_mesh,
-                           block_mesh=block_mesh, window=window)
+                           block_mesh=block_mesh, window=window,
+                           topology=topology)
     return ENG.run_phase_graph(key, part, cfg, test, ex, verbose=verbose)
 
 

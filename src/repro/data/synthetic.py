@@ -66,7 +66,13 @@ def generate(preset: str | DatasetPreset, seed: int = 0,
     cols = rng.choice(p.n_cols, size=int(nnz * 1.6), p=col_p).astype(np.int32)
     key = rows.astype(np.int64) * p.n_cols + cols
     _, uniq = np.unique(key, return_index=True)
-    uniq = uniq[:nnz]
+    # shuffle BEFORE truncating: np.unique returns indices sorted by
+    # row-major key, so uniq[:nnz] alone would keep only the smallest row
+    # ids and CUT the tail rows off entirely instead of thinning the drawn
+    # popularity profile uniformly (same bug fixed in
+    # bench_pp_engine.make_skewed; committed BENCH_* artifacts were
+    # regenerated together with this fix)
+    uniq = rng.permutation(uniq)[:nnz]
     rows, cols = rows[uniq], cols[uniq]
 
     r = p.true_rank

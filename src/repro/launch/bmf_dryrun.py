@@ -14,6 +14,11 @@ bucket (core.engine.ShardedExecutor: one batched Gibbs chain shard_map'd
 over a 'block' mesh) and records that NO collective appears inside the
 phase — the engine moves posterior summaries only at phase boundaries,
 which is the paper's entire communication budget. It also lowers the
+COMPOSED 2-D topology executable (core.topology: blocks over the 'block'
+axis, each block's sweep distributed over the 'data' axis) and asserts
+from the HLO replica groups that every collective is confined to a
+'data' row — the scatter-V / factor-gather exchange inside one block —
+with zero collectives crossing the 'block' axis. It also lowers the
 ASYNC executor's unit of work — one interior block's DONATED per-block
 chain executable (core.engine.AsyncExecutor dispatches these
 dependency-driven onto per-device streams) — and records the
@@ -124,6 +129,81 @@ def lower_pp_phase(n_blocks: int, N: int, D: int, M: int, K: int,
         "roofline": terms.as_dict(),
         "collectives": coll,
         "intra_phase_collective_bytes": float(sum(coll.values())),
+    }
+
+
+def lower_pp_phase_2d(n_block: int, n_data: int, N: int, D: int, M: int,
+                      K: int, chain_len: int, comm: str = "scatter"):
+    """Lower the COMPOSED executable — the unified 2-D topology's unit of
+    work: B=n_block interior blocks shard_map'd over the 'block' axis while
+    each block's Gibbs sweep runs the intra-block distributed chain over
+    the 'data' axis (distributed.run_gibbs_stacked_2d). Asserts, from the
+    compiled HLO's replica groups, the paper's communication structure:
+    every intra-phase collective is CONFINED to a 'data' row (the
+    scatter-V / psum / factor-gather exchanges inside one block's chain)
+    and ZERO collectives run on the 'block' axis — blocks never talk."""
+    from repro.core import gibbs as GIBBS
+    from repro.core import distributed as DIST
+    from repro.core.posterior import RowGaussians
+    from repro.core.topology import Topology
+
+    topo = Topology(block=n_block, data=n_data)
+    cfg = BMF.BMFConfig(K=K)._replace(n_samples=0, burnin=0,
+                                      phase_bc_samples=None)
+    B, S = n_block, n_data
+    N_pad = ((N + S - 1) // S) * S
+    D_pad = ((D + S - 1) // S) * S if comm == "scatter" else D
+    m_c = max(8, (M * N // D // 8) * 8)
+    n_test = 1024
+    Sd = jax.ShapeDtypeStruct
+    rows = (Sd((B, N_pad, M), jnp.int32), Sd((B, N_pad, M), jnp.float32),
+            Sd((B, N_pad, M), jnp.float32))
+    if comm == "gather":
+        cols = (Sd((B, D, m_c), jnp.int32), Sd((B, D, m_c), jnp.float32),
+                Sd((B, D, m_c), jnp.float32))
+        csrt = None
+    else:
+        cols = None
+        csrt = (Sd((B, S, D_pad, m_c), jnp.int32),
+                Sd((B, S, D_pad, m_c), jnp.float32),
+                Sd((B, S, D_pad, m_c), jnp.float32))
+    args = (
+        Sd((B, 2), jnp.uint32), rows, cols, csrt,
+        Sd((B, n_test), jnp.int32), Sd((B, n_test), jnp.int32),
+        Sd((), jnp.int32), Sd((), jnp.int32),
+        RowGaussians(eta=Sd((B, N, K), jnp.float32),
+                     Lambda=Sd((B, N, K, K), jnp.float32)),
+        RowGaussians(eta=Sd((B, D, K), jnp.float32),
+                     Lambda=Sd((B, D, K, K), jnp.float32)),
+        Sd((B, N, K), jnp.float32), Sd((B, D, K), jnp.float32),
+    )
+    traced = DIST._run_gibbs_2d_jit.trace(
+        args[0], args[1], args[2], args[3], args[4], args[5], cfg, D, N,
+        args[6], args[7], args[8], args[9], args[10], args[11], None, None,
+        mesh=topo.mesh, comm=comm, n_rows=N, n_cols=D)
+    jcost = JCOST.jaxpr_cost(traced.jaxpr, mult=chain_len)
+    compiled = traced.lower().compile()
+    hlo = compiled.as_text()
+    coll = ROOF.collective_bytes(hlo)
+    terms = ROOF.terms_from(jcost, hlo, n_block * n_data)
+    # 'data'-axis rows in flattened mesh order: group g = [g*S, (g+1)*S)
+    data_rows = [list(range(g * S, (g + 1) * S)) for g in range(B)]
+    confinement = ROOF.collectives_confined_to_groups(hlo, data_rows)
+    assert confinement["n_crossing"] == 0, (
+        "composed executable has collectives crossing the 'block' axis: "
+        f"{confinement['crossing'][:5]}")
+    return {
+        "variant": "pp_phase_c_composed_2d",
+        "comm": comm,
+        "topology": [n_block, n_data],
+        "N": N, "D": D, "M": M, "K": K, "chain_len": chain_len,
+        "roofline": terms.as_dict(),
+        "collectives": coll,
+        "collective_axis_check": {
+            "n_collectives": confinement["n_collectives"],
+            "n_confined_to_data_axis": confinement["n_confined"],
+            "n_crossing_block_axis": confinement["n_crossing"],
+        },
     }
 
 
@@ -269,6 +349,10 @@ def main():
                     help="chain length used to scale --pp-engine flop terms")
     ap.add_argument("--window", type=int, default=4,
                     help="streaming window W lowered by --pp-engine")
+    ap.add_argument("--topo", type=int, nargs=2, default=(16, 16),
+                    metavar=("BLOCK", "DATA"),
+                    help="('block','data') shape of the composed 2-D "
+                         "executable lowered by --pp-engine")
     args = ap.parse_args()
 
     results = []
@@ -289,6 +373,21 @@ def main():
               f"intra-phase collective bytes="
               f"{rec['intra_phase_collective_bytes']:.0f} "
               f"(phase boundary is the only communication)")
+        # the composed 2-D topology executable: BLOCK groups x DATA-way
+        # intra-block sharding (default 16x16 = 256 of the 512 faked
+        # chips), scatter-V / factor-gather inside each block, ZERO
+        # 'block'-axis collectives (asserted from the HLO replica groups)
+        tb, td = args.topo
+        for comm in ("scatter", "gather"):
+            rec = lower_pp_phase_2d(tb, td, args.n // 5 + 1,
+                                    args.d // 5 + 1, max(8, args.m // 4),
+                                    args.k, args.samples, comm=comm)
+            results.append(rec)
+            chk = rec["collective_axis_check"]
+            print(f"{rec['variant']}[{comm}] topology={tb}x{td} "
+                  f"collectives={chk['n_collectives']} "
+                  f"confined-to-'data'={chk['n_confined_to_data_axis']} "
+                  f"crossing-'block'={chk['n_crossing_block_axis']}")
         rec = lower_pp_block_async(args.n // 5 + 1, args.d // 5 + 1,
                                    max(8, args.m // 4), args.k, args.samples)
         results.append(rec)

@@ -18,6 +18,13 @@ device memory; 'serial' is the reference per-block loop.
 
 --distributed shards each block's Gibbs loop INTERNALLY over all local
 devices (core.distributed shard_map) — this forces the serial executor.
+
+--topology B D places the run on the unified 2-D ('block','data') mesh
+(core.topology.Topology): B device groups run blocks concurrently while
+each block's Gibbs sweep is sharded over the D devices of its group —
+the paper's combined system (block-parallel PP x intra-block distributed
+BMF). Composes with --executor sharded (2-D shard_map), async (group
+streams), streaming (one donated window per group), and serial (B=1).
 """
 from __future__ import annotations
 
@@ -51,6 +58,11 @@ def main():
                     help="streaming executor window size W (0 = default)")
     ap.add_argument("--distributed", action="store_true",
                     help="intra-block shard_map (forces --executor serial)")
+    ap.add_argument("--topology", type=int, nargs=2, default=None,
+                    metavar=("BLOCK", "DATA"),
+                    help="2-D ('block','data') placement: BLOCK device "
+                         "groups x DATA devices per group (unified "
+                         "core.topology mesh)")
     ap.add_argument("--phase-bc-samples", type=int, default=0)
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--seed", type=int, default=0)
@@ -70,6 +82,14 @@ def main():
     print("block nnz balance:", nnz_balance_stats(part))
 
     mesh = None
+    topology = None
+    if args.topology:
+        from repro.core.topology import Topology
+        if args.distributed:
+            raise SystemExit("--topology and --distributed are exclusive "
+                             "(--distributed is Topology(1, n_devices))")
+        topology = Topology(block=args.topology[0], data=args.topology[1])
+        print(topology.describe())
     if args.distributed:
         n = len(jax.devices())
         mesh = jax.make_mesh((n,), ("data",))
@@ -86,7 +106,8 @@ def main():
 
     res = PP.run_pp(jax.random.key(args.seed), part, cfg, test,
                     distributed_mesh=mesh, verbose=True,
-                    executor=args.executor, window=args.window or None)
+                    executor=args.executor, window=args.window or None,
+                    topology=topology)
     print(f"executor={res.executor}  RMSE={res.rmse:.4f}  "
           f"wall={res.wall_time_s:.1f}s  "
           f"phases={ {k: round(v, 2) for k, v in res.phase_times_s.items()} }")

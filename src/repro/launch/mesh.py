@@ -8,6 +8,10 @@ init and only then calls these.
 Topology (TPU v5e target):
   single pod : 16 × 16 = 256 chips, axes ('data', 'model')
   multi-pod  : 2 × 16 × 16 = 512 chips, axes ('pod', 'data', 'model')
+
+BMF-PP placement goes through ONE builder, ``make_pp_mesh`` — the 2-D
+('block', 'data') mesh of ``core.topology.Topology``. The transformer-side
+('data', 'model') meshes above are unrelated to PP placement.
 """
 from __future__ import annotations
 
@@ -23,3 +27,19 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_debug_mesh(n_data: int = 4, n_model: int = 2):
     """Small mesh for CI-scale integration tests (8 host devices)."""
     return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def make_pp_mesh(block: int, data: int = 1, devices=None):
+    """The unified BMF-PP placement mesh: 2-D ('block', 'data') with
+    ``block`` device groups of ``data`` devices each. Thin wrapper over
+    ``core.topology.Topology`` so launch scripts, the dry-run, and the
+    engine all build device placement from the same object —
+    ``distributed.make_block_mesh`` is the data==1 degenerate form."""
+    from repro.core.topology import Topology
+    return Topology(block=block, data=data, devices=devices).mesh
+
+
+def make_pp_topology(block: int, data: int = 1, devices=None):
+    """Topology counterpart of ``make_pp_mesh`` (what ``run_pp`` takes)."""
+    from repro.core.topology import Topology
+    return Topology(block=block, data=data, devices=devices)

@@ -155,6 +155,90 @@ def collective_bytes_graph(hlo_text: str) -> Dict[str, float]:
     return totals
 
 
+_REPLICA_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^=]*?\})\}")
+# iota list format: replica_groups=[G,S]<=[d0,d1,...] with an optional
+# transpose suffix T(p0,p1,...) — groups are rows of
+# reshape(transpose(iota(d), p), (G, S))
+_IOTA_GROUPS_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\},?)+)\}")
+
+
+def collective_replica_groups(hlo_text: str):
+    """Parse every collective instruction's participant groups.
+
+    Returns ``[(op, [[device ids], ...]), ...]`` — one entry per collective
+    HLO line, each with its replica groups as lists of device ids. Handles
+    the braces format (``replica_groups={{0,1},{2,3}}``), the iota format
+    (``replica_groups=[2,2]<=[4]``, including a transposed assignment
+    ``<=[2,2]T(1,0)``), and collective-permute's ``source_target_pairs``
+    (each (src, dst) pair is a 2-device group). Used by the dry-run to
+    assert that a composed ('block','data') executable's collectives are
+    CONFINED to the 'data' axis: with the mesh's default device order, a
+    data-axis group is a contiguous run inside one block row, while any
+    'block'-axis collective would span rows. Unparsable participant
+    formats yield ``[]`` — classified conservatively as spanning
+    everything, so the confinement check fails LOUDLY rather than
+    passing on a format this parser does not know."""
+    import numpy as np
+    out = []
+    for line in hlo_text.splitlines():
+        op, _ = _line_op_and_shape(line)
+        if op is None:
+            continue
+        base = op[:-len("-start")] if op.endswith("-start") else op
+        if base not in _COLLECTIVE_OPS:
+            continue
+        m = _REPLICA_GROUPS_RE.search(line)
+        if m:
+            groups = [[int(x) for x in grp.split(",") if x.strip()]
+                      for grp in re.findall(r"\{([^{}]*)\}", m.group(1))]
+            out.append((base, groups))
+            continue
+        m = _IOTA_GROUPS_RE.search(line)
+        if m:
+            n_groups, size = int(m.group(1)), int(m.group(2))
+            dims = [int(x) for x in m.group(3).split(",")]
+            ids = np.arange(int(np.prod(dims))).reshape(dims)
+            if m.group(4):
+                perm = [int(x) for x in m.group(4).split(",")]
+                ids = ids.transpose(perm)
+            groups = ids.reshape(n_groups, size).tolist()
+            out.append((base, groups))
+            continue
+        m = _PAIRS_RE.search(line)
+        if m:
+            pairs = [[int(x) for x in grp.split(",")]
+                     for grp in re.findall(r"\{(\d+,\d+)\}", m.group(1))]
+            out.append((base, pairs))
+            continue
+        out.append((base, []))            # unparsed: treat as all devices
+    return out
+
+
+def collectives_confined_to_groups(hlo_text: str, allowed_groups) -> Dict:
+    """Check every collective's replica groups lie WITHIN the allowed
+    device groups (e.g. a topology's 'data'-axis rows). Returns
+    ``{"n_collectives", "n_confined", "n_crossing", "crossing"}`` where
+    ``crossing`` lists (op, group) pairs that span allowed-group
+    boundaries — for the composed PP executable this list must be empty
+    (nothing ever reduces over the 'block' axis)."""
+    allowed = [frozenset(g) for g in allowed_groups]
+    crossing = []
+    n = 0
+    for op, groups in collective_replica_groups(hlo_text):
+        n += 1
+        if not groups:                    # un-grouped = spans everything
+            crossing.append((op, "all"))
+            continue
+        bad = [grp for grp in groups
+               if not any(set(grp) <= a for a in allowed)]
+        if bad:                           # one crossing entry per OP
+            crossing.append((op, bad[0]))
+    return {"n_collectives": n, "n_crossing": len(crossing),
+            "n_confined": n - len(crossing), "crossing": crossing}
+
+
 def collective_bytes(hlo_text: str) -> Dict[str, float]:
     """Graph-walked collective bytes + op counts (flat, for reporting)."""
     g = collective_bytes_graph(hlo_text)
