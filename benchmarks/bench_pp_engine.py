@@ -34,6 +34,15 @@ reason; the streaming executor's live peak stays bounded by
 ``--window × (depth+1)`` blocks and is measured (``peak_live_mb``,
 benchmarks.common.gibbs_live_peak) and recorded.
 
+``--faults off|nan|hang`` exercises the fault-tolerant engine under load:
+'off' (default) measures the chain-health guard's zero-fault overhead
+(the guard rides every run now — compare wall_s against the pre-guard
+records), 'nan' poisons one block's chain so the guard trips and one
+retry heals it, 'hang' suppresses one dispatch's completion so the
+async/streaming watchdog re-dispatches it. Records gain
+``n_fault_events``/``n_retries``; the ``faults`` mode is part of the run
+identity (old fault-free rows are replaced by ``--faults off`` reruns).
+
 Each executor gets one warmup run (compile) and ``--repeats`` timed runs;
 reported phase times are the per-phase minima over repeats. With
 ``--json-out`` the run record is merge-appended into the ``{runs: [...]}``
@@ -69,13 +78,18 @@ from benchmarks.common import emit, gibbs_live_peak
 
 # a run record's config identity: re-running the same config replaces its
 # record in the {runs: [...]} file instead of appending a duplicate
-RUN_KEY = ("dataset", "grid_kind", "grid", "K", "samples", "topology")
+RUN_KEY = ("dataset", "grid_kind", "grid", "K", "samples", "topology",
+           "faults")
 
 
 def _run_key(rec: dict) -> tuple:
     vals = []
     for f in RUN_KEY:
         v = rec.get(f)
+        if f == "faults":
+            # records written before the fault-injection mode existed have
+            # no "faults" field — normalize so --faults off REPLACES them
+            v = v or "off"
         vals.append(tuple(v) if isinstance(v, list) else v)
     return tuple(vals)
 
@@ -148,11 +162,33 @@ def make_skewed(p: SYN.DatasetPreset, I: int, J: int, skew: float,
                n_rows=p.n_rows, n_cols=p.n_cols)
 
 
+def fault_setup(mode: str, part):
+    """(fault_plan, fault_policy) for one --faults mode. Deterministic by
+    construction (engine.FaultPlan is a pure function of coord/attempt),
+    so faulted timings are reproducible run to run."""
+    from repro.core import engine as ENG
+    if mode == "off":
+        return None, None
+    c = (min(1, part.I - 1), min(1, part.J - 1))
+    if mode == "nan":
+        # one NaN-poisoned chain: health guard trips, one retry heals it
+        return ENG.FaultPlan(nan_at={c: 1}), None
+    # one hung dispatch: the watchdog re-dispatches after its deadline.
+    # Only the async/streaming poll loops can hang — barrier executors
+    # report zero fault events here, which the record makes visible.
+    return (ENG.FaultPlan(hang_at={c: 1}),
+            ENG.FaultPolicy(timeout_floor_s=2.0, timeout_slack=10.0))
+
+
 def run_one(executor: str, key, part, cfg, test, repeats: int,
-            window=None, measure_peak: bool = False, topology=None):
+            window=None, measure_peak: bool = False, topology=None,
+            faults: str = "off"):
     # the serial/stacked references are placement-free; topology composes
     # with the sharded/async/streaming executors
     topo = topology if executor in ("sharded", "async", "streaming") else None
+    plan, policy = fault_setup(faults, part)
+    kw = dict(executor=executor, window=window, topology=topo,
+              fault_plan=plan, fault_policy=policy)
     runs = []
     peak = None
     for i in range(1 + repeats):           # first run compiles; dropped
@@ -160,13 +196,10 @@ def run_one(executor: str, key, part, cfg, test, repeats: int,
             # live peak sampled on the (untimed) warmup run so the
             # per-dispatch live_arrays() walk never pollutes the timings
             with gibbs_live_peak() as pk:
-                runs.append(PP.run_pp(key, part, cfg, test,
-                                      executor=executor, window=window,
-                                      topology=topo))
+                runs.append(PP.run_pp(key, part, cfg, test, **kw))
             peak = pk
         else:
-            runs.append(PP.run_pp(key, part, cfg, test, executor=executor,
-                                  window=window, topology=topo))
+            runs.append(PP.run_pp(key, part, cfg, test, **kw))
     timed = runs[1:]
     phases = {ph: min(r.phase_times_s[ph] for r in timed)
               for ph in timed[0].phase_times_s}
@@ -177,6 +210,10 @@ def run_one(executor: str, key, part, cfg, test, repeats: int,
         "phase_s": phases,
         "phase_bc_s": phases.get("b", 0.0) + phases.get("c", 0.0),
     }
+    if faults != "off":
+        rec["faults"] = faults
+        rec["n_fault_events"] = len(timed[0].faults)
+        rec["n_retries"] = timed[0].n_retries
     if executor == "streaming":
         rec["window"] = window
         if topo is not None:
@@ -225,6 +262,14 @@ def main():
                     default=["serial", "stacked"],
                     choices=["serial", "stacked", "sharded", "async",
                              "streaming"])
+    ap.add_argument("--faults", default="off",
+                    choices=["off", "nan", "hang"],
+                    help="deterministic fault injection: 'nan' poisons one "
+                         "block's chain (health guard + retry), 'hang' "
+                         "suppresses one dispatch's completion (watchdog "
+                         "re-dispatch; async/streaming only). 'off' runs "
+                         "clean and measures the guard's zero-fault "
+                         "overhead")
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args()
 
@@ -294,7 +339,7 @@ def main():
             continue
         rec = run_one(ex, key, part, cfg, test, args.repeats,
                       window=W, measure_peak=args.oversized,
-                      topology=topology)
+                      topology=topology, faults=args.faults)
         recs.append(rec)
         emit(f"pp_engine/{args.dataset}/{grid_kind}/{ex}", rec["wall_s"],
              f"rmse={rec['rmse']:.4f};phase_bc_s={rec['phase_bc_s']:.3f}")
@@ -302,7 +347,10 @@ def main():
               f"phases={ {k: round(v, 3) for k, v in rec['phase_s'].items()} } "
               f"rmse={rec['rmse']:.4f}"
               + (f" peak_live={rec['peak_live_mb']:.1f}MB"
-                 if "peak_live_mb" in rec else ""))
+                 if "peak_live_mb" in rec else "")
+              + (f" faults={rec['n_fault_events']} "
+                 f"retries={rec['n_retries']}"
+                 if "n_fault_events" in rec else ""))
 
     # executors must be RMSE-identical under a fixed key
     for rec in recs[1:]:
@@ -336,6 +384,7 @@ def main():
                    "mem_cap_mb": args.mem_cap_mb or None,
                    "topology": (list(args.topology) if args.topology
                                 else None),
+                   "faults": args.faults,
                    "skipped": skipped, "records": recs}
         merge_json_out(args.json_out, run_rec)
         print("->", args.json_out)

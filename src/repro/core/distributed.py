@@ -333,8 +333,10 @@ def run_gibbs_distributed(key, csr_rows: PaddedCSR, csr_cols: PaddedCSR,
     # trim padding
     acc = acc._replace(U_sum=acc.U_sum[:N], U_outer=acc.U_outer[:N],
                        V_sum=acc.V_sum[:D_orig], V_outer=acc.V_outer[:D_orig])
+    health = jax.jit(GIBBS.chain_health)(
+        U[:N], V[:D_orig], U_post, V_post, acc.pred_sum)
     return GIBBS.GibbsResult(U=U[:N], V=V[:D_orig], acc=acc, U_post=U_post,
-                             V_post=V_post)
+                             V_post=V_post, health=health)
 
 
 # ---------------------------------------------------------------------------

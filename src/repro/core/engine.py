@@ -73,6 +73,16 @@ aggregate: ``run_phase_graph`` owns RMSE accumulation and the Qin-et-al.
 divide-away aggregation (``pp._aggregate_axis``, one jitted device-resident
 reduction).
 
+Fault tolerance (see core/README.md): every block's chain computes a
+device-resident health scalar (``gibbs.GibbsResult.health``) checked at
+resolve time by ``_commit_guard`` — unhealthy blocks retry through one
+shared single-block runner (re-split key, jittered prior), then degrade to
+their propagated prior or raise per ``FaultPolicy``. The async/streaming
+poll loops are watchdog-policed (cost-model deadlines; timed-out dispatches
+re-dispatch on the next device group), ``checkpoint_dir``/``resume_from``
+persist and restore per-block posteriors bitwise, and ``FaultPlan`` is the
+deterministic injection seam the chaos tests drive every executor with.
+
 Note on timings: SerialExecutor measures true per-block seconds;
 Stacked/Sharded report bucket wall time split evenly across the bucket's
 blocks (one executable runs them all) — the interesting number there is the
@@ -104,6 +114,123 @@ Coord = Tuple[int, int]
 
 # stable intra-phase bucket order (phase b runs its two buckets back to back)
 _TAG_ORDER = ("a", "b_row", "b_col", "c")
+
+
+# ---------------------------------------------------------------------------
+# Fault tolerance: policy, deterministic injection plan, fault ledger
+# ---------------------------------------------------------------------------
+
+
+class BlockFaultError(RuntimeError):
+    """A block exhausted its retry budget (unhealthy chain, repeated
+    dispatch failure, or repeated watchdog timeout) under
+    ``FaultPolicy.on_fault == 'raise'``."""
+
+
+class _InjectedDispatchFailure(RuntimeError):
+    """Raised by the FaultPlan seam to simulate a dispatch-time failure
+    (device OOM, dead runtime) — handled exactly like the real thing."""
+
+
+# dispatch-time failures the engine treats as block faults rather than
+# bugs: the injected seam plus JAX's runtime-side errors (OOM, dead
+# device). Anything else propagates — a TypeError is a bug, not a fault.
+try:
+    _DISPATCH_ERRORS: tuple = (_InjectedDispatchFailure,
+                               jax.errors.JaxRuntimeError)
+except AttributeError:  # pragma: no cover - older jax without JaxRuntimeError
+    _DISPATCH_ERRORS = (_InjectedDispatchFailure,)
+
+
+@dataclass(frozen=True)
+class FaultPolicy:
+    """What the engine does when a block goes bad.
+
+    on_fault: after ``max_retries`` failed re-runs — "raise"
+      (``BlockFaultError``) or "degrade" (posterior := the block's
+      propagated prior, which cancels EXACTLY in the divide-away
+      aggregation; the block's test entries drop out of the RMSE and the
+      fault is recorded in ``PPResult.faults``).
+    max_retries: bounded re-runs of a faulty block. Retry ``a`` uses
+      ``fold_in(key, a)`` (a fresh independent chain) and a prior whose
+      precision is inflated by ``retry_jitter·a·I`` — the two standard
+      fixes for a NaN'd Cholesky / diverged chain. Retries run through ONE
+      shared single-block runner, so a retried block's chain is identical
+      under every executor (deterministic by (coord, attempt)).
+    rmse_max: optional divergence threshold — a resolved block whose own
+      test RMSE exceeds it is treated as faulty even if finite.
+    watchdog: deadline-police the async/streaming poll loops. A block's
+      deadline is ``timeout_floor_s + timeout_slack · rate · est(block)``
+      where ``est`` is the nnz cost proxy (``_block_cost_estimates``, the
+      same model priority dispatch uses) and ``rate`` is the max observed
+      seconds-per-cost-unit over already-resolved blocks (0 until the
+      first resolve, so early blocks get the generous floor). A timed-out
+      dispatch is dropped, its block re-dispatched on the next device
+      group (same PRNG key — a slow-but-alive block re-resolves to
+      bitwise-identical numbers); budget exhaustion degrades/raises.
+      watchdog=False restores the legacy block-on-oldest fallback, which
+      deadlocks if the oldest in-flight block died — keep it on.
+    """
+    on_fault: str = "raise"
+    max_retries: int = 2
+    rmse_max: Optional[float] = None
+    retry_jitter: float = 1e-3
+    watchdog: bool = True
+    timeout_floor_s: float = 60.0
+    timeout_slack: float = 10.0
+
+    def __post_init__(self):
+        if self.on_fault not in ("raise", "degrade"):
+            raise ValueError(f"on_fault must be 'raise' or 'degrade', "
+                             f"got {self.on_fault!r}")
+        if int(self.max_retries) < 0:
+            raise ValueError(f"max_retries must be >= 0, "
+                             f"got {self.max_retries}")
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """Deterministic fault injection by coordinate — the test-only seam
+    the conformance fault battery drives every executor with.
+
+    Each map is ``{coord: n}``: the block's first ``n`` attempts are
+    affected (attempt 0 is the normal dispatch, attempt ``a`` the a-th
+    retry), so a plan is a pure function of (coord, attempt) and every
+    run under it is deterministic.
+
+    nan_at: NaN-poison the block's rating planes at padding time — the
+      chain itself goes non-finite and the in-chain health guard trips,
+      exercising the REAL failure surface rather than a mocked flag.
+    hang_at: suppress completion detection for the block's dispatch
+      (async/streaming ``_is_resolved`` never fires) until the watchdog
+      deadline recovers it. Ignored by barrier executors, which have no
+      poll loop to hang.
+    fail_dispatch_at: dispatching the block raises — exercised at every
+      executor's dispatch site (serial call, stacked bucket assembly,
+      async dispatch, streaming chunk formation).
+    """
+    nan_at: Dict[Coord, int] = field(default_factory=dict)
+    hang_at: Dict[Coord, int] = field(default_factory=dict)
+    fail_dispatch_at: Dict[Coord, int] = field(default_factory=dict)
+
+    def nan(self, c: Coord, attempt: int) -> bool:
+        return attempt < self.nan_at.get(tuple(c), 0)
+
+    def hang(self, c: Coord, attempt: int) -> bool:
+        return attempt < self.hang_at.get(tuple(c), 0)
+
+    def fail(self, c: Coord, attempt: int) -> bool:
+        return attempt < self.fail_dispatch_at.get(tuple(c), 0)
+
+
+@dataclass(frozen=True)
+class FaultRecord:
+    """One ledger entry in ``PPResult.faults``: what went wrong with which
+    block at which attempt, and what the engine did about it."""
+    coord: Coord
+    kind: str        # "nonfinite" | "rmse" | "dispatch" | "timeout"
+    attempt: int
+    action: str      # "retried" | "redispatched" | "degraded" | "raised"
 
 
 @dataclass(frozen=True)
@@ -157,6 +284,17 @@ class PhaseContext:
     shapes: Dict[str, "PP.BlockShapes"]  # per phase tag
     U_posts: Dict[Coord, RowGaussians] = field(default_factory=dict)
     V_posts: Dict[Coord, RowGaussians] = field(default_factory=dict)
+    # fault tolerance: policy, optional deterministic injection plan,
+    # per-block attempt counters (0 = the normal dispatch), the run's
+    # fault ledger, optional block-level checkpoint writer, and outcomes
+    # restored from a resume_from directory (their tasks are pruned from
+    # the graph the executor sees).
+    policy: FaultPolicy = field(default_factory=FaultPolicy)
+    fault_plan: Optional[FaultPlan] = None
+    attempts: Dict[Coord, int] = field(default_factory=dict)
+    faults: List[FaultRecord] = field(default_factory=list)
+    ckpt: Optional[object] = None        # checkpoint.ckpt.PPCheckpoint
+    resumed: Dict[Coord, "BlockOutcome"] = field(default_factory=dict)
 
     def block_cfg(self, task: BlockTask) -> BMF.BMFConfig:
         """Reduced chains for phases b/c when cfg.phase_bc_samples is set
@@ -172,6 +310,46 @@ class PhaseContext:
         vp = self.V_posts[task.v_prior_from] if task.v_prior_from else None
         return up, vp
 
+    # -- fault-tolerance plumbing ----------------------------------------
+
+    def cur_attempt(self, c: Coord) -> int:
+        return self.attempts.get(c, 0)
+
+    def attempt_key(self, c: Coord, attempt: int):
+        """Retry ``a`` re-splits the block's key with ``fold_in(key, a)``
+        — a fresh chain, still a pure function of (run key, coord, a), so
+        retried runs are deterministic and executor-independent."""
+        k = self.keys[c[0], c[1]]
+        return k if attempt == 0 else jax.random.fold_in(k, attempt)
+
+    def should_poison(self, c: Coord) -> bool:
+        return (self.fault_plan is not None
+                and self.fault_plan.nan(c, self.cur_attempt(c)))
+
+    def is_hung(self, c: Coord) -> bool:
+        return (self.fault_plan is not None
+                and self.fault_plan.hang(c, self.cur_attempt(c)))
+
+    def check_dispatch(self, c: Coord):
+        if (self.fault_plan is not None
+                and self.fault_plan.fail(c, self.cur_attempt(c))):
+            raise _InjectedDispatchFailure(
+                f"injected dispatch failure for block {c} "
+                f"(attempt {self.cur_attempt(c)})")
+
+    def record_fault(self, c: Coord, kind: str, action: str):
+        self.faults.append(FaultRecord(coord=c, kind=kind,
+                                       attempt=self.cur_attempt(c),
+                                       action=action))
+
+    def note_resolved(self, task: BlockTask, out: "BlockOutcome"):
+        """Checkpoint hook: persist one resolved block's posteriors + RMSE
+        contribution. No-cost when checkpointing is off."""
+        if self.ckpt is None:
+            return
+        n, sq = _host_sq(self, task, out)
+        self.ckpt.note(task.coord, out.U_post, out.V_post, sq, n)
+
 
 @dataclass
 class BlockOutcome:
@@ -186,6 +364,9 @@ class BlockOutcome:
     # set, the engine never touches pred_mean.
     sq_err: Optional[jax.Array] = None
     n_obs: int = 0
+    # the chain's device-resident health flag (gibbs.GibbsResult.health);
+    # None on paths that predate the guard — treated as healthy.
+    health: Optional[jax.Array] = None
 
 
 def _outcome(res: GIBBS.GibbsResult, blk, seconds: float) -> BlockOutcome:
@@ -197,7 +378,7 @@ def _outcome(res: GIBBS.GibbsResult, blk, seconds: float) -> BlockOutcome:
                             Lambda=res.U_post.Lambda[:nr]),
         V_post=RowGaussians(eta=res.V_post.eta[:nc],
                             Lambda=res.V_post.Lambda[:nc]),
-        pred_mean=pred, seconds=seconds)
+        pred_mean=pred, seconds=seconds, health=res.health)
 
 
 @jax.jit
@@ -205,6 +386,147 @@ def _block_sq_err(pred_sum, pred_cnt, vals, mask):
     """Masked Σ(pred-val)² — the per-block completion/RMSE scalar."""
     err = (pred_sum / jnp.maximum(pred_cnt, 1.0) - vals) * mask
     return jnp.vdot(err, err)
+
+
+def _host_sq(ctx: PhaseContext, task: BlockTask,
+             o: BlockOutcome) -> Tuple[int, float]:
+    """One block's (n_test, Σ(pred-val)²) as host scalars — from the
+    device-resident sq_err channel when present, else from pred_mean."""
+    if o.sq_err is not None:
+        return o.n_obs, float(o.sq_err)
+    blk = ctx.part.block(task.i, task.j)
+    _, _, tv = PP._block_test(ctx.test_p, blk)
+    n = len(tv)
+    sq = float(np.sum((np.asarray(o.pred_mean[:n]) - tv) ** 2)) if n else 0.0
+    return n, sq
+
+
+def _fault_kind(ctx: PhaseContext, task: BlockTask,
+                o: BlockOutcome) -> Optional[str]:
+    """Health verdict on a resolved outcome: None = healthy, else the
+    fault kind. Checked BEFORE the posterior feeds any successor or the
+    final aggregation — a NaN caught here never poisons anything
+    downstream."""
+    if o.health is not None and not bool(np.asarray(o.health)):
+        return "nonfinite"
+    if ctx.policy.rmse_max is not None:
+        n, sq = _host_sq(ctx, task, o)
+        # `not <=` (rather than `>`) also trips on a NaN sq that slipped
+        # past a health-less outcome
+        if n and not (sq <= (ctx.policy.rmse_max ** 2) * n):
+            return "rmse"
+    return None
+
+
+def _jitter_prior(p: Optional[RowGaussians],
+                  eps: float) -> Optional[RowGaussians]:
+    """Precision-inflate a retry's prior: Λ + eps·I. Tightens the
+    conditional toward the prior mean — the standard stabilization for a
+    chain whose Cholesky went non-PD."""
+    if p is None or not eps:
+        return p
+    K = p.eta.shape[-1]
+    return RowGaussians(eta=p.eta, Lambda=p.Lambda + eps * jnp.eye(K))
+
+
+def _run_block_attempt(ctx: PhaseContext, task: BlockTask,
+                       attempt: int) -> BlockOutcome:
+    """The shared retry runner: one synchronous single-block chain with
+    the attempt's re-split key and jittered prior. EVERY executor heals
+    through this path, so a retried block's chain — and therefore the
+    whole faulted run's numbers — is identical whichever executor hit the
+    fault. Uses the block's per-phase bucket shapes (the serial
+    executable), so no new compilation is introduced."""
+    c = task.coord
+    ctx.check_dispatch(c)
+    blk = ctx.part.block(task.i, task.j)
+    s = ctx.shapes[task.phase]
+    up, vp = ctx.priors(task)
+    csr_r, csr_c, tr, tc, tv, tmask, up_p, vp_p = PP.pad_block_inputs(
+        blk, s, ctx.cfg.K, ctx.test_p, up, vp,
+        poison_nan=(ctx.fault_plan is not None
+                    and ctx.fault_plan.nan(c, attempt)))
+    eps = ctx.policy.retry_jitter * attempt
+    res = GIBBS.run_gibbs(ctx.attempt_key(c, attempt), csr_r, csr_c,
+                          jnp.asarray(tr), jnp.asarray(tc),
+                          ctx.block_cfg(task),
+                          U_prior=_jitter_prior(up_p, eps),
+                          V_prior=_jitter_prior(vp_p, eps))
+    nr, nc = len(blk.row_ids), len(blk.col_ids)
+    sq = _block_sq_err(res.acc.pred_sum, res.acc.pred_cnt,
+                       jnp.asarray(tv), jnp.asarray(tmask))
+    return BlockOutcome(
+        U_post=RowGaussians(eta=res.U_post.eta[:nr],
+                            Lambda=res.U_post.Lambda[:nr]),
+        V_post=RowGaussians(eta=res.V_post.eta[:nc],
+                            Lambda=res.V_post.Lambda[:nc]),
+        pred_mean=None, seconds=0.0, sq_err=sq, n_obs=int(tmask.sum()),
+        health=res.health)
+
+
+def _degrade_outcome(ctx: PhaseContext, task: BlockTask) -> BlockOutcome:
+    """on_fault='degrade': the block's posterior becomes its propagated
+    prior (neutral N(0, I) where it had none). In the divide-away
+    aggregation ``Σ_j posts − (J−1)·prior`` a prior-valued posterior
+    cancels EXACTLY, so a degraded block contributes nothing instead of
+    something wrong; its test entries are dropped from the RMSE
+    (sq_err=0, n_obs=0) — the reported error stays honest over the blocks
+    that actually ran."""
+    blk = ctx.part.block(task.i, task.j)
+    up, vp = ctx.priors(task)
+    K = ctx.cfg.K
+    return BlockOutcome(
+        U_post=up if up is not None else _dummy_prior(len(blk.row_ids), K),
+        V_post=vp if vp is not None else _dummy_prior(len(blk.col_ids), K),
+        pred_mean=None, seconds=0.0, sq_err=jnp.zeros(()), n_obs=0,
+        health=jnp.asarray(True))
+
+
+def _commit_guard(ctx: PhaseContext, task: BlockTask,
+                  out: Optional[BlockOutcome],
+                  kind: Optional[str] = None) -> BlockOutcome:
+    """The chain-health guard, applied to every block at resolve time.
+
+    Healthy outcome → returned untouched (the common case costs one tiny
+    device→host bool read of an already-computed scalar). Faulty outcome
+    (or ``kind`` pre-set by a dispatch failure / watchdog timeout) →
+    bounded retries through ``_run_block_attempt``, then degrade or raise
+    per ``ctx.policy``. Whenever the outcome changes, the posterior store
+    is rewritten BEFORE returning, so successors and the final aggregation
+    only ever see the healed values."""
+    c = task.coord
+    if kind is None:
+        if out is None:
+            raise AssertionError(f"block {c}: no outcome and no fault kind")
+        kind = _fault_kind(ctx, task, out)
+        if kind is None:
+            return out
+    pol = ctx.policy
+    t0 = time.time()
+    while ctx.cur_attempt(c) < pol.max_retries:
+        attempt = ctx.cur_attempt(c) + 1
+        ctx.record_fault(c, kind, "retried")
+        ctx.attempts[c] = attempt
+        try:
+            out = _run_block_attempt(ctx, task, attempt)
+            kind = _fault_kind(ctx, task, out)
+        except _DISPATCH_ERRORS:
+            kind = "dispatch"
+            continue
+        if kind is None:
+            out.seconds = time.time() - t0
+            ctx.U_posts[c], ctx.V_posts[c] = out.U_post, out.V_post
+            return out
+    if pol.on_fault == "degrade":
+        ctx.record_fault(c, kind, "degraded")
+        out = _degrade_outcome(ctx, task)
+        ctx.U_posts[c], ctx.V_posts[c] = out.U_post, out.V_post
+        return out
+    ctx.record_fault(c, kind, "raised")
+    raise BlockFaultError(
+        f"block {c}: {kind} fault after {ctx.cur_attempt(c)} of "
+        f"{pol.max_retries} retries (on_fault='raise'; pass "
+        f"on_fault='degrade' to fall back to the propagated prior)")
 
 
 class Executor:
@@ -254,13 +576,19 @@ class Executor:
             assert not missing, f"phase {phase} scheduled before {missing}"
             t0 = time.time()
             outs = self.run_phase(ctx, phase, tasks)
-            dt = time.time() - t0
-            phase_times[phase] = dt
             dropped = {t.coord for t in tasks} - set(outs)
             assert not dropped, f"executor {self.name} dropped blocks {dropped}"
             for t in tasks:
-                ctx.U_posts[t.coord] = outs[t.coord].U_post
-                ctx.V_posts[t.coord] = outs[t.coord].V_post
+                # chain-health guard at block resolution: retry / degrade /
+                # raise BEFORE the posterior reaches the store (and with it
+                # every successor and the final aggregation)
+                o = _commit_guard(ctx, t, outs[t.coord])
+                outs[t.coord] = o
+                ctx.U_posts[t.coord] = o.U_post
+                ctx.V_posts[t.coord] = o.V_post
+                ctx.note_resolved(t, o)
+            dt = time.time() - t0
+            phase_times[phase] = dt
             outcomes.update(outs)
             if verbose:
                 print(f"[pp:{self.name}] phase {phase}: {len(tasks)} "
@@ -308,12 +636,18 @@ class SerialExecutor(Executor):
             up, vp = ctx.priors(t)
             self._record("dispatch", t.coord)
             t0 = time.time()
-            res = PP.run_block(ctx.keys[t.i, t.j], blk, ctx.block_cfg(t),
-                               ctx.test_p, up, vp, self.distributed_mesh,
-                               shapes=ctx.shapes[t.phase])
-            jax.block_until_ready(res.U)
-            self._record("resolve", t.coord)
-            out[t.coord] = _outcome(res, blk, time.time() - t0)
+            try:
+                ctx.check_dispatch(t.coord)
+                res = PP.run_block(ctx.keys[t.i, t.j], blk, ctx.block_cfg(t),
+                                   ctx.test_p, up, vp, self.distributed_mesh,
+                                   shapes=ctx.shapes[t.phase],
+                                   poison_nan=ctx.should_poison(t.coord))
+                jax.block_until_ready(res.U)
+                self._record("resolve", t.coord)
+                out[t.coord] = _outcome(res, blk, time.time() - t0)
+            except _DISPATCH_ERRORS:
+                self._record("resolve", t.coord)
+                out[t.coord] = _commit_guard(ctx, t, None, kind="dispatch")
         return out
 
 
@@ -324,7 +658,8 @@ def _task_leaves(ctx: PhaseContext, task: BlockTask):
     blk = ctx.part.block(task.i, task.j)
     up, vp = ctx.priors(task)
     csr_r, csr_c, tr, tc, _, _, up, vp = PP.pad_block_inputs(
-        blk, ctx.shapes[task.phase], ctx.cfg.K, ctx.test_p, up, vp)
+        blk, ctx.shapes[task.phase], ctx.cfg.K, ctx.test_p, up, vp,
+        poison_nan=ctx.should_poison(task.coord))
     return ((csr_r.idx, csr_r.val, csr_r.mask),
             (csr_c.idx, csr_c.val, csr_c.mask),
             jnp.asarray(tr), jnp.asarray(tc), up, vp)
@@ -365,6 +700,25 @@ class StackedExecutor(Executor):
         t0 = time.time()
         for t in group:
             self._record("dispatch", t.coord)
+        # dispatch-failure injection/handling: flagged blocks are excluded
+        # from the bucket (per-block vmapped chains are independent, so the
+        # rest of the bucket is unaffected) and healed individually through
+        # the shared retry runner
+        failed = []
+        ok = []
+        for t in group:
+            try:
+                ctx.check_dispatch(t.coord)
+                ok.append(t)
+            except _DISPATCH_ERRORS:
+                failed.append(t)
+        out: Dict[Coord, BlockOutcome] = {}
+        for t in failed:
+            self._record("resolve", t.coord)
+            out[t.coord] = _commit_guard(ctx, t, None, kind="dispatch")
+        if not ok:
+            return out
+        group = ok
         leaves = _stack_trees([_task_leaves(ctx, t) for t in group])
         rows_arrs, cols_arrs, test_rows, test_cols, up, vp = leaves
         ii = np.array([t.i for t in group])
@@ -389,7 +743,6 @@ class StackedExecutor(Executor):
         for t in group:
             self._record("resolve", t.coord)
         per = (time.time() - t0) / len(group)
-        out = {}
         for b, t in enumerate(group):
             blk = ctx.part.block(t.i, t.j)
             res_b = jax.tree.map(lambda x: x[b], res)
@@ -529,11 +882,15 @@ def _dep_state(ctx: PhaseContext, graph, priority: bool, make_queue=None):
     ``(tasks, phase_of, waiting, succ, ready)``."""
     tasks = {t.coord: t for _, ts in graph for t in ts}
     phase_of = {t.coord: ph for ph, ts in graph for t in ts}
-    waiting = {c: len(t.deps) for c, t in tasks.items()}
+    # a resumed graph is pruned: deps satisfied by restored blocks don't
+    # count toward readiness, and restored blocks appear in no succ list
+    waiting = {c: sum(1 for d in t.deps if d in tasks)
+               for c, t in tasks.items()}
     succ: Dict[Coord, List[Coord]] = {c: [] for c in tasks}
     for t in tasks.values():
         for d in t.deps:
-            succ[d].append(t.coord)
+            if d in succ:
+                succ[d].append(t.coord)
     prio = (critical_path_priority(tasks, _block_cost_estimates(ctx, tasks),
                                    succ=succ)
             if priority else None)
@@ -697,55 +1054,132 @@ class AsyncExecutor(Executor):
         super()._reset_run_state()
         self._n_dispatched = 0
 
+    def _await_progress(self, ctx, inflight, deadline):
+        """Deadline-aware wait for the dispatch loop: poll EVERY in-flight
+        completion scalar with an adaptive sleep until at least one
+        resolves or blows its watchdog deadline. Returns
+        ``(resolved, expired)`` coords. This replaces the legacy
+        block-on-oldest fallback, which deadlocked forever when the oldest
+        in-flight block was the one that died (its scalar never becomes
+        ready); ``watchdog=False`` restores that legacy behavior."""
+        if not ctx.policy.watchdog:
+            oldest = next(iter(inflight))
+            jax.block_until_ready(inflight[oldest][0])
+            return [oldest], []
+        sleep = 5e-5
+        while True:
+            resolved = [c for c, (sig, _, _) in inflight.items()
+                        if not ctx.is_hung(c) and self._is_resolved(c, sig)]
+            if resolved:
+                return resolved, []
+            now = time.time()
+            expired = [c for c, (_, _, td) in inflight.items()
+                       if now - td > deadline(c)]
+            if expired:
+                return [], expired
+            time.sleep(sleep)
+            sleep = min(sleep * 2, 2e-3)
+
     def run_graph(self, ctx, graph, verbose: bool = False):
         self._reset_run_state()
         tasks, phase_of, waiting, succ, ready = _dep_state(
             ctx, graph, self.priority)
+        est = _block_cost_estimates(ctx, tasks)
+        rate = [0.0]          # steady-state seconds per est cost unit
+        rate_skip = [True]    # first resolve's span includes compile
         inflight: Dict[Coord, Tuple] = {}   # coord -> (signal, outcome, t_d)
         outcomes: Dict[Coord, BlockOutcome] = {}
         spans: Dict[Coord, Tuple[float, float]] = {}
         first_d: Dict[str, float] = {}
         last_r: Dict[str, float] = {}
         remaining = {ph: len(ts) for ph, ts in graph}
+        pol = ctx.policy
         t0 = time.time()
+
+        def deadline(c):
+            # watchdog deadline: generous floor + slack × the calibrated
+            # cost model. rate is the FASTEST observed seconds/cost — a
+            # steady-state estimate robust to compile- and queue-inflated
+            # spans (the run's first resolve is excluded entirely); 0
+            # until then, leaving early blocks the floor alone. A false
+            # expiry is benign: re-dispatch reuses attempt-0 keys, so a
+            # slow-but-alive block still resolves bitwise-identically.
+            return pol.timeout_floor_s + pol.timeout_slack * rate[0] * est[c]
+
+        def retire(c, out, td, kind=None):
+            self._record("resolve", c)
+            out = _commit_guard(ctx, tasks[c], out, kind=kind)
+            tr = time.time()
+            if not out.seconds:
+                out.seconds = tr - td
+            if kind is None:
+                # the run's first resolve spans the executable compile —
+                # folding it into the rate would inflate every later
+                # deadline by orders of magnitude (a cold-start hang then
+                # waits out minutes instead of the floor)
+                if rate_skip[0]:
+                    rate_skip[0] = False
+                else:
+                    obs = out.seconds / est[c]
+                    rate[0] = obs if not rate[0] else min(rate[0], obs)
+            spans[c] = (td - t0, tr - t0)
+            outcomes[c] = out
+            ctx.note_resolved(tasks[c], out)
+            ph = phase_of[c]
+            remaining[ph] -= 1
+            last_r[ph] = tr - t0
+            if verbose and remaining[ph] == 0:
+                ts = [t for t in tasks.values() if phase_of[t.coord] == ph]
+                print(f"[pp:{self.name}] phase {ph}: {len(ts)} block(s) "
+                      f"{_phase_desc(ctx, ts)} "
+                      f"{last_r[ph] - first_d[ph]:.2f}s "
+                      f"(dispatch→resolve envelope; phases overlap)",
+                      flush=True)
+            for s in succ[c]:
+                waiting[s] -= 1
+                if waiting[s] == 0:
+                    ready.push(s)
+
         while ready or inflight:
             while ready:
                 c = ready.pop()
                 self._record("dispatch", c)
                 td = time.time()
-                signal, out = self._dispatch(ctx, tasks[c])
-                inflight[c] = (signal, out, td)
                 first_d.setdefault(phase_of[c], td - t0)
+                try:
+                    signal, out = self._dispatch(ctx, tasks[c])
+                except _DISPATCH_ERRORS:
+                    retire(c, None, td, kind="dispatch")
+                    continue
+                inflight[c] = (signal, out, td)
+            if not inflight:
+                continue
             resolved = [c for c, (sig, _, _) in inflight.items()
-                        if self._is_resolved(c, sig)]
+                        if not ctx.is_hung(c) and self._is_resolved(c, sig)]
             if not resolved:
-                # nothing observably done: block the HOST on the oldest
-                # in-flight scalar (tiny device_get); the device queue keeps
-                # executing every already-dispatched block meanwhile
-                oldest = next(iter(inflight))
-                jax.block_until_ready(inflight[oldest][0])
-                resolved = [oldest]
+                resolved, expired = self._await_progress(ctx, inflight,
+                                                         deadline)
+                for c in expired:
+                    # watchdog timeout: cancel (drop the in-flight handles
+                    # — the device queue drains them in the background),
+                    # then re-dispatch on the next device group with the
+                    # SAME key: a slow-but-alive block re-resolves to
+                    # bitwise-identical numbers
+                    _, _, td = inflight.pop(c)
+                    if ctx.cur_attempt(c) < pol.max_retries:
+                        ctx.record_fault(c, "timeout", "redispatched")
+                        ctx.attempts[c] = ctx.cur_attempt(c) + 1
+                        td2 = time.time()
+                        try:
+                            sig2, out2 = self._dispatch(ctx, tasks[c])
+                            inflight[c] = (sig2, out2, td2)
+                        except _DISPATCH_ERRORS:
+                            retire(c, None, td2, kind="dispatch")
+                    else:
+                        retire(c, None, td, kind="timeout")
             for c in resolved:
                 signal, out, td = inflight.pop(c)
-                tr = time.time()
-                self._record("resolve", c)
-                out.seconds = tr - td
-                spans[c] = (td - t0, tr - t0)
-                outcomes[c] = out
-                ph = phase_of[c]
-                remaining[ph] -= 1
-                last_r[ph] = tr - t0
-                if verbose and remaining[ph] == 0:
-                    ts = [t for t in tasks.values() if phase_of[t.coord] == ph]
-                    print(f"[pp:{self.name}] phase {ph}: {len(ts)} block(s) "
-                          f"{_phase_desc(ctx, ts)} "
-                          f"{last_r[ph] - first_d[ph]:.2f}s "
-                          f"(dispatch→resolve envelope; phases overlap)",
-                          flush=True)
-                for s in succ[c]:
-                    waiting[s] -= 1
-                    if waiting[s] == 0:
-                        ready.push(s)
+                retire(c, out, td)
         # per-phase envelopes: first dispatch → last resolve. Phases
         # overlap, so these may sum to MORE than the wall time.
         phase_times = {ph: last_r[ph] - first_d[ph] for ph in first_d}
@@ -755,11 +1189,13 @@ class AsyncExecutor(Executor):
         """Dispatch one block's jitted chain without waiting for anything:
         inputs may still be computing (JAX chains the dataflow) and no
         output is synced. Returns (completion scalar, device outcome)."""
+        ctx.check_dispatch(task.coord)
         blk = ctx.part.block(task.i, task.j)
         s = ctx.shapes[task.phase]
         up, vp = ctx.priors(task)
         csr_r, csr_c, tr, tc, tv, tmask, up, vp = PP.pad_block_inputs(
-            blk, s, ctx.cfg.K, ctx.test_p, up, vp)
+            blk, s, ctx.cfg.K, ctx.test_p, up, vp,
+            poison_nan=ctx.should_poison(task.coord))
         n_obs = int(tmask.sum())
         key = ctx.keys[task.i, task.j]
         topo = self.topology
@@ -812,7 +1248,7 @@ class AsyncExecutor(Executor):
         ctx.V_posts[task.coord] = V_post
         out = BlockOutcome(U_post=U_post, V_post=V_post,
                            pred_mean=None, seconds=0.0,
-                           sq_err=sq, n_obs=n_obs)
+                           sq_err=sq, n_obs=n_obs, health=res.health)
         return sq, out
 
 
@@ -902,11 +1338,15 @@ class StreamingExecutor(Executor):
                  depth: int = 2, record_trace: bool = False,
                  topology: Optional[Topology] = None, comm: str = "gather"):
         super().__init__(record_trace=record_trace)
-        self.window = max(1, int(window))
+        if int(window) < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        if int(depth) < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        self.window = int(window)
         self.donate = donate
         self.max_waste = max_waste
         self.priority = priority
-        self.depth = max(1, int(depth))       # in-flight chunks before block
+        self.depth = int(depth)               # in-flight chunks before block
         self.topology = Topology.from_spec(topology) if topology is not None \
             else Topology(block=1, data=1)
         if comm != "gather":
@@ -966,7 +1406,9 @@ class StreamingExecutor(Executor):
         W = self.window
         sel = list(range(len(chunk))) + [len(chunk) - 1] * (W - len(chunk))
         host = [PP.pad_block_inputs_host(ctx.part.block(t.i, t.j), s,
-                                         ctx.test_p) for t in chunk]
+                                         ctx.test_p,
+                                         poison_nan=ctx.should_poison(t.coord))
+                for t in chunk]
 
         def stack(get):
             return np.stack([get(host[i]) for i in sel])
@@ -1039,9 +1481,10 @@ class StreamingExecutor(Executor):
                                   Lambda=res.V_post.Lambda[b, :nc])
             ctx.U_posts[t.coord] = U_post
             ctx.V_posts[t.coord] = V_post
-            outs[t.coord] = BlockOutcome(U_post=U_post, V_post=V_post,
-                                         pred_mean=None, seconds=0.0,
-                                         sq_err=sq[b], n_obs=st.n_obs[b])
+            outs[t.coord] = BlockOutcome(
+                U_post=U_post, V_post=V_post, pred_mean=None, seconds=0.0,
+                sq_err=sq[b], n_obs=st.n_obs[b],
+                health=(res.health[b] if res.health is not None else None))
         return sq, outs
 
     def _reset_run_state(self):
@@ -1084,14 +1527,72 @@ class StreamingExecutor(Executor):
                                   + sum(st is not None for st in staged))
             self.peak_window_blocks = max(self.peak_window_blocks, live)
 
+        est = _block_cost_estimates(ctx, tasks)
+        rate = [0.0]          # steady-state seconds per est cost unit
+        rate_skip = [True]    # first chunk's span includes compile
+        pol = ctx.policy
+
+        def chunk_deadline(ts_):
+            # same watchdog model as the async executor, over the chunk's
+            # total estimated cost (one executable runs all its members)
+            cost = sum(est[t.coord] for t in ts_)
+            return pol.timeout_floor_s + pol.timeout_slack * rate[0] * cost
+
+        def retire(t, out, td, tr_, per, kind=None):
+            c = t.coord
+            self._record("resolve", c)
+            out = _commit_guard(ctx, tasks[c], out, kind=kind)
+            if not out.seconds:
+                out.seconds = per
+            if per and not rate_skip[0] and kind is None:
+                obs = per / est[c]
+                rate[0] = obs if not rate[0] else min(rate[0], obs)
+            spans[c] = (td - t0, tr_ - t0)
+            outcomes[c] = out
+            ctx.note_resolved(tasks[c], out)
+            ph = phase_of[c]
+            remaining[ph] -= 1
+            last_r[ph] = tr_ - t0
+            if verbose and remaining[ph] == 0:
+                ts2 = [t2 for t2 in tasks.values()
+                       if phase_of[t2.coord] == ph]
+                print(f"[pp:{self.name}] phase {ph}: {len(ts2)} "
+                      f"block(s) {_phase_desc(ctx, ts2)} "
+                      f"{last_r[ph] - first_d[ph]:.2f}s "
+                      f"(dispatch→resolve envelope; phases overlap)",
+                      flush=True)
+            for s2 in succ[c]:
+                waiting[s2] -= 1
+                if waiting[s2] == 0:
+                    ready.push(s2)
+
+        def stage_next(g) -> Optional[_StagedChunk]:
+            """Pop + stage the group's next chunk, healing dispatch-failure
+            injections at chunk formation (the flagged block never joins
+            the window; the rest of the chunk is unaffected)."""
+            while ready:
+                chunk = self._pop_chunk(ctx, ready, tasks)
+                good = []
+                for t in chunk:
+                    try:
+                        ctx.check_dispatch(t.coord)
+                        good.append(t)
+                    except _DISPATCH_ERRORS:
+                        self._record("dispatch", t.coord)
+                        now = time.time()
+                        first_d.setdefault(phase_of[t.coord], now - t0)
+                        retire(t, None, now, time.time(), 0.0,
+                               kind="dispatch")
+                if good:
+                    return self._stage(ctx, good, shapes, group=g)
+            return None
+
         while (ready or any(st is not None for st in staged)
                or any(inflight)):
             dispatched = False
             for g in range(G):
                 if staged[g] is None and ready:
-                    staged[g] = self._stage(
-                        ctx, self._pop_chunk(ctx, ready, tasks), shapes,
-                        group=g)
+                    staged[g] = stage_next(g)
                     note_peak()
                 if staged[g] is not None and len(inflight[g]) < self.depth:
                     ch, staged[g] = staged[g], None
@@ -1105,25 +1606,46 @@ class StreamingExecutor(Executor):
                     # per-stream double-buffered prefetch: the group's NEXT
                     # chunk's H2D transfer overlaps this chunk's compute
                     if ready:
-                        staged[g] = self._stage(
-                            ctx, self._pop_chunk(ctx, ready, tasks), shapes,
-                            group=g)
+                        staged[g] = stage_next(g)
                     note_peak()
                     dispatched = True
             if dispatched:
                 continue
+            if not any(inflight):
+                continue
             # every group's window is full (or nothing stageable): retire
             idxs = [(g, i) for g in range(G)
                     for i, (ts_, sig, _, _) in enumerate(inflight[g])
-                    if self._is_resolved(ts_[0].coord, sig)]
+                    if not any(ctx.is_hung(t.coord) for t in ts_)
+                    and self._is_resolved(ts_[0].coord, sig)]
             if not idxs:
-                assert any(inflight), "streaming scheduler stalled"
-                g0, i0 = min(
-                    ((g, i) for g in range(G)
-                     for i in range(len(inflight[g]))),
-                    key=lambda gi: inflight[gi[0]][gi[1]][3])
-                jax.block_until_ready(inflight[g0][i0][1])
-                idxs = [(g0, i0)]
+                idxs, expired = self._await_chunks(ctx, inflight,
+                                                   chunk_deadline)
+                for g, i in sorted(expired, reverse=True):
+                    # watchdog timeout: drop the chunk's in-flight handles
+                    # and re-stage it on the NEXT device group with the
+                    # same keys — a slow-but-alive chunk re-resolves to
+                    # bitwise-identical numbers; exhausted budgets
+                    # degrade/raise per policy
+                    chunk_tasks, sig, outs, td = inflight[g].pop(i)
+                    if all(ctx.cur_attempt(t.coord) < pol.max_retries
+                           for t in chunk_tasks):
+                        for t in chunk_tasks:
+                            ctx.record_fault(t.coord, "timeout",
+                                             "redispatched")
+                            ctx.attempts[t.coord] = \
+                                ctx.cur_attempt(t.coord) + 1
+                        g2 = (g + 1) % G
+                        st2 = self._stage(ctx, chunk_tasks, shapes,
+                                          group=g2)
+                        td2 = time.time()
+                        sig2, outs2 = self._dispatch(ctx, st2)
+                        inflight[g2].append((chunk_tasks, sig2, outs2, td2))
+                        note_peak()
+                    else:
+                        now = time.time()
+                        for t in chunk_tasks:
+                            retire(t, None, td, now, 0.0, kind="timeout")
             for g, i in sorted(idxs, reverse=True):
                 chunk_tasks, sig, outs, td = inflight[g].pop(i)
                 tr_ = time.time()
@@ -1131,29 +1653,42 @@ class StreamingExecutor(Executor):
                 # across members (mirrors StackedExecutor's bucket split)
                 per = (tr_ - td) / len(chunk_tasks)
                 for t in chunk_tasks:
-                    c = t.coord
-                    self._record("resolve", c)
-                    out = outs[c]
-                    out.seconds = per
-                    spans[c] = (td - t0, tr_ - t0)
-                    outcomes[c] = out
-                    ph = phase_of[c]
-                    remaining[ph] -= 1
-                    last_r[ph] = tr_ - t0
-                    if verbose and remaining[ph] == 0:
-                        ts2 = [t2 for t2 in tasks.values()
-                               if phase_of[t2.coord] == ph]
-                        print(f"[pp:{self.name}] phase {ph}: {len(ts2)} "
-                              f"block(s) {_phase_desc(ctx, ts2)} "
-                              f"{last_r[ph] - first_d[ph]:.2f}s "
-                              f"(dispatch→resolve envelope; phases overlap)",
-                              flush=True)
-                    for s2 in succ[c]:
-                        waiting[s2] -= 1
-                        if waiting[s2] == 0:
-                            ready.push(s2)
+                    retire(t, outs[t.coord], td, tr_, per)
+                # first chunk's span includes the window executable's
+                # compile — excluded from the rate (see AsyncExecutor)
+                rate_skip[0] = False
         phase_times = {ph: last_r[ph] - first_d[ph] for ph in first_d}
         return outcomes, phase_times, spans
+
+    def _await_chunks(self, ctx, inflight, deadline):
+        """Streaming twin of ``AsyncExecutor._await_progress``: adaptive
+        poll over every group's in-flight chunks until one resolves or
+        exceeds its watchdog deadline; returns (resolved, expired) (g, i)
+        index pairs. ``watchdog=False`` restores the legacy
+        block-on-oldest-chunk fallback."""
+        G = len(inflight)
+        if not ctx.policy.watchdog:
+            g0, i0 = min(
+                ((g, i) for g in range(G) for i in range(len(inflight[g]))),
+                key=lambda gi: inflight[gi[0]][gi[1]][3])
+            jax.block_until_ready(inflight[g0][i0][1])
+            return [(g0, i0)], []
+        sleep = 5e-5
+        while True:
+            idxs = [(g, i) for g in range(G)
+                    for i, (ts_, sig, _, _) in enumerate(inflight[g])
+                    if not any(ctx.is_hung(t.coord) for t in ts_)
+                    and self._is_resolved(ts_[0].coord, sig)]
+            if idxs:
+                return idxs, []
+            now = time.time()
+            expired = [(g, i) for g in range(G)
+                       for i, (ts_, _, _, td) in enumerate(inflight[g])
+                       if now - td > deadline(ts_)]
+            if expired:
+                return [], expired
+            time.sleep(sleep)
+            sleep = min(sleep * 2, 2e-3)
 
 
 EXECUTORS: Dict[str, type] = {
@@ -1191,6 +1726,8 @@ def make_executor(spec, distributed_mesh=None, block_mesh=None,
                     f"construct the executor with it yourself or pass the "
                     f"executor by name")
         return spec
+    if window is not None and int(window) < 1:
+        raise ValueError(f"window must be >= 1, got {window}")
     if distributed_mesh is not None:
         if topology is not None:
             raise ValueError("pass distributed_mesh OR topology, not both")
@@ -1220,38 +1757,120 @@ def make_executor(spec, distributed_mesh=None, block_mesh=None,
     return factory()
 
 
+def _run_meta(key, part: Partition, cfg: BMF.BMFConfig) -> Dict:
+    """The fields that determine a PP run's numbers — written to the
+    checkpoint's meta.json and validated on resume. Deliberately excludes
+    the executor/topology: block chains are executor-independent, so a run
+    checkpointed on 8 devices legitimately resumes on 1 (the
+    fault-tolerance story) and still finishes bitwise-identical."""
+    return {
+        "format": 1,
+        "I": part.I, "J": part.J, "K": cfg.K,
+        "n_samples": cfg.n_samples, "burnin": cfg.burnin,
+        "phase_bc_samples": cfg.phase_bc_samples,
+        "key": np.asarray(jax.random.key_data(key)).tolist(),
+    }
+
+
+def _restore_resume(ctx: PhaseContext, resume_from, meta: Dict):
+    """Load a checkpoint directory's resolved blocks into the context:
+    posteriors into the device store (successors read them as priors) and
+    finished BlockOutcomes into ``ctx.resumed`` (their tasks are pruned
+    from the executed graph). Validates the directory's meta against this
+    run first — a mismatch is a usage error, named after resume_from."""
+    from repro.checkpoint.ckpt import PPCheckpoint
+    saved = PPCheckpoint.read_meta(resume_from)
+    for k, v in meta.items():
+        if saved.get(k) != v:
+            raise ValueError(
+                f"resume_from={str(resume_from)!r} was written by a "
+                f"different run: {k} is {saved.get(k)!r} there but {v!r} "
+                f"here — resume requires identical grid, K, chain config "
+                f"and PRNG key")
+    for (i, j), d in PPCheckpoint.load_blocks(resume_from).items():
+        if not (0 <= i < ctx.part.I and 0 <= j < ctx.part.J):
+            raise ValueError(
+                f"resume_from={str(resume_from)!r} holds block ({i}, {j}) "
+                f"outside this run's {ctx.part.I}x{ctx.part.J} grid")
+        U_post = RowGaussians(eta=jnp.asarray(d["U_eta"]),
+                              Lambda=jnp.asarray(d["U_Lambda"]))
+        V_post = RowGaussians(eta=jnp.asarray(d["V_eta"]),
+                              Lambda=jnp.asarray(d["V_Lambda"]))
+        ctx.U_posts[(i, j)] = U_post
+        ctx.V_posts[(i, j)] = V_post
+        ctx.resumed[(i, j)] = BlockOutcome(
+            U_post=U_post, V_post=V_post, pred_mean=None, seconds=0.0,
+            sq_err=jnp.asarray(float(d["sq"])), n_obs=int(d["n_obs"]),
+            health=jnp.asarray(True))
+
+
 def run_phase_graph(key, part: Partition, cfg: BMF.BMFConfig, test: COO,
-                    executor: Executor, verbose: bool = False) -> "PP.PPResult":
+                    executor: Executor, verbose: bool = False,
+                    policy: Optional[FaultPolicy] = None,
+                    fault_plan: Optional[FaultPlan] = None,
+                    checkpoint_dir=None, ckpt_every: int = 1,
+                    resume_from=None) -> "PP.PPResult":
     """Execute the PP phase graph with ``executor`` and aggregate — the
-    engine behind ``pp.run_pp``."""
+    engine behind ``pp.run_pp``.
+
+    Fault tolerance: every resolved block passes the chain-health guard
+    (``_commit_guard``) under ``policy`` before its posterior reaches any
+    successor; ``fault_plan`` is the deterministic injection seam the
+    chaos tests drive. ``checkpoint_dir`` persists each resolved block's
+    posterior through ``checkpoint.ckpt.PPCheckpoint`` (flushed even when
+    a block fault raises), and ``resume_from`` restores such a directory:
+    restored blocks are pruned from the graph and the finished run is
+    bitwise-identical to an uninterrupted one (float32 posteriors
+    round-trip exactly; pending blocks re-run under their original keys).
+    """
     I, J = part.I, part.J
     t_start = time.time()
     test_p = apply_permutation(test, part.row_perm, part.col_perm)
     keys = jax.random.split(key, I * J).reshape(I, J)
     shapes = PP.BlockShapes.per_phase(part, test_p)
     ctx = PhaseContext(part=part, cfg=cfg, test_p=test_p, keys=keys,
-                       shapes=shapes)
+                       shapes=shapes,
+                       policy=policy if policy is not None else FaultPolicy(),
+                       fault_plan=fault_plan)
+    meta = _run_meta(key, part, cfg)
+    if resume_from is not None:
+        _restore_resume(ctx, resume_from, meta)
+        if verbose and ctx.resumed:
+            print(f"[pp] resumed {len(ctx.resumed)} block(s) from "
+                  f"{resume_from}", flush=True)
+    if checkpoint_dir is not None:
+        from repro.checkpoint.ckpt import PPCheckpoint
+        ctx.ckpt = PPCheckpoint(checkpoint_dir, every=ckpt_every)
+        ctx.ckpt.write_meta(meta)
 
-    graph = build_phase_graph(part)
-    outcomes, phase_times, spans = executor.run_graph(ctx, graph,
-                                                      verbose=verbose)
+    full_graph = build_phase_graph(part)
+    # a resumed block's task is pruned: the executor never re-runs it, and
+    # _dep_state counts only intra-graph deps toward readiness
+    graph = [(ph, pending) for ph, tasks in full_graph
+             if (pending := [t for t in tasks if t.coord not in ctx.resumed])]
+    if graph:
+        try:
+            outcomes, phase_times, spans = executor.run_graph(
+                ctx, graph, verbose=verbose)
+        finally:
+            # a BlockFaultError (or any crash) still lands the buffered
+            # blocks on disk — that is what makes the directory resumable
+            if ctx.ckpt is not None:
+                ctx.ckpt.flush()
+    else:
+        outcomes, phase_times, spans = {}, {}, {}
+    if ctx.ckpt is not None:
+        ctx.ckpt.flush()
+    outcomes.update(ctx.resumed)
 
     sq_err, n_test = 0.0, 0
     per_block_rmse = np.zeros((I, J))
     block_times: Dict[Coord, float] = {}
-    for _, tasks in graph:
+    for _, tasks in full_graph:
         for t in tasks:
             o = outcomes[t.coord]
             block_times[t.coord] = o.seconds
-            if o.sq_err is not None:
-                # device-resident path: only the tiny scalar crosses to host
-                n, sq = o.n_obs, float(o.sq_err)
-            else:
-                blk = part.block(t.i, t.j)
-                _, _, tv = PP._block_test(test_p, blk)
-                n = len(tv)
-                sq = float(np.sum((np.asarray(o.pred_mean[:n]) - tv) ** 2)) \
-                    if n else 0.0
+            n, sq = _host_sq(ctx, t, o)
             if n:
                 sq_err += sq
                 n_test += n
@@ -1273,4 +1892,5 @@ def run_phase_graph(key, part: Partition, cfg: BMF.BMFConfig, test: COO,
                        wall_time_s=time.time() - t_start,
                        phase_times_s=phase_times, n_test=n_test,
                        block_times_s=block_times, executor=executor.name,
-                       block_spans_s=spans)
+                       block_spans_s=spans, faults=list(ctx.faults),
+                       resumed_blocks=len(ctx.resumed))

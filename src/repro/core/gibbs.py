@@ -39,6 +39,23 @@ class GibbsResult(NamedTuple):
     acc: GibbsAccumulators
     U_post: RowGaussians       # summarized per-row posteriors
     V_post: RowGaussians
+    # chain-health scalar (bool; (B,) under the stacked paths): every
+    # finiteness-relevant output — final factors, summarized posterior
+    # natural params, and the predictive sums — reduced with jnp.all ∘
+    # isfinite. One O(N·K²) reduction per CHAIN (vs n_samples sweeps of
+    # O(nnz·K²) work), so the guard is ~free; a NaN'd Cholesky or a
+    # diverged sweep anywhere in the chain flips it to False. None only on
+    # legacy construction sites that predate the guard.
+    health: Optional[jnp.ndarray] = None
+
+
+def chain_health(*trees) -> jnp.ndarray:
+    """All-finite reduction over arbitrary pytrees -> bool scalar (batched
+    leaves reduce over their trailing axes only if the caller vmaps)."""
+    ok = jnp.ones((), jnp.bool_)
+    for leaf in jax.tree_util.tree_leaves(trees):
+        ok = ok & jnp.all(jnp.isfinite(leaf))
+    return ok
 
 
 def _summarize(sum_, outer, cnt, ridge=1e-4):
@@ -322,7 +339,9 @@ def _run_gibbs_impl(key, csr_rows, csr_cols, test_rows, test_cols, cfg,
     cnt = jnp.maximum(acc.pred_cnt, 1.0)
     U_post = _summarize(acc.U_sum, acc.U_outer, cnt)
     V_post = _summarize(acc.V_sum, acc.V_outer, cnt)
-    return GibbsResult(U=U, V=V, acc=acc, U_post=U_post, V_post=V_post)
+    health = chain_health(U, V, U_post, V_post, acc.pred_sum)
+    return GibbsResult(U=U, V=V, acc=acc, U_post=U_post, V_post=V_post,
+                       health=health)
 
 
 def rmse_from_acc(acc: GibbsAccumulators, test_vals: jnp.ndarray) -> jnp.ndarray:

@@ -59,6 +59,18 @@ class PPResult:
     # splits (stacked/sharded — prefer phase_times_s there).
     block_spans_s: Dict[Tuple[int, int], Tuple[float, float]] = \
         field(default_factory=dict)
+    # fault-tolerance ledger (engine.FaultRecord entries): every health-
+    # guard trip, watchdog timeout, dispatch failure — and what the engine
+    # did about it (retried / degraded / raised). Empty on a clean run;
+    # "degrade" outcomes are ONLY trustworthy together with this record,
+    # which is why it rides on the result instead of a log line.
+    faults: list = field(default_factory=list)
+    # blocks restored from a resume_from checkpoint (not re-run)
+    resumed_blocks: int = 0
+
+    @property
+    def n_retries(self) -> int:
+        return sum(1 for f in self.faults if f.action == "retried")
 
     def _dep_graph(self):
         """Canonical PP dependency structure for this run's grid."""
@@ -224,7 +236,7 @@ def _pad_prior(prior: Optional[RowGaussians], n: int, K: int):
 
 
 def pad_block_inputs_host(block: Block, shapes: BlockShapes,
-                          test: Optional[COO]):
+                          test: Optional[COO], poison_nan: bool = False):
     """Host-side (numpy) padding of one block's CSR planes and test
     entries to a shape bucket — the transferable part of
     ``pad_block_inputs``, kept in numpy so the streaming executor can
@@ -242,6 +254,18 @@ def pad_block_inputs_host(block: Block, shapes: BlockShapes,
                                  max_nnz=shapes.m_cols,
                                  n_rows_pad=shapes.n_cols,
                                  n_cols_pad=shapes.n_rows, as_numpy=True)
+    if poison_nan:
+        # deterministic fault-injection seam (engine.FaultPlan): NaN-fill
+        # the rating planes so the chain's very first sufficient-stats
+        # einsum goes non-finite and the in-chain health guard trips — the
+        # same failure surface as a real diverged/NaN'd chain, via the one
+        # padding path every executor shares.
+        csr_rows = PaddedCSR(idx=csr_rows.idx,
+                             val=np.full_like(csr_rows.val, np.nan),
+                             mask=csr_rows.mask, n_cols=csr_rows.n_cols)
+        csr_cols = PaddedCSR(idx=csr_cols.idx,
+                             val=np.full_like(csr_cols.val, np.nan),
+                             mask=csr_cols.mask, n_cols=csr_cols.n_cols)
     if test is not None:
         tr, tc, tv_raw = _block_test(test, block)
     else:
@@ -265,7 +289,8 @@ def pad_block_inputs_host(block: Block, shapes: BlockShapes,
 def pad_block_inputs(block: Block, shapes: BlockShapes, K: int,
                      test: Optional[COO],
                      U_prior: Optional[RowGaussians],
-                     V_prior: Optional[RowGaussians]):
+                     V_prior: Optional[RowGaussians],
+                     poison_nan: bool = False):
     """Pad one block's CSR planes, priors, and test entries to its phase
     shape bucket — the single source of truth for bucketed padding.
     ``run_block`` (serial executor), ``engine._task_leaves`` (stacked/
@@ -280,7 +305,7 @@ def pad_block_inputs(block: Block, shapes: BlockShapes, K: int,
     engine compute each block's squared error as a tiny on-device scalar
     instead of pulling the (n_test,) prediction vector to the host."""
     csr_rows_h, csr_cols_h, tr, tc, tv, tmask = pad_block_inputs_host(
-        block, shapes, test)
+        block, shapes, test, poison_nan=poison_nan)
     csr_rows = PaddedCSR(idx=jnp.asarray(csr_rows_h.idx),
                          val=jnp.asarray(csr_rows_h.val),
                          mask=jnp.asarray(csr_rows_h.mask),
@@ -299,11 +324,19 @@ def run_block(key, block: Block, cfg: BMF.BMFConfig,
               U_prior: Optional[RowGaussians],
               V_prior: Optional[RowGaussians],
               distributed_mesh=None,
-              shapes: Optional[BlockShapes] = None) -> GIBBS.GibbsResult:
+              shapes: Optional[BlockShapes] = None,
+              poison_nan: bool = False) -> GIBBS.GibbsResult:
     """Gibbs on one block (optionally internally distributed)."""
     if shapes is None:
         csr_rows = coo_to_padded_csr(block.coo)
         csr_cols = coo_to_padded_csr(block.coo.transpose())
+        if poison_nan:
+            csr_rows = PaddedCSR(idx=csr_rows.idx,
+                                 val=jnp.full_like(csr_rows.val, jnp.nan),
+                                 mask=csr_rows.mask, n_cols=csr_rows.n_cols)
+            csr_cols = PaddedCSR(idx=csr_cols.idx,
+                                 val=jnp.full_like(csr_cols.val, jnp.nan),
+                                 mask=csr_cols.mask, n_cols=csr_cols.n_cols)
         if test is not None:
             tr, tc, _ = _block_test(test, block)
         else:
@@ -311,7 +344,8 @@ def run_block(key, block: Block, cfg: BMF.BMFConfig,
             tc = np.zeros((1,), np.int32)
     else:
         csr_rows, csr_cols, tr, tc, _, _, U_prior, V_prior = \
-            pad_block_inputs(block, shapes, cfg.K, test, U_prior, V_prior)
+            pad_block_inputs(block, shapes, cfg.K, test, U_prior, V_prior,
+                             poison_nan=poison_nan)
     if distributed_mesh is not None:
         from repro.core import distributed as DIST
         return DIST.run_gibbs_distributed(
@@ -325,7 +359,11 @@ def run_block(key, block: Block, cfg: BMF.BMFConfig,
 def run_pp(key, part: Partition, cfg: BMF.BMFConfig, test: COO,
            distributed_mesh=None, verbose: bool = False,
            executor="serial", block_mesh=None,
-           window: Optional[int] = None, topology=None) -> PPResult:
+           window: Optional[int] = None, topology=None,
+           on_fault: str = "raise", max_retries: int = 2,
+           fault_policy=None, fault_plan=None,
+           checkpoint_dir=None, ckpt_every: int = 1,
+           resume_from=None) -> PPResult:
     """Full three-phase Posterior Propagation over the partition.
 
     Thin wrapper over the phase-graph engine (core.engine): the run is an
@@ -355,12 +393,46 @@ def run_pp(key, part: Partition, cfg: BMF.BMFConfig, test: COO,
     window: streaming executor's window size W (blocks per chunk); ignored
       by the other executors.
     verbose: per-phase progress lines (block count, shape buckets, wall time).
+
+    Fault tolerance (core/README.md "Fault tolerance"):
+    on_fault: what to do with a block whose chain stays unhealthy after
+      ``max_retries`` re-runs — "raise" (engine.BlockFaultError) or
+      "degrade" (the block's posterior := its propagated prior, so it
+      cancels exactly in the divide-away aggregation; its test entries are
+      dropped from the RMSE; recorded in ``PPResult.faults``).
+    max_retries: bounded re-runs of an unhealthy block, each with a
+      ``fold_in``-resplit PRNG key and a jitter-inflated prior.
+    fault_policy: a full ``engine.FaultPolicy`` (watchdog deadlines, RMSE
+      divergence threshold, retry jitter); overrides on_fault/max_retries.
+    fault_plan: deterministic test-only fault injection
+      (``engine.FaultPlan``): NaN'd chains / hung dispatches / failed
+      dispatches by coord and attempt.
+    checkpoint_dir: persist each resolved block's posteriors through
+      ``checkpoint.ckpt.PPCheckpoint`` (every ``ckpt_every`` resolves).
+    resume_from: a checkpoint directory from an earlier (interrupted) run
+      with the same key/grid/K/topology: resolved blocks are restored, the
+      readiness counters rebuilt, and the finished run is bitwise
+      identical to an uninterrupted one.
     """
     from repro.core import engine as ENG
+    if int(max_retries) < 0:
+        raise ValueError(f"max_retries must be >= 0, got {max_retries}")
+    if on_fault not in ("raise", "degrade"):
+        raise ValueError(f"on_fault must be 'raise' or 'degrade', "
+                         f"got {on_fault!r}")
+    if int(ckpt_every) < 1:
+        raise ValueError(f"ckpt_every must be >= 1, got {ckpt_every}")
+    if fault_policy is None:
+        fault_policy = ENG.FaultPolicy(on_fault=on_fault,
+                                       max_retries=int(max_retries))
     ex = ENG.make_executor(executor, distributed_mesh=distributed_mesh,
                            block_mesh=block_mesh, window=window,
                            topology=topology)
-    return ENG.run_phase_graph(key, part, cfg, test, ex, verbose=verbose)
+    return ENG.run_phase_graph(key, part, cfg, test, ex, verbose=verbose,
+                               policy=fault_policy, fault_plan=fault_plan,
+                               checkpoint_dir=checkpoint_dir,
+                               ckpt_every=int(ckpt_every),
+                               resume_from=resume_from)
 
 
 @partial(jax.jit, static_argnames=("axis",))

@@ -25,6 +25,11 @@ each block's Gibbs sweep is sharded over the D devices of its group —
 the paper's combined system (block-parallel PP x intra-block distributed
 BMF). Composes with --executor sharded (2-D shard_map), async (group
 streams), streaming (one donated window per group), and serial (B=1).
+
+Fault tolerance: --on-fault/--max-retries set the engine's chain-health
+policy (core/README.md "Fault tolerance"); --ckpt-dir persists each
+resolved block's posteriors so a killed run restarts with --resume and
+finishes bitwise-identical to an uninterrupted one.
 """
 from __future__ import annotations
 
@@ -65,8 +70,31 @@ def main():
                          "core.topology mesh)")
     ap.add_argument("--phase-bc-samples", type=int, default=0)
     ap.add_argument("--ckpt", default="")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="block-level phase-graph checkpoint directory: "
+                         "each resolved block's posteriors persist there "
+                         "(atomic per-block files), making the run "
+                         "resumable with --resume")
+    ap.add_argument("--ckpt-every", type=int, default=1,
+                    help="flush block checkpoints every N resolves "
+                         "(a kill loses at most N-1 blocks)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from --ckpt-dir: restored blocks are "
+                         "skipped and the finished run is bitwise-identical "
+                         "to an uninterrupted one")
+    ap.add_argument("--on-fault", default="raise",
+                    choices=["raise", "degrade"],
+                    help="after --max-retries failed re-runs of a faulty "
+                         "block: raise, or degrade it to its propagated "
+                         "prior (recorded in the fault ledger)")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="bounded re-runs of an unhealthy block "
+                         "(re-split key + jittered prior)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.resume and not args.ckpt_dir:
+        raise SystemExit("--resume needs --ckpt-dir (the directory the "
+                         "interrupted run checkpointed into)")
 
     coo, p = SYN.generate(args.dataset, seed=args.seed)
     train, test = train_test_split(coo, 0.1, seed=args.seed + 1)
@@ -107,10 +135,21 @@ def main():
     res = PP.run_pp(jax.random.key(args.seed), part, cfg, test,
                     distributed_mesh=mesh, verbose=True,
                     executor=args.executor, window=args.window or None,
-                    topology=topology)
+                    topology=topology, on_fault=args.on_fault,
+                    max_retries=args.max_retries,
+                    checkpoint_dir=args.ckpt_dir or None,
+                    ckpt_every=args.ckpt_every,
+                    resume_from=(args.ckpt_dir if args.resume else None))
     print(f"executor={res.executor}  RMSE={res.rmse:.4f}  "
           f"wall={res.wall_time_s:.1f}s  "
           f"phases={ {k: round(v, 2) for k, v in res.phase_times_s.items()} }")
+    if res.resumed_blocks:
+        print(f"resumed {res.resumed_blocks} block(s) from {args.ckpt_dir}")
+    if res.faults:
+        print(f"faults: {len(res.faults)} event(s), "
+              f"{res.n_retries} retr{'y' if res.n_retries == 1 else 'ies'} — "
+              + "; ".join(f"{f.kind}@{f.coord}:{f.action}"
+                          for f in res.faults))
     print(f"modeled 16-worker wall: {res.modeled_parallel_s(16):.1f}s")
     if res.block_spans_s:
         print(f"measured critical path: {res.critical_path_s():.1f}s "

@@ -1,0 +1,438 @@
+"""Chaos battery for the fault-tolerant PP engine.
+
+Drives every registered executor through the deterministic injection seam
+(``engine.FaultPlan``): NaN-poisoned chains, hung dispatches, failed
+dispatches — and asserts the three recovery contracts:
+
+  * heal:    a retried block re-runs through the shared single-block
+             runner, so the healed run's numbers match the serial
+             executor's healed run (executor-independent retries);
+  * degrade: an unrecoverable block falls back to its propagated prior,
+             which cancels exactly in the divide-away aggregation — the
+             result stays finite and the fault is in the ledger;
+  * resume:  a run killed mid-graph restarts from its block checkpoints
+             and finishes bitwise-identical to an uninterrupted one.
+
+Mirrors tests/test_executor_conformance.py: new executors registered in
+``engine.EXECUTORS`` auto-enroll here too.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bmf as BMF
+from repro.core import engine as ENG
+from repro.core import pp as PP
+from repro.core.partition import partition
+from repro.core.posterior import RowGaussians
+from repro.data import synthetic as SYN
+from repro.data.sparse import apply_permutation, train_test_split
+
+EXECUTOR_NAMES = sorted(ENG.EXECUTORS)
+# executors with a poll loop (completion-detection seam) — the only ones a
+# hang can affect, and the ones the watchdog polices
+OVERLAPPED = [n for n in EXECUTOR_NAMES
+              if hasattr(ENG.EXECUTORS[n], "_is_resolved")]
+
+# same atol the conformance battery uses for cross-executor parity: the
+# stacked/sharded paths batch the fp reductions
+PARITY_ATOL = 5e-5
+
+
+def _make(name, **kw):
+    if name == "sharded":
+        from repro.core.topology import Topology
+        return ENG.ShardedExecutor(Topology(block=1, data=1), **kw)
+    if name == "streaming":
+        return ENG.StreamingExecutor(window=2, **kw)
+    return ENG.EXECUTORS[name](**kw)
+
+
+@pytest.fixture(scope="module")
+def conf_run():
+    coo, p = SYN.generate("mini", seed=13)
+    train, test = train_test_split(coo, 0.15, seed=14)
+    cfg = BMF.BMFConfig(K=p.K, n_samples=5, burnin=1)
+    part = partition(train, 3, 3)          # covers all four phase tags
+    key = jax.random.key(5)
+    ref = PP.run_pp(key, part, cfg, test, executor="serial")
+    return part, cfg, test, key, ref
+
+
+@pytest.fixture(scope="module")
+def serial_healed(conf_run):
+    """The serial executor's healed run under the canonical NaN plan — the
+    parity reference every other executor's healed run must match."""
+    part, cfg, test, key, _ = conf_run
+    plan = ENG.FaultPlan(nan_at={(1, 1): 1})
+    return PP.run_pp(key, part, cfg, test, executor="serial",
+                     fault_plan=plan)
+
+
+def _assert_trace_dep_safe(trace, part):
+    graph = {t.coord: t for _, ts in ENG.build_phase_graph(part) for t in ts}
+    dispatched, resolved = set(), set()
+    for ev, c in trace:
+        if ev == "dispatch":
+            assert set(graph[c].deps) <= resolved, \
+                f"{c} dispatched before deps {graph[c].deps} resolved"
+            assert c not in dispatched, f"{c} dispatched twice"
+            dispatched.add(c)
+        else:
+            assert ev == "resolve" and c in dispatched
+            resolved.add(c)
+    assert resolved == set(graph)
+    assert len(trace) == 2 * len(graph)
+
+
+# ---------------------------------------------------------------------------
+# NaN-poisoned chains: retry heals, degrade stays finite, raise raises
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", EXECUTOR_NAMES)
+def test_nan_injection_retry_heals_with_serial_parity(conf_run,
+                                                      serial_healed, name):
+    """A NaN'd chain is caught by the health guard and retried through the
+    shared runner — so the healed run matches serial's healed run to the
+    usual batched-fp tolerance, whatever executor hit the fault."""
+    part, cfg, test, key, _ = conf_run
+    plan = ENG.FaultPlan(nan_at={(1, 1): 1})
+    ex = _make(name, record_trace=True)
+    res = PP.run_pp(key, part, cfg, test, executor=ex, fault_plan=plan)
+    assert res.n_retries == 1
+    assert [(f.kind, f.action) for f in res.faults] == \
+        [("nonfinite", "retried")]
+    assert np.isfinite(res.rmse)
+    assert abs(res.rmse - serial_healed.rmse) < PARITY_ATOL
+    # retries run through ONE shared single-block runner, so the healed
+    # block's chain matches serial's healed chain up to the batched-fp
+    # differences its PRIORS inherit from the executor's upstream blocks
+    assert abs(res.per_block_rmse[1, 1]
+               - serial_healed.per_block_rmse[1, 1]) < PARITY_ATOL
+    # trace contract survives the retry: one dispatch + one resolve per
+    # block, dependency-safe order
+    _assert_trace_dep_safe(ex.trace, part)
+
+
+@pytest.mark.parametrize("name", EXECUTOR_NAMES)
+def test_nan_degrade_yields_finite_result(conf_run, name):
+    """With the retry budget exhausted, 'degrade' swaps the propagated
+    prior in for the poisoned posterior BEFORE it reaches any successor or
+    the aggregation — everything downstream stays finite and the fault is
+    on the ledger."""
+    part, cfg, test, key, ref = conf_run
+    plan = ENG.FaultPlan(nan_at={(1, 1): 99})   # poison survives retries
+    res = PP.run_pp(key, part, cfg, test, executor=_make(name),
+                    fault_plan=plan, on_fault="degrade", max_retries=1)
+    assert np.isfinite(res.rmse)
+    assert np.isfinite(np.asarray(res.U_agg.eta)).all()
+    assert np.isfinite(np.asarray(res.U_agg.Lambda)).all()
+    assert np.isfinite(np.asarray(res.V_agg.eta)).all()
+    assert np.isfinite(np.asarray(res.V_agg.Lambda)).all()
+    assert [f.action for f in res.faults] == ["retried", "degraded"]
+    assert all(f.coord == (1, 1) for f in res.faults)
+    # the degraded block's test entries leave the RMSE, they don't poison it
+    assert res.n_test < ref.n_test
+    assert res.per_block_rmse[1, 1] == 0.0
+
+
+def test_nan_on_fault_raise_raises(conf_run):
+    part, cfg, test, key, _ = conf_run
+    plan = ENG.FaultPlan(nan_at={(1, 1): 99})
+    with pytest.raises(ENG.BlockFaultError, match=r"\(1, 1\).*nonfinite"):
+        PP.run_pp(key, part, cfg, test, executor="serial", fault_plan=plan,
+                  on_fault="raise", max_retries=1)
+
+
+def test_nan_phase_a_degrades_to_hyperprior(conf_run):
+    """Phase (0,0) has no propagated prior — degrade substitutes the
+    neutral N(0, I) rows and every downstream block still runs."""
+    part, cfg, test, key, _ = conf_run
+    plan = ENG.FaultPlan(nan_at={(0, 0): 99})
+    res = PP.run_pp(key, part, cfg, test, executor="serial",
+                    fault_plan=plan, on_fault="degrade", max_retries=0)
+    assert np.isfinite(res.rmse)
+    assert np.isfinite(np.asarray(res.U_agg.eta)).all()
+
+
+# ---------------------------------------------------------------------------
+# dispatch failures: healed at every executor's dispatch site
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", EXECUTOR_NAMES)
+def test_dispatch_failure_heals(conf_run, name):
+    part, cfg, test, key, _ = conf_run
+    plan = ENG.FaultPlan(fail_dispatch_at={(0, 1): 1, (2, 2): 2})
+    ref = PP.run_pp(key, part, cfg, test, executor="serial",
+                    fault_plan=plan)
+    ex = _make(name, record_trace=True)
+    res = PP.run_pp(key, part, cfg, test, executor=ex, fault_plan=plan)
+    assert res.n_retries == 3            # 1 for (0,1) + 2 for (2,2)
+    assert {f.kind for f in res.faults} == {"dispatch"}
+    assert abs(res.rmse - ref.rmse) < PARITY_ATOL
+    _assert_trace_dep_safe(ex.trace, part)
+
+
+def test_dispatch_failure_exhausted_raises(conf_run):
+    part, cfg, test, key, _ = conf_run
+    plan = ENG.FaultPlan(fail_dispatch_at={(1, 0): 99})
+    with pytest.raises(ENG.BlockFaultError, match=r"\(1, 0\).*dispatch"):
+        PP.run_pp(key, part, cfg, test, executor="serial", fault_plan=plan,
+                  max_retries=1)
+
+
+# ---------------------------------------------------------------------------
+# hangs: the watchdog recovers within its deadline (satellite: the legacy
+# block-on-oldest fallback would spin forever here)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(OVERLAPPED))
+def test_hang_recovered_by_watchdog(conf_run, name):
+    """A dispatch whose completion never fires is re-dispatched after its
+    deadline — with the same key, so the recovered run is bitwise-equal to
+    a clean run of the same executor."""
+    part, cfg, test, key, _ = conf_run
+    clean = PP.run_pp(key, part, cfg, test, executor=_make(name))
+    pol = ENG.FaultPolicy(timeout_floor_s=0.5, timeout_slack=0.0)
+    res = PP.run_pp(key, part, cfg, test, executor=_make(name),
+                    fault_plan=ENG.FaultPlan(hang_at={(1, 1): 1}),
+                    fault_policy=pol)
+    # streaming's timeout domain is the chunk, so chunk-mates of the hung
+    # block may carry redispatch records too — but nothing else happens
+    assert {(f.kind, f.action) for f in res.faults} == \
+        {("timeout", "redispatched")}
+    assert (1, 1) in {f.coord for f in res.faults}
+    assert res.rmse == clean.rmse
+    np.testing.assert_array_equal(np.asarray(res.U_agg.eta),
+                                  np.asarray(clean.U_agg.eta))
+
+
+@pytest.mark.parametrize("name", sorted(OVERLAPPED))
+def test_hang_budget_exhaustion_degrades(conf_run, name):
+    part, cfg, test, key, _ = conf_run
+    pol = ENG.FaultPolicy(timeout_floor_s=0.3, timeout_slack=0.0,
+                          on_fault="degrade", max_retries=1)
+    res = PP.run_pp(key, part, cfg, test, executor=_make(name),
+                    fault_plan=ENG.FaultPlan(hang_at={(1, 1): 99}),
+                    fault_policy=pol)
+    assert np.isfinite(res.rmse)
+    assert res.faults[-1].action == "degraded"
+    assert any(f.kind == "timeout" for f in res.faults)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / resume
+# ---------------------------------------------------------------------------
+
+
+RESUME_EXECUTORS = ["serial", "async", "streaming"]
+
+
+def _interrupt(part, cfg, test, key, name, ckpt_dir, **ckpt_kw):
+    """Run with checkpointing and an unrecoverable mid-graph dispatch
+    failure — the stand-in for a kill: the raise unwinds through the
+    engine's flush, leaving a valid resumable directory."""
+    with pytest.raises(ENG.BlockFaultError):
+        PP.run_pp(key, part, cfg, test, executor=_make(name),
+                  checkpoint_dir=ckpt_dir,
+                  fault_plan=ENG.FaultPlan(fail_dispatch_at={(1, 2): 99}),
+                  max_retries=0, on_fault="raise", **ckpt_kw)
+
+
+@pytest.mark.parametrize("name", RESUME_EXECUTORS)
+def test_kill_and_resume_bitwise_identical(conf_run, tmp_path, name):
+    part, cfg, test, key, _ = conf_run
+    ref = PP.run_pp(key, part, cfg, test, executor=_make(name))
+    d = tmp_path / "ckpt"
+    _interrupt(part, cfg, test, key, name, d)
+    n_saved = len(list(d.glob("block_*.npz")))
+    assert 0 < n_saved < part.I * part.J    # genuinely mid-graph
+    res = PP.run_pp(key, part, cfg, test, executor=_make(name),
+                    resume_from=d)
+    assert res.resumed_blocks == n_saved
+    assert res.rmse == ref.rmse
+    assert res.n_test == ref.n_test
+    for got, want in ((res.U_agg, ref.U_agg), (res.V_agg, ref.V_agg)):
+        np.testing.assert_array_equal(np.asarray(got.eta),
+                                      np.asarray(want.eta))
+        np.testing.assert_array_equal(np.asarray(got.Lambda),
+                                      np.asarray(want.Lambda))
+
+
+def test_resume_skips_restored_blocks(conf_run, tmp_path):
+    part, cfg, test, key, _ = conf_run
+    d = tmp_path / "ckpt"
+    _interrupt(part, cfg, test, key, "serial", d)
+    restored = {tuple(int(x) for x in p.stem.split("_")[1:])
+                for p in d.glob("block_*.npz")}
+    ex = _make("serial", record_trace=True)
+    PP.run_pp(key, part, cfg, test, executor=ex, resume_from=d)
+    ran = {c for ev, c in ex.trace if ev == "dispatch"}
+    assert not (ran & restored)             # restored blocks never re-run
+    assert ran | restored == {t.coord for _, ts in
+                              ENG.build_phase_graph(part) for t in ts}
+
+
+def test_resume_continues_checkpointing(conf_run, tmp_path):
+    """resume_from == checkpoint_dir: the continued run tops the directory
+    up to a complete set, usable for yet another (full) resume."""
+    part, cfg, test, key, ref = conf_run
+    d = tmp_path / "ckpt"
+    _interrupt(part, cfg, test, key, "serial", d)
+    PP.run_pp(key, part, cfg, test, executor="serial",
+              resume_from=d, checkpoint_dir=d)
+    assert len(list(d.glob("block_*.npz"))) == part.I * part.J
+    res = PP.run_pp(key, part, cfg, test, executor="serial", resume_from=d)
+    assert res.resumed_blocks == part.I * part.J
+    assert res.rmse == ref.rmse
+
+
+def test_ckpt_every_batches_writes(conf_run, tmp_path):
+    part, cfg, test, key, _ = conf_run
+    every = tmp_path / "every"
+    one = tmp_path / "one"
+    _interrupt(part, cfg, test, key, "serial", one)
+    _interrupt(part, cfg, test, key, "serial", every, ckpt_every=4)
+    # batching persists no MORE than per-resolve flushing at the kill, and
+    # the engine's final flush still lands the buffered remainder
+    assert len(list(every.glob("block_*.npz"))) \
+        <= len(list(one.glob("block_*.npz")))
+    res = PP.run_pp(key, part, cfg, test, executor="serial",
+                    resume_from=every)
+    ref = PP.run_pp(key, part, cfg, test, executor="serial")
+    assert res.rmse == ref.rmse
+
+
+def test_resume_mismatch_rejected(conf_run, tmp_path):
+    part, cfg, test, key, _ = conf_run
+    d = tmp_path / "ckpt"
+    _interrupt(part, cfg, test, key, "serial", d)
+    with pytest.raises(ValueError, match="resume_from"):
+        PP.run_pp(jax.random.key(99), part, cfg, test, executor="serial",
+                  resume_from=d)                       # different PRNG key
+    with pytest.raises(ValueError, match="resume_from"):
+        PP.run_pp(key, part, cfg._replace(n_samples=7), test,
+                  executor="serial", resume_from=d)    # different chain
+    coo2, _ = SYN.generate("mini", seed=13)
+    train2, _ = train_test_split(coo2, 0.15, seed=14)
+    with pytest.raises(ValueError, match="resume_from"):
+        PP.run_pp(key, partition(train2, 2, 2), cfg, test,
+                  executor="serial", resume_from=d)    # different grid
+
+
+# ---------------------------------------------------------------------------
+# aggregation under non-finite posteriors: why the guard sits BEFORE it
+# ---------------------------------------------------------------------------
+
+
+def test_aggregate_axis_propagates_nonfinite(conf_run):
+    """``pp._aggregate_axis`` is a plain linear reduction: one NaN'd block
+    posterior poisons the whole factor. That is exactly why the engine's
+    health guard runs at block resolution, before the store — this test
+    pins the division of labor."""
+    part, cfg, _, _, _ = conf_run
+    K = cfg.K
+    posts = [[RowGaussians(
+        eta=jnp.zeros((len(part.block(i, j).row_ids), K)),
+        Lambda=jnp.broadcast_to(jnp.eye(K),
+                                (len(part.block(i, j).row_ids), K, K)))
+        for j in range(part.J)] for i in range(part.I)]
+    clean = PP._aggregate_axis(part, posts, axis="row")
+    assert np.isfinite(np.asarray(clean.eta)).all()
+    posts[1][1] = RowGaussians(eta=posts[1][1].eta.at[0, 0].set(jnp.nan),
+                               Lambda=posts[1][1].Lambda)
+    dirty = PP._aggregate_axis(part, posts, axis="row")
+    assert not np.isfinite(np.asarray(dirty.eta)).all()
+
+
+def test_rmse_aggregation_guarded_from_nonfinite(conf_run):
+    """End to end: a poisoned block under 'degrade' reaches neither the
+    RMSE sum nor the factor aggregation — both stay finite while the raw
+    injected chain demonstrably goes non-finite (health=False)."""
+    part, cfg, test, key, _ = conf_run
+    plan = ENG.FaultPlan(nan_at={(1, 1): 99})
+    # the injected chain really is non-finite at the gibbs level
+    task = [t for _, ts in ENG.build_phase_graph(part) for t in ts
+            if t.coord == (1, 1)][0]
+    test_p = apply_permutation(test, part.row_perm, part.col_perm)
+    keys = jax.random.split(key, part.I * part.J).reshape(part.I, part.J)
+    ctx = ENG.PhaseContext(part=part, cfg=cfg, test_p=test_p, keys=keys,
+                           shapes=PP.BlockShapes.per_phase(part, test_p),
+                           fault_plan=plan)
+    ctx.U_posts[(1, 0)] = _uniform_prior(part, 1, 0, cfg.K, rows=True)
+    ctx.V_posts[(0, 1)] = _uniform_prior(part, 0, 1, cfg.K, rows=False)
+    raw = ENG._run_block_attempt(ctx, task, attempt=0)
+    assert not bool(np.asarray(raw.health))
+    assert ENG._fault_kind(ctx, task, raw) == "nonfinite"
+    # ...and the guarded run never lets it out
+    res = PP.run_pp(key, part, cfg, test, executor="serial",
+                    fault_plan=plan, on_fault="degrade", max_retries=0)
+    assert np.isfinite(res.rmse)
+    assert np.isfinite(np.asarray(res.U_agg.eta)).all()
+
+
+def _uniform_prior(part, i, j, K, rows):
+    blk = part.block(i, j)
+    n = len(blk.row_ids) if rows else len(blk.col_ids)
+    return RowGaussians(eta=jnp.zeros((n, K)),
+                        Lambda=jnp.broadcast_to(jnp.eye(K), (n, K, K)))
+
+
+def test_rmse_divergence_threshold_trips(conf_run):
+    """rmse_max treats a finite-but-diverged block as faulty."""
+    part, cfg, test, key, _ = conf_run
+    pol = ENG.FaultPolicy(rmse_max=1e-6, on_fault="degrade", max_retries=0)
+    res = PP.run_pp(key, part, cfg, test, executor="serial",
+                    fault_policy=pol)
+    assert res.faults
+    assert all(f.kind == "rmse" for f in res.faults)
+    assert np.isfinite(res.rmse)
+
+
+# ---------------------------------------------------------------------------
+# input validation: actionable errors naming the offending argument
+# ---------------------------------------------------------------------------
+
+
+def test_validation_errors(conf_run, tmp_path):
+    part, cfg, test, key, _ = conf_run
+    with pytest.raises(ValueError, match="window"):
+        ENG.make_executor("streaming", window=0)
+    with pytest.raises(ValueError, match="window"):
+        ENG.StreamingExecutor(window=-3)
+    with pytest.raises(ValueError, match="depth"):
+        ENG.StreamingExecutor(depth=0)
+    with pytest.raises(ValueError, match="max_retries"):
+        PP.run_pp(key, part, cfg, test, max_retries=-1)
+    with pytest.raises(ValueError, match="on_fault"):
+        PP.run_pp(key, part, cfg, test, on_fault="panic")
+    with pytest.raises(ValueError, match="ckpt_every"):
+        PP.run_pp(key, part, cfg, test, ckpt_every=0)
+    with pytest.raises(ValueError, match="max_retries"):
+        ENG.FaultPolicy(max_retries=-2)
+    with pytest.raises(ValueError, match="on_fault"):
+        ENG.FaultPolicy(on_fault="ignore")
+    from repro.checkpoint.ckpt import PPCheckpoint
+    with pytest.raises(ValueError, match="ckpt_every"):
+        PPCheckpoint(tmp_path / "x", every=0)
+    from repro.core.topology import Topology
+    with pytest.raises(ValueError, match="axes"):
+        Topology(block=0, data=1)
+    with pytest.raises(ValueError, match="devices"):
+        Topology(block=2, data=2, devices=tuple(jax.devices()[:1]))
+
+
+def test_fault_plan_is_deterministic():
+    plan = ENG.FaultPlan(nan_at={(1, 1): 2}, hang_at={(0, 2): 1})
+    assert plan.nan((1, 1), 0) and plan.nan((1, 1), 1)
+    assert not plan.nan((1, 1), 2)
+    assert not plan.nan((2, 2), 0)
+    assert plan.hang((0, 2), 0) and not plan.hang((0, 2), 1)
+    assert not plan.fail((1, 1), 0)
