@@ -1,0 +1,39 @@
+"""Pass-based static invariant analyzer for the PP engine.
+
+The paper's performance claims rest on structural invariants —
+communication confined within blocks, no materialized (N, M, K)
+intermediates, donated buffers actually recycled, dependency-safe
+dispatch — that used to be checked by ad-hoc snippets scattered across
+``bmf_dryrun``, the conformance suite and individual tests. This package
+is the single enforcement layer: a registry of ``Pass`` objects, each
+analyzing ONE artifact kind, that every executor and kernel auto-enrolls
+in via ``launch/bmf_lint.py``.
+
+Artifact kinds (see ``registry``):
+
+  jaxpr  — traced-but-unlowered programs: materialization budget,
+           dtype promotion, host callbacks (``jaxpr_passes``)
+  hlo    — compiled modules + buffer assignment: collective confinement
+           and per-comm-mode budgets, donation effectiveness
+           (``hlo_passes``)
+  trace  — executor dispatch/resolve event traces: happens-before,
+           watchdog redispatch ordering, window occupancy
+           (``trace_passes``)
+  graph  — ``build_phase_graph`` output: cycles, unreachable blocks,
+           dangling deps (``trace_passes``; the engine runs this pass
+           before any dispatch)
+  plan   — ``partition`` + ``coalesce_shapes`` plans: recompilation
+           budget (``hlo_passes``)
+
+``analyze(artifact)`` runs every registered pass of the artifact's kind
+and returns the violations; ``guards`` holds the runtime complements
+(``no_host_transfers``).
+"""
+from repro.analysis.registry import (  # noqa: F401
+    Pass, Violation, analyze, get_pass, passes, register,
+    GraphArtifact, HLOArtifact, JaxprArtifact, PlanArtifact, TraceArtifact,
+)
+from repro.analysis import jaxpr_passes  # noqa: F401  (registers passes)
+from repro.analysis import hlo_passes    # noqa: F401
+from repro.analysis import trace_passes  # noqa: F401
+from repro.analysis import guards        # noqa: F401

@@ -1,0 +1,23 @@
+"""Runtime guards — the dynamic complements of the static passes."""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+@contextlib.contextmanager
+def no_host_transfers():
+    """Fail loudly on ANY implicit host<->device transfer inside the
+    block: the runtime twin of the 'host-callback' jaxpr pass. The PP
+    engine's contract is that posterior summaries stay device-resident
+    between dispatch and final aggregation — wrap the aggregation (or any
+    phase-internal region) in this to prove it:
+
+        with guards.no_host_transfers():
+            U_agg = PP._aggregate_axis(part, posts, axis="row")
+
+    Warm the executable first where compilation-time constant transfers
+    would trip the guard."""
+    with jax.transfer_guard("disallow"):
+        yield

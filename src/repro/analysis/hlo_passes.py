@@ -1,0 +1,205 @@
+"""HLO/buffer-assignment passes: collective confinement with
+per-comm-mode budgets, donation effectiveness, recompilation budget.
+
+These generalize the ad-hoc checks that used to live in
+``launch/bmf_dryrun`` (replica-group confinement assert, alias-bytes
+reporting) into registry passes every lowered executable enrolls in.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional
+
+from repro.analysis.registry import (HLOArtifact, Pass, PlanArtifact,
+                                     Violation, register)
+from repro.roofline import analysis as ROOF
+
+# Per-comm-mode collective budgets: flat instruction counts allowed in a
+# lowered chain executable (the sweep body appears once in HLO text, so a
+# flat count IS the per-sweep count). Kinds absent from a budget must not
+# appear at all. The shapes follow distributed.py's comm modes, verified
+# against the composed 2-D lowerings across every prior structure:
+#   gather  — the U-step all-gathers the freshly sampled U row shards
+#             (V replicated): exactly 1 all-gather per sweep.
+#   psum    — the V-step psums its (Lambda, eta) partial stats — the
+#             paper's single logical psum, lowered as 2 all-reduces —
+#             plus the U-step's factor gather.
+#   scatter — the V-step psum-scatters the partial stats (2
+#             reduce-scatters) and all-gathers the sampled shard, plus
+#             the U-step gather.
+# comm=None (block-only sharding, single-block async chains, streaming
+# windows) allows NO collectives: same-phase blocks never talk.
+COLLECTIVE_BUDGETS: Dict[Optional[str], Dict[str, int]] = {
+    None: {},
+    "gather": {"all-gather": 1},
+    "psum": {"all-gather": 1, "all-reduce": 2},
+    "scatter": {"all-gather": 2, "reduce-scatter": 2},
+}
+
+
+def default_budget(comm: Optional[str]) -> Dict[str, int]:
+    """The comm mode's per-sweep collective budget."""
+    if comm not in COLLECTIVE_BUDGETS:
+        raise ValueError(f"unknown comm mode {comm!r} "
+                         f"(expected {sorted(COLLECTIVE_BUDGETS, key=str)})")
+    return dict(COLLECTIVE_BUDGETS[comm])
+
+
+def _flat_collective_counts(hlo_text: str) -> Dict[str, int]:
+    return ROOF.collective_counts(hlo_text)
+
+
+def _collective_confinement(art: HLOArtifact) -> List[Violation]:
+    out = []
+    # (1) zero 'block'-axis crossings: every replica group must lie
+    # within one allowed 'data' row
+    if art.allowed_groups is not None:
+        chk = ROOF.collectives_confined_to_groups(art.hlo_text,
+                                                  art.allowed_groups)
+        for op, grp in chk["crossing"]:
+            out.append(Violation(
+                "collective-confinement", art.label,
+                f"{op} replica group {grp} crosses the 'block' axis "
+                f"(allowed 'data' rows: {[list(g) for g in art.allowed_groups]})",
+                "blocks never talk during a phase — shard_map the batch "
+                "with in_specs P('block') and keep every collective on "
+                "the 'data' axis of the group submesh"))
+    # (2) per-comm-mode budget: the mode dictates exactly which
+    # collective kinds a sweep may contain, and how many
+    budget = (art.collective_budget if art.collective_budget is not None
+              else default_budget(art.comm))
+    counts = _flat_collective_counts(art.hlo_text)
+    for kind, n in sorted(counts.items()):
+        cap = budget.get(kind, 0)
+        if n > cap:
+            out.append(Violation(
+                "collective-confinement", art.label,
+                f"{n} {kind} instruction(s) in a comm={art.comm!r} "
+                f"executable (budget {cap})",
+                f"comm={art.comm!r} allows only {budget or 'no collectives'}"
+                f" per sweep — an extra collective means a factor update "
+                f"is re-reducing stats it should keep shard-local "
+                f"(see distributed.COMM_MODES)"))
+    return out
+
+
+register(Pass(
+    "collective-confinement", "hlo",
+    "every collective is confined to a 'data'-axis replica group and the "
+    "comm mode's per-sweep collective budget holds",
+    _collective_confinement))
+
+
+def alias_param_ids(hlo_text: str) -> Optional[List[int]]:
+    """Parameter numbers XLA aliased to outputs, parsed from the module
+    header's ``input_output_alias={ {out}: (param, {index}, kind), ... }``.
+    Returns None when the module declares no aliasing at all."""
+    start = hlo_text.find("input_output_alias={")
+    if start < 0:
+        return None
+    i = start + len("input_output_alias=")
+    depth = 0
+    for j in range(i, len(hlo_text)):
+        if hlo_text[j] == "{":
+            depth += 1
+        elif hlo_text[j] == "}":
+            depth -= 1
+            if depth == 0:
+                section = hlo_text[i:j + 1]
+                return [int(m.group(1)) for m in
+                        re.finditer(r":\s*\((\d+)", section)]
+    return None
+
+
+def _entry_param_count(hlo_text: str) -> Optional[int]:
+    ids = {int(m.group(1))
+           for m in re.finditer(r"=\s*(?:\([^)]*\)|\S+)\s+parameter\((\d+)\)",
+                                hlo_text)}
+    return (max(ids) + 1) if ids else None
+
+
+def _donation_effectiveness(art: HLOArtifact) -> List[Violation]:
+    if not art.donated:
+        return []
+    out = []
+    aliased = alias_param_ids(art.hlo_text)
+    if aliased is None:
+        return [Violation(
+            "donation-effectiveness", art.label,
+            f"donate_argnums declared ({len(art.donated)} buffers) but the "
+            f"compiled module has NO input_output_alias map",
+            "XLA dropped every donation — check the donated leaves' "
+            "shapes/dtypes still match an output (a shape drift silently "
+            "turns aliasing off and doubles peak memory)")]
+    if art.param_labels is None:
+        return out
+    label_to_id = {lb: i for i, lb in enumerate(art.param_labels)}
+    n_hlo = _entry_param_count(art.hlo_text)
+    if n_hlo is not None and n_hlo != len(art.param_labels):
+        # compiled param numbering diverged from the flat arg order
+        # (pruned unused args) — per-param attribution would misfire
+        return [Violation(
+            "donation-effectiveness", art.label,
+            f"compiled module has {n_hlo} parameters but the call site "
+            f"passes {len(art.param_labels)} leaves — donation aliases "
+            f"cannot be attributed",
+            "an argument was pruned as unused (keep_unused=False); drop "
+            "it from the dispatch signature so donate_argnums and the "
+            "buffer assignment describe the same parameter list")]
+    aliased_set = set(aliased)
+    release_ok = set(art.release_only)
+    must = set(art.must_alias)
+    for lb in art.donated:
+        pid = label_to_id.get(lb)
+        if pid is None:
+            continue
+        if pid in aliased_set:
+            continue
+        if lb in must:
+            out.append(Violation(
+                "donation-effectiveness", art.label,
+                f"donated buffer {lb!r} (param {pid}) never aliases an "
+                f"output in the buffer assignment",
+                "this donation must be rewritten in place (U0/V0 alias "
+                "the U/V outputs on every backend) — a dtype/shape "
+                "mismatch or an output copy is blocking the alias"))
+        elif lb not in release_ok:
+            out.append(Violation(
+                "donation-effectiveness", art.label,
+                f"donated buffer {lb!r} (param {pid}) is unusable: no "
+                f"output aliases it and it is not documented as "
+                f"release-only",
+                "either stop donating it or add it to the executable's "
+                "release-only set (per-call buffers whose donation only "
+                "returns them to the allocator at dispatch, see "
+                "gibbs._quiet_donation)"))
+    return out
+
+
+register(Pass(
+    "donation-effectiveness", "hlo",
+    "every donate_argnums entry aliases an output, or is an explicitly "
+    "documented release-only buffer — unusable donations are violations, "
+    "not suppressed warnings",
+    _donation_effectiveness))
+
+
+def _recompilation_budget(art: PlanArtifact) -> List[Violation]:
+    distinct = sorted({repr(s) for s in art.signatures})
+    if len(distinct) <= art.cap:
+        return []
+    return [Violation(
+        "recompilation-budget", art.label,
+        f"plan implies {len(distinct)} distinct executable shapes "
+        f"(cap {art.cap}): {distinct[:4]}{'...' if len(distinct) > 4 else ''}",
+        "bucket blocks to shared shapes before dispatch — "
+        "partition.coalesce_shapes merges near-size buckets under a "
+        "max_waste bound, and BlockShapes.per_phase caps the grid at one "
+        "shape per phase tag")]
+
+
+register(Pass(
+    "recompilation-budget", "plan",
+    "a partition + coalesce_shapes plan implies at most `cap` distinct "
+    "executable shapes",
+    _recompilation_budget))

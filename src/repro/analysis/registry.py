@@ -1,0 +1,159 @@
+"""Pass registry + artifact containers for the static invariant analyzer.
+
+A ``Pass`` couples a name with the artifact kind it understands and a
+``run(artifact) -> [Violation]`` function. Passes register themselves at
+import time (``repro.analysis`` imports every pass module), so
+``analyze(artifact)`` always sees the full registry — the analyzer's
+analogue of the executor registry's auto-enrollment.
+
+Artifacts are plain dataclasses carrying exactly what the passes need;
+none of them import engine/gibbs types, so the analyzer stays a leaf of
+the dependency graph and ``core.engine`` can call into it (graph
+validation before dispatch) without a cycle.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class Violation:
+    """One invariant breach: which pass fired, on what artifact, what went
+    wrong, and how to fix it (the fix hint is part of the contract — a
+    violation the reader can't act on is noise)."""
+    pass_name: str
+    artifact: str
+    message: str
+    fix_hint: str
+
+    def as_dict(self) -> Dict[str, str]:
+        return {"pass": self.pass_name, "artifact": self.artifact,
+                "message": self.message, "fix_hint": self.fix_hint}
+
+    def __str__(self):
+        return (f"[{self.pass_name}] {self.artifact}: {self.message}\n"
+                f"    fix: {self.fix_hint}")
+
+
+KINDS = ("jaxpr", "hlo", "trace", "graph", "plan")
+
+
+@dataclass(frozen=True)
+class Pass:
+    """A named analysis over one artifact kind."""
+    name: str
+    kind: str                                   # one of KINDS
+    doc: str
+    run: Callable[[Any], List[Violation]]
+
+
+_REGISTRY: Dict[str, Pass] = {}
+
+
+def register(p: Pass) -> Pass:
+    if p.kind not in KINDS:
+        raise ValueError(f"pass {p.name!r}: unknown artifact kind {p.kind!r} "
+                         f"(expected one of {KINDS})")
+    if p.name in _REGISTRY:
+        raise ValueError(f"duplicate pass name {p.name!r}")
+    _REGISTRY[p.name] = p
+    return p
+
+
+def get_pass(name: str) -> Pass:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown pass {name!r} "
+                       f"(registered: {sorted(_REGISTRY)})")
+    return _REGISTRY[name]
+
+
+def passes(kind: Optional[str] = None) -> List[Pass]:
+    """All registered passes, optionally filtered to one artifact kind."""
+    ps = sorted(_REGISTRY.values(), key=lambda p: p.name)
+    return ps if kind is None else [p for p in ps if p.kind == kind]
+
+
+def analyze(artifact) -> List[Violation]:
+    """Run every registered pass of ``artifact.kind`` and concatenate the
+    violations — the one-call enrollment point bmf_lint and the dry-run
+    use."""
+    return [v for p in passes(artifact.kind) for v in p.run(artifact)]
+
+
+# ---------------------------------------------------------------------------
+# Artifact containers
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class JaxprArtifact:
+    """A traced (unlowered) program. ``bytes_budget`` is the largest
+    single buffer the program may legitimately materialize, derived from
+    block dims (see ``jaxpr_passes.materialization_budget``); None skips
+    the materialization pass."""
+    label: str
+    jaxpr: Any                                  # ClosedJaxpr or Jaxpr
+    bytes_budget: Optional[int] = None
+    allow_f64: bool = False
+    kind: str = field(default="jaxpr", init=False)
+
+
+@dataclass
+class HLOArtifact:
+    """A compiled module's HLO text plus what the passes need from the
+    call site: the comm mode (keys ``hlo_passes.COLLECTIVE_BUDGETS``),
+    the allowed replica groups ('data'-axis rows; None skips the
+    confinement check on single-device modules), and the donation
+    contract (flat param labels, donated labels, the subset that MUST
+    alias an output, plus labels documented as release-only)."""
+    label: str
+    hlo_text: str
+    comm: Optional[str] = None
+    allowed_groups: Optional[Sequence[Sequence[int]]] = None
+    collective_budget: Optional[Dict[str, int]] = None  # overrides comm's
+    param_labels: Optional[Sequence[str]] = None
+    donated: Sequence[str] = ()
+    must_alias: Sequence[str] = ()
+    release_only: Sequence[str] = ()
+    alias_bytes: Optional[int] = None
+    kind: str = field(default="hlo", init=False)
+
+
+Coord = Tuple[int, int]
+
+
+@dataclass
+class TraceArtifact:
+    """An executor's recorded event trace plus the dep map it ran
+    against. Events: dispatch | expire | redispatch | resolve (the
+    engine's extended schema). ``window_bound`` is the streaming
+    occupancy cap G*W*(depth+1); ``reported_peak`` the executor's own
+    realized high-water mark (``peak_window_blocks``)."""
+    label: str
+    trace: Sequence[Tuple[str, Coord]]
+    deps: Dict[Coord, Sequence[Coord]]
+    window_bound: Optional[int] = None
+    reported_peak: Optional[int] = None
+    kind: str = field(default="trace", init=False)
+
+
+@dataclass
+class GraphArtifact:
+    """A phase graph as a plain dep map (coord -> dep coords), with any
+    pre-resolved coords (checkpoint resume) counted as satisfied."""
+    label: str
+    deps: Dict[Coord, Sequence[Coord]]
+    resolved: Sequence[Coord] = ()
+    kind: str = field(default="graph", init=False)
+
+
+@dataclass
+class PlanArtifact:
+    """The executable-shape plan a partition + coalesce_shapes choice
+    implies: one hashable signature per distinct compilation, against a
+    cap."""
+    label: str
+    signatures: Sequence[Any]
+    cap: int = 8
+    kind: str = field(default="plan", init=False)

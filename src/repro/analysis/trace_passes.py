@@ -1,0 +1,190 @@
+"""Dispatch/resolve-trace passes and phase-graph validation.
+
+The executor trace schema (``engine.Executor``):
+
+  ("dispatch", c)    the block's chain was handed to the device queue
+  ("expire", c)      the watchdog expired the in-flight attempt
+  ("redispatch", c)  the expired attempt was re-dispatched (same keys)
+  ("resolve", c)     the block's outcome passed the commit guard
+
+Happens-before contract per coord: dispatch first; every dep resolved
+before it; expire only while in flight; redispatch only after an expire;
+exactly one resolve, last. An expire followed directly by resolve is the
+degraded/terminal-retire path and is legal.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Set, Tuple
+
+from repro.analysis.registry import (GraphArtifact, Pass, TraceArtifact,
+                                     Violation, register)
+
+Coord = Tuple[int, int]
+
+_EVENTS = ("dispatch", "expire", "redispatch", "resolve")
+
+
+def _happens_before(art: TraceArtifact) -> List[Violation]:
+    out = []
+    dispatched: Set[Coord] = set()
+    resolved: Set[Coord] = set()
+    expired: Set[Coord] = set()
+
+    def bad(msg, hint):
+        out.append(Violation("happens-before", art.label, msg, hint))
+
+    for ev, c in art.trace:
+        if ev == "dispatch":
+            if c in dispatched:
+                bad(f"{c} dispatched twice without an intervening expire",
+                    "re-dispatch must go through the watchdog protocol: "
+                    "record ('expire', c) before the second attempt")
+            missing = [d for d in art.deps.get(c, ()) if d not in resolved]
+            if missing:
+                bad(f"{c} dispatched before dep(s) {missing} resolved",
+                    "a block's propagated priors come from its deps — "
+                    "gate dispatch on _dep_state readiness, never on "
+                    "phase position alone")
+            dispatched.add(c)
+        elif ev == "expire":
+            if c not in dispatched or c in resolved:
+                bad(f"{c} expired while not in flight",
+                    "the watchdog may only expire a dispatched, "
+                    "unresolved attempt")
+            expired.add(c)
+        elif ev == "redispatch":
+            if c not in expired:
+                bad(f"{c} redispatched without an expired attempt",
+                    "watchdog re-dispatch must be totally ordered with "
+                    "the expiry it replaces: record ('expire', c) first")
+            expired.discard(c)
+        elif ev == "resolve":
+            if c not in dispatched:
+                bad(f"{c} resolved without a dispatch",
+                    "every outcome must come from a recorded dispatch — "
+                    "a resolve out of nowhere means the executor "
+                    "committed a stale or foreign buffer")
+            if c in resolved:
+                bad(f"{c} resolved twice",
+                    "double commit: the commit guard must run exactly "
+                    "once per block")
+            expired.discard(c)     # terminal retire of an expired attempt
+            resolved.add(c)
+        else:
+            bad(f"unknown trace event {ev!r} for {c}",
+                f"executor traces may only contain {_EVENTS}")
+    for c in art.deps:
+        if c not in resolved:
+            bad(f"{c} never resolved",
+                "the run ended with an unresolved block — the executor "
+                "dropped an in-flight handle or lost a retire path")
+    for c in sorted(expired):
+        bad(f"{c} left with an expired attempt neither redispatched nor "
+            f"retired",
+            "an expiry must be followed by a redispatch or a terminal "
+            "retire before the run ends")
+    return out
+
+
+register(Pass(
+    "happens-before", "trace",
+    "every dep resolves before its dependent dispatches; watchdog "
+    "re-dispatch is totally ordered with the expired attempt; every "
+    "block resolves exactly once",
+    _happens_before))
+
+
+def _window_occupancy(art: TraceArtifact) -> List[Violation]:
+    if art.window_bound is None:
+        return []
+    out = []
+    live: Set[Coord] = set()
+    peak = 0
+    for ev, c in art.trace:
+        if ev in ("dispatch", "redispatch"):
+            live.add(c)
+        elif ev == "resolve":
+            live.discard(c)
+        peak = max(peak, len(live))
+    if peak > art.window_bound:
+        out.append(Violation(
+            "window-occupancy", art.label,
+            f"{peak} blocks in flight exceeds the window bound "
+            f"{art.window_bound} (G*W*(depth+1))",
+            "the streaming window must stay bounded for the flat-memory "
+            "claim to hold — a chunk was dispatched without waiting for "
+            "a window slot"))
+    if art.reported_peak is not None and art.reported_peak > art.window_bound:
+        out.append(Violation(
+            "window-occupancy", art.label,
+            f"executor-reported peak_window_blocks={art.reported_peak} "
+            f"exceeds the bound {art.window_bound}",
+            "staged + in-flight chunks together must fit "
+            "G*W*(depth+1) blocks — the prefetch staged past its slot"))
+    return out
+
+
+register(Pass(
+    "window-occupancy", "trace",
+    "in-flight (and staged) blocks never exceed the streaming window "
+    "bound G*W*(depth+1)",
+    _window_occupancy))
+
+
+def check_graph(deps: Dict[Coord, Sequence[Coord]],
+                resolved: Sequence[Coord] = (),
+                label: str = "phase-graph") -> List[Violation]:
+    """Cycle / unreachable-block / dangling-dep detection on a dep map —
+    the function behind the graph pass AND the engine's pre-dispatch
+    hook (``run_phase_graph`` refuses to start on a graph that cannot
+    drain)."""
+    out = []
+    done = set(resolved)
+    dangling = {}
+    for c, ds in deps.items():
+        missing = [d for d in ds if d not in deps and d not in done]
+        if missing:
+            dangling[c] = missing
+            out.append(Violation(
+                "graph-validation", label,
+                f"{c} depends on {missing} which are neither in the "
+                f"graph nor pre-resolved",
+                "a pruned/mistyped dep can never resolve — prune the "
+                "dependent too (resume) or fix the prior_from coords"))
+    # Kahn drain: whatever never becomes ready is cyclic or blocked
+    pending = {c: [d for d in ds if d not in done]
+               for c, ds in deps.items()}
+    ready = [c for c, ds in pending.items() if not ds]
+    order = []
+    while ready:
+        c = ready.pop()
+        order.append(c)
+        done.add(c)
+        for s, ds in pending.items():
+            if c in ds:
+                ds.remove(c)
+                if not ds and s not in done and s not in ready:
+                    ready.append(s)
+    stuck = sorted(c for c in deps if c not in done)
+    stuck = [c for c in stuck if c not in dangling]
+    if stuck:
+        out.append(Violation(
+            "graph-validation", label,
+            f"blocks {stuck[:6]}{'...' if len(stuck) > 6 else ''} can "
+            f"never become ready (dependency cycle)",
+            "the PP phase DAG is acyclic by construction (deps point to "
+            "strictly earlier phases) — a cycle means prior_from coords "
+            "were rewired; break it or re-derive the graph from "
+            "build_phase_graph"))
+    return out
+
+
+def _graph_validation(art: GraphArtifact) -> List[Violation]:
+    return check_graph(art.deps, art.resolved, label=art.label)
+
+
+register(Pass(
+    "graph-validation", "graph",
+    "the phase graph is acyclic, fully reachable, and every dep exists "
+    "(in-graph or pre-resolved)",
+    _graph_validation))

@@ -667,3 +667,68 @@ def sweep_comm_bytes_scatter(D: int, K: int) -> int:
     moves half the bytes of a ring all-reduce, plus the tiny sampled-V
     gather."""
     return 4 * (D * (K * K + K) // 2 + D * K + 2 * (K * K + K))
+
+
+def trace_chain_2d(cfg: BMF.BMFConfig, topology, n_rows: int, n_cols: int,
+                   m_rows: int, m_cols: int, n_test: int, *,
+                   batch: Optional[int] = None, comm: str = "gather",
+                   donate: bool = False, u_prior: bool = True,
+                   v_prior: bool = True,
+                   prior_use: bool = False) -> "GIBBS.TracedChain":
+    """Lowering hook for the static analyzer: trace the EXACT composed
+    executable ``run_gibbs_stacked_2d`` dispatches — B blocks over the
+    'block' axis, each chain data-sharded over the 'data' axis — at
+    abstract shapes. Mirrors ``gibbs.trace_chain``'s contract (see
+    ``TracedChain``); ``batch`` defaults to ``topology.block``."""
+    if comm not in COMM_MODES:
+        raise ValueError(f"comm={comm!r} not in {COMM_MODES}")
+    S = jax.ShapeDtypeStruct
+    f32, i32 = jnp.float32, jnp.int32
+    B = topology.block if batch is None else batch
+    n_shards = topology.data
+    K = cfg.K
+    cfg_key = cfg._replace(n_samples=0, burnin=0, phase_bc_samples=None)
+    N_pad = ((n_rows + n_shards - 1) // n_shards) * n_shards
+    D_pad = ((n_cols + n_shards - 1) // n_shards) * n_shards
+
+    rows = (S((B, N_pad, m_rows), i32), S((B, N_pad, m_rows), f32),
+            S((B, N_pad, m_rows), f32))
+    if comm == "gather":
+        cols = (S((B, n_cols, m_cols), i32), S((B, n_cols, m_cols), f32),
+                S((B, n_cols, m_cols), f32))
+        csrt = None
+    else:
+        cols = None
+        csrt = (S((B, n_shards, D_pad, m_cols), i32),
+                S((B, n_shards, D_pad, m_cols), f32),
+                S((B, n_shards, D_pad, m_cols), f32))
+    tr, tc = S((B, n_test), i32), S((B, n_test), i32)
+    ns, bi = S((), i32), S((), i32)
+    up = (RowGaussians(eta=S((B, n_rows, K), f32),
+                       Lambda=S((B, n_rows, K, K), f32)) if u_prior else None)
+    vp = (RowGaussians(eta=S((B, n_cols, K), f32),
+                       Lambda=S((B, n_cols, K, K), f32)) if v_prior else None)
+    U0, V0 = S((B, n_rows, K), f32), S((B, n_cols, K), f32)
+    uu = S((B,), f32) if prior_use else None
+    named = [("key_data", S((B, 2), jnp.uint32)),
+             ("csr_rows", rows), ("csr_cols", cols), ("csrt", csrt),
+             ("test_rows", tr), ("test_cols", tc), ("n_samples", ns),
+             ("burnin", bi), ("U_prior", up), ("V_prior", vp),
+             ("U0", U0), ("V0", V0), ("u_use", uu), ("v_use", uu)]
+    fn = _run_gibbs_2d_jit_donated if donate else _run_gibbs_2d_jit
+    with (GIBBS._quiet_donation() if donate else contextlib.nullcontext()):
+        traced = fn.trace(named[0][1], rows, cols, csrt, tr, tc, cfg_key,
+                          n_cols, n_rows, ns, bi, up, vp, U0, V0, uu, uu,
+                          mesh=topology.mesh, comm=comm,
+                          n_rows=n_rows, n_cols=n_cols)
+    # _DONATE_2D positions -> named entries (statics interleave at 6-8)
+    dpos = (1, 2, 3, 4, 5, 10, 11)
+    donated = GIBBS._donated_labels(named, dpos) if donate else ()
+    # U0 cannot alias in the composed lowering: every sweep rebuilds the
+    # full U as an all_gather of the data-sharded sampled rows, and a
+    # collective's output is a fresh buffer — donating U0 only releases
+    # it. V0 (gather mode runs the reference V-step) aliases in place.
+    must = tuple(lb for lb in ("V0",) if lb in donated)
+    return GIBBS.TracedChain(traced=traced,
+                             param_labels=GIBBS._flat_param_labels(named),
+                             donated_labels=donated, must_alias=must)

@@ -533,12 +533,20 @@ class Executor:
     """Runs the PP phase graph; subclasses choose the schedule.
 
     Every executor records an optional event trace (``record_trace=True``):
-    ("dispatch"|"resolve", coord) pairs appended in real order. "dispatch"
-    means the block's chain was handed to the runtime (its priors were
-    read), "resolve" means its results were observed complete. The
+    (event, coord) pairs appended in real order. "dispatch" means the
+    block's chain was handed to the runtime (its priors were read),
+    "resolve" means its results were observed complete. Watchdog paths add
+    two more events — "expire" (the in-flight attempt hit its deadline and
+    its handles were dropped) and "redispatch" (the expired attempt was
+    re-dispatched under the same keys) — so a fault-free run is always
+    dispatch/resolve pairs and a timeout is totally ordered as
+    dispatch < expire < redispatch < resolve (an expire followed directly
+    by a terminal resolve is the degraded/exhausted-budget path). The
     conformance suite (tests/test_executor_conformance.py) asserts on this
     trace that no executor ever dispatches a block before its dependencies
-    resolved — new executors get that check for free by reporting honestly.
+    resolved, and the analyzer's happens-before pass
+    (repro.analysis.trace_passes) checks the full protocol — new executors
+    get both for free by reporting honestly.
     """
     name = "base"
     devices: Tuple = ()    # AsyncExecutor's per-device streams
@@ -1166,12 +1174,14 @@ class AsyncExecutor(Executor):
                     # SAME key: a slow-but-alive block re-resolves to
                     # bitwise-identical numbers
                     _, _, td = inflight.pop(c)
+                    self._record("expire", c)
                     if ctx.cur_attempt(c) < pol.max_retries:
                         ctx.record_fault(c, "timeout", "redispatched")
                         ctx.attempts[c] = ctx.cur_attempt(c) + 1
                         td2 = time.time()
                         try:
                             sig2, out2 = self._dispatch(ctx, tasks[c])
+                            self._record("redispatch", c)
                             inflight[c] = (sig2, out2, td2)
                         except _DISPATCH_ERRORS:
                             retire(c, None, td2, kind="dispatch")
@@ -1628,6 +1638,8 @@ class StreamingExecutor(Executor):
                     # bitwise-identical numbers; exhausted budgets
                     # degrade/raise per policy
                     chunk_tasks, sig, outs, td = inflight[g].pop(i)
+                    for t in chunk_tasks:
+                        self._record("expire", t.coord)
                     if all(ctx.cur_attempt(t.coord) < pol.max_retries
                            for t in chunk_tasks):
                         for t in chunk_tasks:
@@ -1640,6 +1652,8 @@ class StreamingExecutor(Executor):
                                           group=g2)
                         td2 = time.time()
                         sig2, outs2 = self._dispatch(ctx, st2)
+                        for t in chunk_tasks:
+                            self._record("redispatch", t.coord)
                         inflight[g2].append((chunk_tasks, sig2, outs2, td2))
                         note_peak()
                     else:
@@ -1848,6 +1862,17 @@ def run_phase_graph(key, part: Partition, cfg: BMF.BMFConfig, test: COO,
     # _dep_state counts only intra-graph deps toward readiness
     graph = [(ph, pending) for ph, tasks in full_graph
              if (pending := [t for t in tasks if t.coord not in ctx.resumed])]
+    # static pre-dispatch validation: the graph the executor is about to
+    # drain must be acyclic with every dep in-graph or pre-resolved — a
+    # rewired prior_from or an over-pruned resume fails HERE, not as a
+    # hang inside an executor's ready loop
+    from repro.analysis import trace_passes as _TRACE_LINT
+    _bad = _TRACE_LINT.check_graph(
+        {t.coord: list(t.deps) for _, ts in graph for t in ts},
+        resolved=set(ctx.resumed))
+    if _bad:
+        raise ValueError("invalid phase graph: "
+                         + "; ".join(v.message for v in _bad))
     if graph:
         try:
             outcomes, phase_times, spans = executor.run_graph(

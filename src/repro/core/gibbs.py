@@ -347,3 +347,102 @@ def _run_gibbs_impl(key, csr_rows, csr_cols, test_rows, test_cols, cfg,
 def rmse_from_acc(acc: GibbsAccumulators, test_vals: jnp.ndarray) -> jnp.ndarray:
     pred = acc.pred_sum / jnp.maximum(acc.pred_cnt, 1.0)
     return jnp.sqrt(jnp.mean((pred - test_vals) ** 2))
+
+
+class TracedChain(NamedTuple):
+    """What the static analyzer needs from one lowering: the jax Traced
+    object (``.jaxpr`` feeds the jaxpr passes, ``.lower().compile()`` the
+    HLO passes), the flat XLA-parameter labels in order, the labels
+    donate_argnums covers, and the subset that must alias an output."""
+    traced: object
+    param_labels: Tuple[str, ...]
+    donated_labels: Tuple[str, ...]
+    must_alias: Tuple[str, ...]
+
+
+def _flat_param_labels(named_args) -> Tuple[str, ...]:
+    """Flatten [(name, pytree-of-avals)] into per-XLA-parameter labels:
+    the jit entry's parameter order IS the flattened order of its dynamic
+    args, so label i names HLO parameter i."""
+    labels = []
+    for name, tree in named_args:
+        leaves = jax.tree_util.tree_leaves(tree)
+        if len(leaves) == 1:
+            labels.append(name)
+        else:
+            labels.extend(f"{name}.{i}" for i in range(len(leaves)))
+    return tuple(labels)
+
+
+def _donated_labels(named_args, donate_argnums) -> Tuple[str, ...]:
+    out = []
+    for pos in donate_argnums:
+        name, tree = named_args[pos]
+        n = len(jax.tree_util.tree_leaves(tree))
+        out.extend([name] if n == 1 else [f"{name}.{i}" for i in range(n)])
+    return tuple(out)
+
+
+def trace_chain(cfg: BMF.BMFConfig, n_rows: int, n_cols: int, m_rows: int,
+                m_cols: int, n_test: int, *, batch: Optional[int] = None,
+                donate: bool = False, u_prior: bool = True,
+                v_prior: bool = True, prior_use: bool = False,
+                mesh=None) -> TracedChain:
+    """Lowering hook for the static analyzer (repro.analysis /
+    launch.bmf_lint): trace the EXACT executable ``run_gibbs``
+    (batch=None) or ``run_gibbs_stacked`` (batch=B) dispatches, at
+    abstract shapes. ``prior_use`` adds the streaming executor's
+    per-block prior-use flags (stacked only); ``mesh`` shard_maps the
+    batch over a 1-D 'block' mesh (the sharded executor's data=1 path)."""
+    S = jax.ShapeDtypeStruct
+    f32, i32 = jnp.float32, jnp.int32
+    K = cfg.K
+    cfg_key = cfg._replace(n_samples=0, burnin=0, phase_bc_samples=None)
+
+    def shp(*dims):
+        return dims if batch is None else (batch,) + dims
+
+    csr_r = (S(shp(n_rows, m_rows), i32), S(shp(n_rows, m_rows), f32),
+             S(shp(n_rows, m_rows), f32))
+    csr_c = (S(shp(n_cols, m_cols), i32), S(shp(n_cols, m_cols), f32),
+             S(shp(n_cols, m_cols), f32))
+    tr, tc = S(shp(n_test), i32), S(shp(n_test), i32)
+    ns, bi = S((), i32), S((), i32)
+    up = (RowGaussians(eta=S(shp(n_rows, K), f32),
+                       Lambda=S(shp(n_rows, K, K), f32)) if u_prior else None)
+    vp = (RowGaussians(eta=S(shp(n_cols, K), f32),
+                       Lambda=S(shp(n_cols, K, K), f32)) if v_prior else None)
+    U0, V0 = S(shp(n_rows, K), f32), S(shp(n_cols, K), f32)
+
+    if batch is None:
+        key = jax.eval_shape(lambda: jax.random.key(0))
+        named = [("key", key), ("csr_rows", csr_r), ("csr_cols", csr_c),
+                 ("test_rows", tr), ("test_cols", tc), ("n_samples", ns),
+                 ("burnin", bi), ("U_prior", up), ("V_prior", vp),
+                 ("U0", U0), ("V0", V0)]
+        fn = _run_gibbs_jit_donated if donate else _run_gibbs_jit
+        with (_quiet_donation() if donate else contextlib.nullcontext()):
+            traced = fn.trace(key, csr_r, csr_c, tr, tc, cfg_key,
+                              n_cols, n_rows, ns, bi, up, vp, U0, V0)
+        # donate positions -> named entries: the dispatch signature
+        # interleaves the static args (cfg, n_cols_r, n_cols_c) at 5-7
+        dpos = (1, 2, 3, 4, 9, 10)
+    else:
+        kd = S((batch, 2), jnp.uint32)
+        uu = S((batch,), f32) if prior_use else None
+        named = [("key_data", kd), ("csr_rows", csr_r), ("csr_cols", csr_c),
+                 ("test_rows", tr), ("test_cols", tc), ("n_samples", ns),
+                 ("burnin", bi), ("U_prior", up), ("V_prior", vp),
+                 ("U0", U0), ("V0", V0), ("u_use", uu), ("v_use", uu)]
+        fn = _run_gibbs_stacked_jit_donated if donate \
+            else _run_gibbs_stacked_jit
+        with (_quiet_donation() if donate else contextlib.nullcontext()):
+            traced = fn.trace(kd, csr_r, csr_c, tr, tc, cfg_key,
+                              n_cols, n_rows, ns, bi, up, vp, U0, V0,
+                              uu, uu, mesh=mesh)
+        dpos = (1, 2, 3, 4, 9, 10)
+    donated = _donated_labels(named, dpos) if donate else ()
+    must = tuple(lb for lb in ("U0", "V0") if lb in donated)
+    return TracedChain(traced=traced,
+                       param_labels=_flat_param_labels(named),
+                       donated_labels=donated, must_alias=must)

@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import analysis as LINT
 from repro.core import bmf as BMF
 from repro.core import distributed as DIST
 from repro.roofline import analysis as ROOF
@@ -188,10 +189,16 @@ def lower_pp_phase_2d(n_block: int, n_data: int, N: int, D: int, M: int,
     terms = ROOF.terms_from(jcost, hlo, n_block * n_data)
     # 'data'-axis rows in flattened mesh order: group g = [g*S, (g+1)*S)
     data_rows = [list(range(g * S, (g + 1) * S)) for g in range(B)]
+    # the confinement + per-comm-budget invariant now lives in the pass
+    # registry (analysis.hlo_passes); dryrun enrolls its lowering like
+    # any other artifact instead of hand-rolling the check
+    violations = LINT.analyze(LINT.HLOArtifact(
+        label=f"pp_phase_c_composed_2d[{comm}]", hlo_text=hlo, comm=comm,
+        allowed_groups=data_rows))
+    assert not violations, (
+        "composed executable fails the collective lint:\n"
+        + "\n".join(str(v) for v in violations))
     confinement = ROOF.collectives_confined_to_groups(hlo, data_rows)
-    assert confinement["n_crossing"] == 0, (
-        "composed executable has collectives crossing the 'block' axis: "
-        f"{confinement['crossing'][:5]}")
     return {
         "variant": "pp_phase_c_composed_2d",
         "comm": comm,

@@ -1,0 +1,281 @@
+import os
+import sys
+
+
+def _forced_device_count(argv) -> int:
+    """4-device default (covers the 2x2 composed topology); --topo B D
+    raises it. Must run before jax import, like bmf_dryrun."""
+    need = 4
+    if "--topo" in argv:
+        i = argv.index("--topo")
+        try:
+            need = max(need, int(argv[i + 1]) * int(argv[i + 2]))
+        except (IndexError, ValueError):
+            pass
+    return need
+
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               f"{_forced_device_count(sys.argv)}")
+
+"""bmf_lint — run the static invariant analyzer over the executor registry.
+
+For every executor in ``engine.EXECUTORS`` x a topology matrix (1x1 plus
+the composed --topo pair on a faked multi-device host), this lints:
+
+  * the executor's ACTUAL chain executables, traced at abstract shapes
+    through the ``gibbs.trace_chain`` / ``distributed.trace_chain_2d``
+    lowering hooks: materialization budget, dtype promotion, host
+    callbacks (jaxpr passes); collective confinement + per-comm-mode
+    budgets and donation effectiveness (HLO passes);
+  * a real mini PP run's dispatch/resolve trace (``record_trace=True``):
+    happens-before protocol and streaming window occupancy;
+  * the phase graph itself (cycles/unreachable/dangling deps) and the
+    partition+coalesce executable-shape plan (recompilation budget).
+
+Emits a machine-readable JSON report (one violation object per breach,
+with fix-hint text) and exits non-zero on any violation — the CI
+lint-invariants job gates on that.
+
+  python -m repro.launch.bmf_lint --all-executors [--topo 2 2]
+                                  [--json-out PATH]
+"""
+import argparse
+import json
+from pathlib import Path
+
+import jax
+
+from repro import analysis as LINT
+from repro.core import bmf as BMF
+from repro.core import distributed as DIST
+from repro.core import engine as ENG
+from repro.core import gibbs as GIBBS
+from repro.core import pp as PP
+from repro.core.partition import partition
+from repro.core.topology import Topology
+from repro.data import synthetic as SYN
+from repro.data.sparse import train_test_split
+
+OUT = Path(__file__).resolve().parents[3] / "benchmarks" / "bmf_lint_report.json"
+
+# abstract dims for the static lowerings: small enough to trace fast,
+# large enough that a materialized gather tensor (n*m*K) clears the
+# block-dim budget by >2x
+LINT_DIMS = dict(n_rows=64, n_cols=48, m_rows=16, m_cols=24, n_test=64)
+K = 8
+
+
+def _chain_artifacts(label, tchain, *, comm, allowed_groups, budget):
+    """Both artifact views of one lowered chain: the traced jaxpr and the
+    compiled HLO (plus the donation contract when the lowering donated)."""
+    with GIBBS._quiet_donation():
+        hlo = tchain.traced.lower().compile().as_text()
+    donated = tuple(tchain.donated_labels)
+    must = set(tchain.must_alias)
+    return [
+        LINT.JaxprArtifact(label=f"{label}/jaxpr", jaxpr=tchain.traced.jaxpr,
+                           bytes_budget=budget),
+        LINT.HLOArtifact(label=f"{label}/hlo", hlo_text=hlo, comm=comm,
+                         allowed_groups=allowed_groups,
+                         param_labels=tchain.param_labels,
+                         donated=donated, must_alias=tchain.must_alias,
+                         release_only=tuple(lb for lb in donated
+                                            if lb not in must)),
+    ]
+
+
+def static_artifacts(name, topo, cfg):
+    """The chain executables executor ``name`` dispatches on ``topo``,
+    traced through the core lowering hooks."""
+    d = LINT_DIMS
+    n, c, mr, mc, nt = (d["n_rows"], d["n_cols"], d["m_rows"], d["m_cols"],
+                        d["n_test"])
+    b1 = LINT.jaxpr_passes.materialization_budget(n, c, mr, mc, cfg.K)
+    arts = []
+
+    def single(lbl, **kw):
+        tc = GIBBS.trace_chain(cfg, n, c, mr, mc, nt, **kw)
+        return _chain_artifacts(lbl, tc, comm=None, allowed_groups=None,
+                                budget=b1)
+
+    def stacked(lbl, batch, **kw):
+        bb = LINT.jaxpr_passes.materialization_budget(n, c, mr, mc, cfg.K,
+                                                      batch=batch)
+        tc = GIBBS.trace_chain(cfg, n, c, mr, mc, nt, batch=batch, **kw)
+        return _chain_artifacts(lbl, tc, comm=None, allowed_groups=None,
+                                budget=bb)
+
+    def composed(lbl, topology, batch, comm, **kw):
+        S = topology.data
+        n_pad = ((n + S - 1) // S) * S
+        c_pad = ((c + S - 1) // S) * S
+        bb = LINT.jaxpr_passes.materialization_budget(
+            n_pad, c_pad * S, mr, mc, cfg.K, batch=batch)
+        groups = [list(range(g * S, (g + 1) * S))
+                  for g in range(topology.block)]
+        tc = DIST.trace_chain_2d(cfg, topology, n, c, mr, mc, nt,
+                                 batch=batch, comm=comm, **kw)
+        return _chain_artifacts(lbl, tc, comm=comm, allowed_groups=groups,
+                                budget=bb)
+
+    if name == "serial":
+        arts += single("serial/block_c")
+        arts += single("serial/block_a", u_prior=False, v_prior=False)
+    elif name == "stacked":
+        arts += stacked("stacked/bucket_c", batch=4, donate=True)
+    elif name == "sharded":
+        if topo.data == 1:
+            arts += stacked(f"sharded/bucket_c@{topo.block}x1",
+                            batch=max(topo.block, 1), donate=True,
+                            mesh=topo.block_mesh())
+        else:
+            for comm in DIST.COMM_MODES:
+                arts += composed(
+                    f"sharded/composed[{comm}]@{topo.block}x{topo.data}",
+                    topo, batch=topo.block, comm=comm,
+                    donate=(comm == "gather"))
+    elif name == "async":
+        arts += single("async/block_c_donated", donate=True)
+        if topo.data > 1:
+            gt = Topology(block=1, data=topo.data)
+            arts += composed(f"async/group_chain@1x{topo.data}", gt,
+                             batch=1, comm="gather", donate=True)
+    elif name == "streaming":
+        arts += stacked("streaming/window_chunk", batch=2, donate=True,
+                        prior_use=True)
+    return arts
+
+
+def behavioral_artifacts(name, topo, part, cfg, test, key):
+    """One real mini PP run with ``record_trace=True``: the executor's
+    trace + the phase graph + the executable-shape plan."""
+    kw = {}
+    if topo.n_devices > 1 and name in ("sharded", "async", "streaming"):
+        kw["topology"] = topo
+    if name == "streaming":
+        kw["window"] = 2
+    if name == "sharded" and topo.n_devices == 1:
+        kw["topology"] = Topology(block=1, data=1)
+    ex = ENG.make_executor(name, **kw)
+    ex.record_trace = True
+    PP.run_pp(key, part, cfg, test, executor=ex)
+
+    graph = ENG.build_phase_graph(part)
+    deps = {t.coord: list(t.deps) for _, ts in graph for t in ts}
+    bound = peak = None
+    if name == "streaming":
+        G = max(1, ex.topology.block if ex.topology is not None else 1)
+        bound = G * ex.window * (ex.depth + 1)
+        peak = ex.peak_window_blocks
+    label = f"{name}@{topo.block}x{topo.data}"
+    return [
+        LINT.TraceArtifact(label=f"{label}/trace", trace=list(ex.trace),
+                           deps=deps, window_bound=bound,
+                           reported_peak=peak),
+        LINT.GraphArtifact(label=f"{label}/phase-graph", deps=deps),
+        LINT.PlanArtifact(label=f"{label}/plan",
+                          signatures=plan_signatures(name, part, test, cfg)),
+    ]
+
+
+def plan_signatures(name, part, test, cfg):
+    """Distinct executable shapes the partition implies for this executor:
+    per phase-tag buckets (serial/stacked/sharded/async compile one chain
+    per tag), or the coalesced window buckets (streaming's prior-use
+    flags make its executable tag-agnostic)."""
+    from repro.core.engine import apply_permutation
+    test_p = apply_permutation(test, part.row_perm, part.col_perm)
+    shapes = PP.BlockShapes.per_phase(part, test_p)
+    if name == "streaming":
+        merged = PP.BlockShapes.coalesce(shapes, cfg.K, max_waste=1.0)
+        return sorted({s.astuple() for s in merged.values()})
+    return sorted((tag, s.astuple()) for tag, s in shapes.items())
+
+
+def lint_executor(name, topo, part, cfg, test, key):
+    arts = static_artifacts(name, topo, cfg)
+    arts += behavioral_artifacts(name, topo, part, cfg, test, key)
+    violations = []
+    for a in arts:
+        violations += LINT.analyze(a)
+    return {
+        "executor": name,
+        "topology": [topo.block, topo.data],
+        "artifacts": [a.label for a in arts],
+        "violations": [v.as_dict() for v in violations],
+    }, violations
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="static invariant lint over the executor registry")
+    ap.add_argument("--all-executors", action="store_true",
+                    help="lint every executor in engine.EXECUTORS")
+    ap.add_argument("--executors", nargs="*", default=None,
+                    help="subset of executor names to lint")
+    ap.add_argument("--topo", type=int, nargs=2, default=(2, 2),
+                    metavar=("BLOCK", "DATA"),
+                    help="composed topology linted in addition to 1x1 "
+                         "(needs BLOCK*DATA faked devices)")
+    ap.add_argument("--json-out", type=Path, default=OUT)
+    args = ap.parse_args(argv)
+
+    names = sorted(ENG.EXECUTORS) if (args.all_executors
+                                      or not args.executors) \
+        else list(args.executors)
+    for nm in names:
+        if nm not in ENG.EXECUTORS:
+            ap.error(f"unknown executor {nm!r}")
+
+    topos = [Topology(block=1, data=1)]
+    tb, td = args.topo
+    if (tb, td) != (1, 1):
+        if tb * td > jax.device_count():
+            print(f"[bmf_lint] skipping {tb}x{td}: needs {tb * td} devices, "
+                  f"have {jax.device_count()}")
+        else:
+            topos.append(Topology(block=tb, data=td))
+
+    coo, p = SYN.generate("mini", seed=13)
+    train, test = train_test_split(coo, 0.15, seed=14)
+    cfg = BMF.BMFConfig(K=p.K, n_samples=5, burnin=1)
+    part = partition(train, 3, 3)          # covers all four phase tags
+    key = jax.random.key(5)
+
+    runs, all_violations = [], []
+    for topo in topos:
+        for name in names:
+            rec, vs = lint_executor(name, topo, part, cfg, test, key)
+            runs.append(rec)
+            all_violations += vs
+            print(f"[bmf_lint] {name}@{topo.block}x{topo.data}: "
+                  f"{len(rec['artifacts'])} artifact(s), "
+                  f"{len(vs)} violation(s)")
+
+    report = {
+        "executors": names,
+        "topologies": [[t.block, t.data] for t in topos],
+        "passes": [{"name": pz.name, "kind": pz.kind, "doc": pz.doc}
+                   for pz in LINT.passes()],
+        "runs": runs,
+        "n_violations": len(all_violations),
+    }
+    args.json_out.parent.mkdir(parents=True, exist_ok=True)
+    args.json_out.write_text(json.dumps(report, indent=1))
+    print(f"-> {args.json_out}")
+    if all_violations:
+        print(f"[bmf_lint] {len(all_violations)} violation(s):")
+        for v in all_violations:
+            print(str(LINT.Violation(**{
+                "pass_name": v.pass_name, "artifact": v.artifact,
+                "message": v.message, "fix_hint": v.fix_hint})))
+        return 1
+    print(f"[bmf_lint] OK: {len(runs)} executor/topology runs, "
+          f"zero violations")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

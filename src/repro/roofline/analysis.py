@@ -239,17 +239,27 @@ def collectives_confined_to_groups(hlo_text: str, allowed_groups) -> Dict:
             "n_confined": n - len(crossing), "crossing": crossing}
 
 
-def collective_bytes(hlo_text: str) -> Dict[str, float]:
-    """Graph-walked collective bytes + op counts (flat, for reporting)."""
-    g = collective_bytes_graph(hlo_text)
-    flat_counts = {f"n_{k}": 0 for k in _COLLECTIVE_OPS}
+def collective_counts(hlo_text: str) -> Dict[str, int]:
+    """Flat per-kind collective instruction counts ({op: n}, zero-count
+    kinds omitted). The sweep body appears once in HLO text, so for the
+    chain executables a flat count IS the per-sweep count — this is what
+    the analysis layer's per-comm-mode collective budgets check against."""
+    counts: Dict[str, int] = {}
     for line in hlo_text.splitlines():
         op, _ = _line_op_and_shape(line)
         if op is None:
             continue
         base = op[:-len("-start")] if op.endswith("-start") else op
         if base in _COLLECTIVE_OPS:
-            flat_counts[f"n_{base}"] += 1
+            counts[base] = counts.get(base, 0) + 1
+    return counts
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Graph-walked collective bytes + op counts (flat, for reporting)."""
+    g = collective_bytes_graph(hlo_text)
+    flat = collective_counts(hlo_text)
+    flat_counts = {f"n_{k}": flat.get(k, 0) for k in _COLLECTIVE_OPS}
     return {**g, **flat_counts}
 
 

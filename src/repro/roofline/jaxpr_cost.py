@@ -159,6 +159,23 @@ def traced_cost(jitted, *args) -> Dict[str, float]:
     return jaxpr_cost(tr.jaxpr)
 
 
+def iter_eqns(jaxpr):
+    """Yield every eqn in a (closed) jaxpr, recursing into sub-jaxprs
+    hiding in eqn params (scan/while bodies, cond branches, pjit
+    sub-jaxprs, pallas kernel jaxprs) — the traversal the dtype and
+    host-callback lint passes run on."""
+    from jax.core import ClosedJaxpr, Jaxpr
+
+    if hasattr(jaxpr, "jaxpr"):
+        jaxpr = jaxpr.jaxpr
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for p in eqn.params.values():
+            for q in (p if isinstance(p, (list, tuple)) else [p]):
+                if isinstance(q, (ClosedJaxpr, Jaxpr)):
+                    yield from iter_eqns(q)
+
+
 def iter_avals(jaxpr):
     """Yield every aval appearing anywhere in a (closed) jaxpr — eqn
     in/outvars plus all sub-jaxprs hiding in eqn params (scan bodies,

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import guards as GUARDS
 from repro.core import bmf as BMF
 from repro.core import engine as ENG
 from repro.core import pp as PP
@@ -187,14 +188,14 @@ def test_fake_delay_completion_order(conf_run, results, name, seed):
 def test_aggregation_transfer_guard_clean(conf_run, results, name,
                                           monkeypatch):
     """The divide-away aggregation must see device-resident posteriors:
-    run it under transfer_guard('disallow') (the executable is warm from
+    run it under guards.no_host_transfers() (the executable is warm from
     the cached run, so any failure is a genuine host round-trip)."""
     part, cfg, test, key, _ = conf_run
     results(name)                              # warm the executables
     orig = PP._aggregate_axis
 
     def guarded(p, posts, axis):
-        with jax.transfer_guard("disallow"):
+        with GUARDS.no_host_transfers():
             return orig(p, posts, axis)
 
     monkeypatch.setattr(PP, "_aggregate_axis", guarded)
@@ -213,6 +214,7 @@ COMPOSED_SCRIPT = textwrap.dedent("""
     import json
     import jax
     import numpy as np
+    from repro.analysis import guards as GUARDS
     from repro.core import bmf as BMF, engine as ENG, pp as PP
     from repro.core.partition import partition
     from repro.core.topology import Topology
@@ -229,7 +231,7 @@ COMPOSED_SCRIPT = textwrap.dedent("""
 
     orig_agg = PP._aggregate_axis
     def guarded(p_, posts, axis):
-        with jax.transfer_guard("disallow"):
+        with GUARDS.no_host_transfers():
             return orig_agg(p_, posts, axis)
 
     execs = {

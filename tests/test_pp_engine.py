@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import guards as GUARDS
 from repro.core import bmf as BMF
 from repro.core import engine as ENG
 from repro.core import gibbs as GIBBS
@@ -493,7 +494,7 @@ def _device_posts(rng, I, J, n, k):
 
 def test_aggregate_axis_no_host_transfers():
     """_aggregate_axis is ONE jitted reduction over device-resident
-    posteriors: running it under jax.transfer_guard('disallow') proves no
+    posteriors: running it under analysis.guards.no_host_transfers() proves no
     host round-trip happens mid-run (any implicit device↔host copy would
     raise)."""
     rng = np.random.default_rng(7)
@@ -501,7 +502,7 @@ def test_aggregate_axis_no_host_transfers():
     part = types.SimpleNamespace(I=I, J=J)
     posts = _device_posts(rng, I, J, n, k)
     jax.block_until_ready(PP._aggregate_axis(part, posts, axis="row"))  # warm
-    with jax.transfer_guard("disallow"):
+    with GUARDS.no_host_transfers():
         agg = PP._aggregate_axis(part, posts, axis="row")
     jax.block_until_ready(agg)
     assert isinstance(agg.eta, jax.Array)
