@@ -162,10 +162,10 @@ def make_skewed(p: SYN.DatasetPreset, I: int, J: int, skew: float,
                n_rows=p.n_rows, n_cols=p.n_cols)
 
 
-def fault_setup(mode: str, part):
+def fault_setup(mode: str, part, topology=None):
     """(fault_plan, fault_policy) for one --faults mode. Deterministic by
-    construction (engine.FaultPlan is a pure function of coord/attempt),
-    so faulted timings are reproducible run to run."""
+    construction (engine.FaultPlan is a pure function of coord/attempt or
+    group/ordinal), so faulted timings are reproducible run to run."""
     from repro.core import engine as ENG
     if mode == "off":
         return None, None
@@ -173,6 +173,27 @@ def fault_setup(mode: str, part):
     if mode == "nan":
         # one NaN-poisoned chain: health guard trips, one retry heals it
         return ENG.FaultPlan(nan_at={c: 1}), None
+    if mode in ("group-dead", "group-slow"):
+        # group-level injection targets the LAST device group; needs >= 2
+        # groups to rebalance/speculate onto (inert otherwise — barrier
+        # executors and 1-group runs report zero group events)
+        G = topology.block if topology is not None else 1
+        if G < 2:
+            return None, None
+        g = G - 1
+        if mode == "group-dead":
+            # the group's first dispatch stays healthy (compile +
+            # calibration), then the group dies: after quarantine_after
+            # consecutive expiries it is drained and its share rebalances
+            return (ENG.FaultPlan(group_dead_at={g: 1}),
+                    ENG.FaultPolicy(timeout_floor_s=8.0, timeout_slack=10.0,
+                                    quarantine_after=2, max_retries=8))
+        # the group lags 4x the watchdog floor: no expiry (generous
+        # floor), but the per-group rate model flags the stragglers and
+        # speculative twins on the healthy groups win resolution
+        return (ENG.FaultPlan(group_slow_at={g: (1, 4.0)}),
+                ENG.FaultPolicy(timeout_floor_s=60.0, timeout_slack=0.0,
+                                speculate_at=2.0))
     # one hung dispatch: the watchdog re-dispatches after its deadline.
     # Only the async/streaming poll loops can hang — barrier executors
     # report zero fault events here, which the record makes visible.
@@ -186,7 +207,7 @@ def run_one(executor: str, key, part, cfg, test, repeats: int,
     # the serial/stacked references are placement-free; topology composes
     # with the sharded/async/streaming executors
     topo = topology if executor in ("sharded", "async", "streaming") else None
-    plan, policy = fault_setup(faults, part)
+    plan, policy = fault_setup(faults, part, topo)
     kw = dict(executor=executor, window=window, topology=topo,
               fault_plan=plan, fault_policy=policy)
     runs = []
@@ -214,6 +235,10 @@ def run_one(executor: str, key, part, cfg, test, repeats: int,
         rec["faults"] = faults
         rec["n_fault_events"] = len(timed[0].faults)
         rec["n_retries"] = timed[0].n_retries
+        if faults.startswith("group"):
+            # quarantine/steal/speculate/cancel counters from the elastic
+            # scheduler (PPResult.group_stats)
+            rec["group_stats"] = timed[0].group_stats
     if executor == "streaming":
         rec["window"] = window
         if topo is not None:
@@ -263,11 +288,16 @@ def main():
                     choices=["serial", "stacked", "sharded", "async",
                              "streaming"])
     ap.add_argument("--faults", default="off",
-                    choices=["off", "nan", "hang"],
+                    choices=["off", "nan", "hang", "group-dead",
+                             "group-slow"],
                     help="deterministic fault injection: 'nan' poisons one "
                          "block's chain (health guard + retry), 'hang' "
                          "suppresses one dispatch's completion (watchdog "
-                         "re-dispatch; async/streaming only). 'off' runs "
+                         "re-dispatch; async/streaming only), 'group-dead' "
+                         "kills the last device group after its first "
+                         "dispatch (quarantine + rebalance; needs "
+                         "--topology B D with B >= 2), 'group-slow' lags "
+                         "it 4x (speculative re-dispatch). 'off' runs "
                          "clean and measures the guard's zero-fault "
                          "overhead")
     ap.add_argument("--json-out", default=None)

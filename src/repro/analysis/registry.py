@@ -126,12 +126,15 @@ Coord = Tuple[int, int]
 @dataclass
 class TraceArtifact:
     """An executor's recorded event trace plus the dep map it ran
-    against. Events: dispatch | expire | redispatch | resolve (the
-    engine's extended schema). ``window_bound`` is the streaming
-    occupancy cap G*W*(depth+1); ``reported_peak`` the executor's own
-    realized high-water mark (``peak_window_blocks``)."""
+    against. Entries are ``(event, coord)`` or ``(event, coord, group)``
+    — overlapped executors tag every event with the device group that
+    observed it. Events: dispatch | expire | redispatch | resolve plus
+    the elastic group-fault events quarantine | steal | speculate |
+    cancel. ``window_bound`` is the streaming occupancy cap
+    G*W*(depth+1); ``reported_peak`` the executor's own realized
+    high-water mark (``peak_window_blocks``)."""
     label: str
-    trace: Sequence[Tuple[str, Coord]]
+    trace: Sequence[Tuple]
     deps: Dict[Coord, Sequence[Coord]]
     window_bound: Optional[int] = None
     reported_peak: Optional[int] = None

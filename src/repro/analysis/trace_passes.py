@@ -1,16 +1,31 @@
 """Dispatch/resolve-trace passes and phase-graph validation.
 
-The executor trace schema (``engine.Executor``):
+The executor trace schema (``engine.Executor``). Barrier executors
+record ``(event, coord)`` pairs; overlapped executors (async,
+streaming) tag every event with the device group that observed it,
+``(event, coord, group)``:
 
-  ("dispatch", c)    the block's chain was handed to the device queue
-  ("expire", c)      the watchdog expired the in-flight attempt
-  ("redispatch", c)  the expired attempt was re-dispatched (same keys)
-  ("resolve", c)     the block's outcome passed the commit guard
+  ("dispatch", c[, g])    the block's chain was handed to the queue
+  ("expire", c[, g])      the watchdog expired the in-flight attempt
+  ("redispatch", c[, g])  the expired attempt was re-dispatched
+  ("resolve", c[, g])     the block's outcome passed the commit guard
+  ("quarantine", c, g)    group g drained after repeated expiries
+                          (c is the triggering coord)
+  ("steal", c, g)         idle group g re-staged the staged block c
+                          from the most-loaded group
+  ("speculate", c, g)     straggler hedge: c redundantly dispatched
+                          to idle group g under the same attempt-0 key
+  ("cancel", c, g)        one side of a speculative twin pair was
+                          discarded (loser, expiry, or quarantine)
 
 Happens-before contract per coord: dispatch first; every dep resolved
-before it; expire only while in flight; redispatch only after an expire;
-exactly one resolve, last. An expire followed directly by resolve is the
-degraded/terminal-retire path and is legal.
+before it; expire only while in flight; redispatch only after an
+expire; exactly one resolve, last. An expire followed directly by
+resolve is the degraded/terminal-retire path and is legal. Group-level
+contract: nothing dispatches to (or steals onto) a quarantined group;
+a speculate must twin a block that is in flight, and the pair must be
+collapsed by a cancel before the block may resolve; steal targets must
+be staged, not in flight.
 """
 from __future__ import annotations
 
@@ -21,7 +36,15 @@ from repro.analysis.registry import (GraphArtifact, Pass, TraceArtifact,
 
 Coord = Tuple[int, int]
 
-_EVENTS = ("dispatch", "expire", "redispatch", "resolve")
+_EVENTS = ("dispatch", "expire", "redispatch", "resolve",
+           "quarantine", "steal", "speculate", "cancel")
+
+
+def _entries(trace):
+    """Normalize (ev, c) / (ev, c, g) entries to (ev, c, g-or-None)."""
+    for entry in trace:
+        ev, c = entry[0], entry[1]
+        yield ev, c, (entry[2] if len(entry) > 2 else None)
 
 
 def _happens_before(art: TraceArtifact) -> List[Violation]:
@@ -29,35 +52,91 @@ def _happens_before(art: TraceArtifact) -> List[Violation]:
     dispatched: Set[Coord] = set()
     resolved: Set[Coord] = set()
     expired: Set[Coord] = set()
+    inflight: Dict[Coord, int] = {}
+    twins: Dict[Coord, int] = {}        # open speculative pairs per coord
+    quarantined: Set[int] = set()
 
     def bad(msg, hint):
         out.append(Violation("happens-before", art.label, msg, hint))
 
-    for ev, c in art.trace:
+    def check_group(ev, c, g):
+        if g is not None and g in quarantined:
+            bad(f"{c} {ev} to quarantined group {g}",
+                "a quarantined group is drained and must receive no "
+                "further work — route dispatch/steal/speculation "
+                "through health.healthy() only")
+
+    for ev, c, g in _entries(art.trace):
         if ev == "dispatch":
             if c in dispatched:
                 bad(f"{c} dispatched twice without an intervening expire",
                     "re-dispatch must go through the watchdog protocol: "
-                    "record ('expire', c) before the second attempt")
+                    "record ('expire', c) before the second attempt "
+                    "(a quarantine-released STAGED block was never "
+                    "dispatched, so its later launch is a first "
+                    "dispatch)")
             missing = [d for d in art.deps.get(c, ()) if d not in resolved]
             if missing:
                 bad(f"{c} dispatched before dep(s) {missing} resolved",
                     "a block's propagated priors come from its deps — "
                     "gate dispatch on _dep_state readiness, never on "
                     "phase position alone")
+            check_group(ev, c, g)
             dispatched.add(c)
+            inflight[c] = inflight.get(c, 0) + 1
         elif ev == "expire":
-            if c not in dispatched or c in resolved:
+            if not inflight.get(c) or c in resolved:
                 bad(f"{c} expired while not in flight",
                     "the watchdog may only expire a dispatched, "
                     "unresolved attempt")
+            inflight[c] = max(0, inflight.get(c, 0) - 1)
             expired.add(c)
         elif ev == "redispatch":
             if c not in expired:
                 bad(f"{c} redispatched without an expired attempt",
                     "watchdog re-dispatch must be totally ordered with "
                     "the expiry it replaces: record ('expire', c) first")
+            check_group(ev, c, g)
             expired.discard(c)
+            inflight[c] = inflight.get(c, 0) + 1
+        elif ev == "speculate":
+            if not inflight.get(c):
+                bad(f"{c} speculated while not in flight",
+                    "speculative re-dispatch hedges a LIVE straggler — "
+                    "twin only blocks with an unresolved in-flight "
+                    "attempt")
+            check_group(ev, c, g)
+            inflight[c] = inflight.get(c, 0) + 1
+            twins[c] = twins.get(c, 0) + 1
+        elif ev == "cancel":
+            if not twins.get(c):
+                bad(f"{c} cancelled without an open speculative twin",
+                    "cancel collapses a speculate pair — record "
+                    "('speculate', c, g) before either side may cancel")
+            twins[c] = max(0, twins.get(c, 0) - 1)
+            inflight[c] = max(0, inflight.get(c, 0) - 1)
+        elif ev == "steal":
+            if inflight.get(c):
+                bad(f"{c} stolen while in flight",
+                    "steal targets must be STAGED blocks — an in-flight "
+                    "block's handles live on the victim group and "
+                    "cannot move; wait for expiry or speculation")
+            if c in resolved:
+                bad(f"{c} stolen after resolving",
+                    "a resolved block has left the scheduler — the "
+                    "steal scanned a stale staged slot")
+            check_group(ev, c, g)
+        elif ev == "quarantine":
+            if g is None:
+                bad(f"quarantine event for {c} carries no group",
+                    "quarantine is a group-level event: record "
+                    "('quarantine', trigger_coord, g)")
+            elif g in quarantined:
+                bad(f"group {g} quarantined twice",
+                    "a quarantined group stays quarantined — "
+                    "note_expiry must not re-trip on a drained group")
+            else:
+                quarantined.add(g)
         elif ev == "resolve":
             if c not in dispatched:
                 bad(f"{c} resolved without a dispatch",
@@ -68,7 +147,13 @@ def _happens_before(art: TraceArtifact) -> List[Violation]:
                 bad(f"{c} resolved twice",
                     "double commit: the commit guard must run exactly "
                     "once per block")
+            if twins.get(c):
+                bad(f"{c} resolved with an open speculative twin",
+                    "a speculative resolve must cancel its twin: record "
+                    "('cancel', c, loser_group) for the losing side "
+                    "before committing the deterministic winner")
             expired.discard(c)     # terminal retire of an expired attempt
+            inflight[c] = max(0, inflight.get(c, 0) - 1)
             resolved.add(c)
         else:
             bad(f"unknown trace event {ev!r} for {c}",
@@ -83,6 +168,10 @@ def _happens_before(art: TraceArtifact) -> List[Violation]:
             f"retired",
             "an expiry must be followed by a redispatch or a terminal "
             "retire before the run ends")
+    for c in sorted(k for k, n in twins.items() if n):
+        bad(f"{c} left with an uncollapsed speculative twin",
+            "every speculate pair must end in exactly one cancel — the "
+            "run finished with both twins still live")
     return out
 
 
@@ -90,7 +179,8 @@ register(Pass(
     "happens-before", "trace",
     "every dep resolves before its dependent dispatches; watchdog "
     "re-dispatch is totally ordered with the expired attempt; every "
-    "block resolves exactly once",
+    "block resolves exactly once; no work reaches a quarantined group; "
+    "speculative twins collapse via cancel; steal targets are staged",
     _happens_before))
 
 
@@ -98,14 +188,14 @@ def _window_occupancy(art: TraceArtifact) -> List[Violation]:
     if art.window_bound is None:
         return []
     out = []
-    live: Set[Coord] = set()
+    live: Dict[Coord, int] = {}
     peak = 0
-    for ev, c in art.trace:
-        if ev in ("dispatch", "redispatch"):
-            live.add(c)
-        elif ev == "resolve":
-            live.discard(c)
-        peak = max(peak, len(live))
+    for ev, c, _ in _entries(art.trace):
+        if ev in ("dispatch", "redispatch", "speculate"):
+            live[c] = live.get(c, 0) + 1
+        elif ev in ("resolve", "expire", "cancel"):
+            live[c] = max(0, live.get(c, 0) - 1)
+        peak = max(peak, sum(live.values()))
     if peak > art.window_bound:
         out.append(Violation(
             "window-occupancy", art.label,

@@ -96,8 +96,11 @@ class PPCheckpoint:
     Layout: one ``block_{i}_{j}.npz`` per resolved block holding the
     trimmed ``RowGaussians`` natural parameters (U_eta/U_Lambda/V_eta/
     V_Lambda), the block's test squared error and observation count, plus
-    a ``meta.json`` describing the run (grid, K, chain config, PRNG key,
-    topology). The resolved-set IS the set of complete block files — no
+    a ``meta.json`` describing the run IDENTITY only (grid, K, chain
+    config, PRNG key — deliberately NOT the executor or topology: block
+    posteriors are placement-independent, so a run checkpointed on a
+    4x1 topology legitimately resumes on 2x2 and stays bitwise
+    identical). The resolved-set IS the set of complete block files — no
     separate index to keep consistent, and each file is written atomically
     (``_atomic_savez``), so a run killed at ANY instant leaves a valid
     resumable directory.

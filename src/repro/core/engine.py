@@ -127,6 +127,18 @@ class BlockFaultError(RuntimeError):
     ``FaultPolicy.on_fault == 'raise'``."""
 
 
+class TopologyDegradedError(RuntimeError):
+    """Quarantines shrank the usable device-group set below
+    ``FaultPolicy.min_groups`` (or to zero healthy groups). Raised AFTER
+    flushing any active checkpoint, so the run is immediately resumable
+    on a different topology. ``dead_groups`` names the quarantined
+    groups in canonical order."""
+
+    def __init__(self, msg: str, dead_groups: Sequence[int] = ()):
+        super().__init__(msg)
+        self.dead_groups: Tuple[int, ...] = tuple(dead_groups)
+
+
 class _InjectedDispatchFailure(RuntimeError):
     """Raised by the FaultPlan seam to simulate a dispatch-time failure
     (device OOM, dead runtime) — handled exactly like the real thing."""
@@ -170,6 +182,28 @@ class FaultPolicy:
       bitwise-identical numbers); budget exhaustion degrades/raises.
       watchdog=False restores the legacy block-on-oldest fallback, which
       deadlocks if the oldest in-flight block died — keep it on.
+
+    Group fault domain (active when the executor's topology has >1 device
+    group; with one group there is nowhere to rebalance to):
+
+    quarantine_after: a group whose dispatches expire this many
+      CONSECUTIVE times is quarantined — drained, never dispatched to
+      again this run; its staged share and in-flight blocks rebalance
+      onto healthy groups under the same keys (a group fault consumes no
+      block retry budget — the blocks did nothing wrong).
+    speculate_at: straggler hedge — when a dispatch has been in flight
+      longer than ``speculate_at × rate(group) × est`` (the group's OWN
+      calibrated rate), the block is redundantly dispatched to an idle
+      healthy group with the same attempt-0 key. Twins are bitwise
+      identical by construction; resolution commits a deterministic
+      winner (canonical group order, not wall-clock first) and cancels
+      the other. 0 disables speculation (the default).
+    min_groups: quarantines that leave fewer healthy groups than this
+      trigger graceful degradation: the checkpoint (if any) is flushed,
+      then the run either continues on the survivors or raises
+      ``TopologyDegradedError`` naming the dead groups, per
+      ``on_group_fault`` ("continue" | "raise"). Zero healthy groups
+      always raises.
     """
     on_fault: str = "raise"
     max_retries: int = 2
@@ -178,6 +212,10 @@ class FaultPolicy:
     watchdog: bool = True
     timeout_floor_s: float = 60.0
     timeout_slack: float = 10.0
+    quarantine_after: int = 3
+    speculate_at: float = 0.0
+    min_groups: int = 1
+    on_group_fault: str = "raise"
 
     def __post_init__(self):
         if self.on_fault not in ("raise", "degrade"):
@@ -186,6 +224,18 @@ class FaultPolicy:
         if int(self.max_retries) < 0:
             raise ValueError(f"max_retries must be >= 0, "
                              f"got {self.max_retries}")
+        if self.on_group_fault not in ("raise", "continue"):
+            raise ValueError(f"on_group_fault must be 'raise' or "
+                             f"'continue', got {self.on_group_fault!r}")
+        if int(self.quarantine_after) < 1:
+            raise ValueError(f"quarantine_after must be >= 1, "
+                             f"got {self.quarantine_after}")
+        if int(self.min_groups) < 1:
+            raise ValueError(f"min_groups must be >= 1, "
+                             f"got {self.min_groups}")
+        if float(self.speculate_at) < 0:
+            raise ValueError(f"speculate_at must be >= 0 (0 disables), "
+                             f"got {self.speculate_at}")
 
 
 @dataclass(frozen=True)
@@ -208,10 +258,27 @@ class FaultPlan:
     fail_dispatch_at: dispatching the block raises — exercised at every
       executor's dispatch site (serial call, stacked bucket assembly,
       async dispatch, streaming chunk formation).
+
+    Group-level injections key on the GROUP and its per-group dispatch
+    ordinal (``PhaseContext.next_group_ordinal``) instead of (coord,
+    attempt) — they model a device row going bad partway through a run,
+    independent of which blocks happen to land on it. Both act at the
+    completion-observation seam (the device work is untouched), the real
+    surface the watchdog / quarantine / speculation layers react to:
+
+    group_dead_at: ``{group: n}`` — the group's n-th and later dispatches
+      are never observed complete (a dead group: every dispatch expires
+      until the group is quarantined).
+    group_slow_at: ``{group: (n, slow_s)}`` — from the group's n-th
+      dispatch on, completion is withheld for ``slow_s`` seconds after
+      dispatch (a straggler group: alive, just late — the speculation
+      target).
     """
     nan_at: Dict[Coord, int] = field(default_factory=dict)
     hang_at: Dict[Coord, int] = field(default_factory=dict)
     fail_dispatch_at: Dict[Coord, int] = field(default_factory=dict)
+    group_dead_at: Dict[int, int] = field(default_factory=dict)
+    group_slow_at: Dict[int, Tuple[int, float]] = field(default_factory=dict)
 
     def nan(self, c: Coord, attempt: int) -> bool:
         return attempt < self.nan_at.get(tuple(c), 0)
@@ -222,15 +289,31 @@ class FaultPlan:
     def fail(self, c: Coord, attempt: int) -> bool:
         return attempt < self.fail_dispatch_at.get(tuple(c), 0)
 
+    def group_dead(self, g: int, ordinal: int) -> bool:
+        n = self.group_dead_at.get(int(g))
+        return n is not None and ordinal >= int(n)
+
+    def group_slow_s(self, g: int, ordinal: int) -> float:
+        ent = self.group_slow_at.get(int(g))
+        if ent is None:
+            return 0.0
+        n, slow = ent
+        return float(slow) if ordinal >= int(n) else 0.0
+
 
 @dataclass(frozen=True)
 class FaultRecord:
     """One ledger entry in ``PPResult.faults``: what went wrong with which
-    block at which attempt, and what the engine did about it."""
+    block at which attempt, and what the engine did about it. kind
+    "group" entries record the group fault domain: action "quarantined"
+    marks the block whose expiry tripped a group's quarantine, and
+    "rebalanced" each in-flight block moved off the quarantined group
+    (no retry budget consumed — the block did nothing wrong)."""
     coord: Coord
-    kind: str        # "nonfinite" | "rmse" | "dispatch" | "timeout"
+    kind: str        # "nonfinite" | "rmse" | "dispatch" | "timeout" | "group"
     attempt: int
     action: str      # "retried" | "redispatched" | "degraded" | "raised"
+    #                  | "quarantined" | "rebalanced"
 
 
 @dataclass(frozen=True)
@@ -295,6 +378,9 @@ class PhaseContext:
     faults: List[FaultRecord] = field(default_factory=list)
     ckpt: Optional[object] = None        # checkpoint.ckpt.PPCheckpoint
     resumed: Dict[Coord, "BlockOutcome"] = field(default_factory=dict)
+    # per-group dispatch counters — the ordinals the group-level fault
+    # injections (FaultPlan.group_dead_at / group_slow_at) key on
+    group_dispatches: Dict[int, int] = field(default_factory=dict)
 
     def block_cfg(self, task: BlockTask) -> BMF.BMFConfig:
         """Reduced chains for phases b/c when cfg.phase_bc_samples is set
@@ -336,6 +422,27 @@ class PhaseContext:
             raise _InjectedDispatchFailure(
                 f"injected dispatch failure for block {c} "
                 f"(attempt {self.cur_attempt(c)})")
+
+    def next_group_ordinal(self, g: int) -> int:
+        """Bump-and-return group ``g``'s dispatch ordinal (0-based) — one
+        per chunk/block dispatch landing on the group."""
+        n = self.group_dispatches.get(int(g), 0)
+        self.group_dispatches[int(g)] = n + 1
+        return n
+
+    def group_suppressed_until(self, g: int, ordinal: int,
+                               td: float) -> float:
+        """Group-level injection verdict for one dispatch: 0.0 = healthy,
+        ``inf`` = the group is dead (completion never observed), else the
+        wall-clock time before which completion is withheld
+        (``group_slow_at``). Applied at the completion-observation seam,
+        like ``is_hung``."""
+        if self.fault_plan is None:
+            return 0.0
+        if self.fault_plan.group_dead(g, ordinal):
+            return float("inf")
+        slow = self.fault_plan.group_slow_s(g, ordinal)
+        return td + slow if slow else 0.0
 
     def record_fault(self, c: Coord, kind: str, action: str):
         self.faults.append(FaultRecord(coord=c, kind=kind,
@@ -442,6 +549,14 @@ def _run_block_attempt(ctx: PhaseContext, task: BlockTask,
     blk = ctx.part.block(task.i, task.j)
     s = ctx.shapes[task.phase]
     up, vp = ctx.priors(task)
+    # the parent posteriors committed wherever their dispatches resolved,
+    # which on a multi-group topology can be two different devices; the
+    # retry chain is one single-device executable, so colocate them on
+    # the default device (a pure transfer — bitwise-neutral, and the
+    # same placement the serial executor uses)
+    d0 = jax.devices()[0]
+    up = jax.device_put(up, d0) if up is not None else None
+    vp = jax.device_put(vp, d0) if vp is not None else None
     csr_r, csr_c, tr, tc, tv, tmask, up_p, vp_p = PP.pad_block_inputs(
         blk, s, ctx.cfg.K, ctx.test_p, up, vp,
         poison_nan=(ctx.fault_plan is not None
@@ -533,27 +648,54 @@ class Executor:
     """Runs the PP phase graph; subclasses choose the schedule.
 
     Every executor records an optional event trace (``record_trace=True``):
-    (event, coord) pairs appended in real order. "dispatch" means the
-    block's chain was handed to the runtime (its priors were read),
-    "resolve" means its results were observed complete. Watchdog paths add
-    two more events — "expire" (the in-flight attempt hit its deadline and
-    its handles were dropped) and "redispatch" (the expired attempt was
-    re-dispatched under the same keys) — so a fault-free run is always
-    dispatch/resolve pairs and a timeout is totally ordered as
-    dispatch < expire < redispatch < resolve (an expire followed directly
-    by a terminal resolve is the degraded/exhausted-budget path). The
-    conformance suite (tests/test_executor_conformance.py) asserts on this
-    trace that no executor ever dispatches a block before its dependencies
-    resolved, and the analyzer's happens-before pass
-    (repro.analysis.trace_passes) checks the full protocol — new executors
-    get both for free by reporting honestly.
+    (event, coord) or (event, coord, group) entries appended in real
+    order — the overlapped executors (async/streaming) attribute every
+    event to the device group it happened on; barrier executors have no
+    group concept and emit 2-tuples. "dispatch" means the block's chain
+    was handed to the runtime (its priors were read), "resolve" means its
+    results were observed complete. Watchdog paths add "expire" (the
+    in-flight attempt hit its deadline and its handles were dropped) and
+    "redispatch" (the expired attempt was re-dispatched under the same
+    keys) — so a fault-free run is always dispatch/resolve pairs and a
+    timeout is totally ordered as dispatch < expire < redispatch <
+    resolve (an expire followed directly by a terminal resolve is the
+    degraded/exhausted-budget path). The group fault domain adds four
+    more (all group-attributed):
+
+      "quarantine"  the group crossed ``quarantine_after`` consecutive
+                    expiries and was drained (coord = the trigger block);
+                    no dispatch may target it afterwards;
+      "steal"       an idle healthy group took this staged (not yet
+                    dispatched) block from the most-loaded group — the
+                    next dispatch of the coord runs on the thief;
+      "speculate"   a straggling in-flight block was redundantly
+                    dispatched to this idle group under the same
+                    attempt-0 key (its twin);
+      "cancel"      one side of a twin pair was dropped — every
+                    speculative pair ends in exactly one resolve and one
+                    cancel (the deterministic canonical-group winner
+                    commits; wall-clock order does not).
+
+    The conformance suite (tests/test_executor_conformance.py) asserts on
+    this trace that no executor ever dispatches a block before its
+    dependencies resolved, and the analyzer's happens-before pass
+    (repro.analysis.trace_passes) checks the full protocol — new
+    executors get both for free by reporting honestly.
+
+    ``n_quarantined`` / ``n_steals`` / ``n_speculations`` / ``n_cancels``
+    count the group-fault events of the last run (surfaced as
+    ``PPResult.group_stats``); always 0 for barrier executors.
     """
     name = "base"
     devices: Tuple = ()    # AsyncExecutor's per-device streams
 
     def __init__(self, record_trace: bool = False):
         self.record_trace = record_trace
-        self.trace: List[Tuple[str, Coord]] = []
+        self.trace: List[Tuple] = []
+        self.n_quarantined = 0
+        self.n_steals = 0
+        self.n_speculations = 0
+        self.n_cancels = 0
 
     def _reset_run_state(self):
         """Clear per-run mutable state. Every ``run_graph`` implementation
@@ -561,10 +703,15 @@ class Executor:
         across ``run_pp`` calls (warmup + timed runs, repeated benches)
         without traces or peak counters leaking between runs."""
         self.trace = []
+        self.n_quarantined = 0
+        self.n_steals = 0
+        self.n_speculations = 0
+        self.n_cancels = 0
 
-    def _record(self, event: str, coord: Coord):
+    def _record(self, event: str, coord: Coord, group: Optional[int] = None):
         if self.record_trace:
-            self.trace.append((event, coord))
+            self.trace.append((event, coord) if group is None
+                              else (event, coord, int(group)))
 
     def run_phase(self, ctx: PhaseContext, phase: str,
                   tasks: Sequence[BlockTask]) -> Dict[Coord, BlockOutcome]:
@@ -985,6 +1132,111 @@ class _GroupedReadyQueue:
         return take
 
 
+class _GroupHealth:
+    """Per-device-group health ledger shared by the overlapped schedulers
+    (async + streaming): per-group EWMA rates, consecutive-expiry
+    counters, and the quarantined set.
+
+    Rate model (the watchdog/speculation cost calibration): ``rate(g)``
+    is an EWMA (alpha=0.4) of group ``g``'s observed seconds per
+    estimated cost unit — per-group, replacing the single global
+    fastest-rate, which mis-sizes deadlines ~Nx too tight on any group
+    slower than the fastest. Each group's FIRST observed resolve spans
+    that group's executable compile and is excluded entirely (the
+    per-group twin of the old global first-resolve skip). A group that
+    has not yet calibrated inherits the fastest calibrated rate
+    (``global_rate``); before ANY group calibrates every rate is 0.0 and
+    deadlines fall back to the generous floor — the same cold-start
+    behavior as before.
+
+    Quarantine: ``note_expiry`` counts CONSECUTIVE expiries per group
+    (any resolve resets the count) and returns True when the count
+    crosses ``quarantine_after`` — the caller then drains the group.
+    """
+
+    ALPHA = 0.4
+
+    def __init__(self, n_groups: int, quarantine_after: int):
+        self.n = max(1, int(n_groups))
+        self.quarantine_after = max(1, int(quarantine_after))
+        self._rate = [0.0] * self.n     # EWMA s/cost; 0 = uncalibrated
+        self._seen = [False] * self.n   # first resolve = compile span
+        self.consec = [0] * self.n      # consecutive expiries
+        self.quarantined: set = set()
+
+    def healthy(self) -> List[int]:
+        return [g for g in range(self.n) if g not in self.quarantined]
+
+    @property
+    def global_rate(self) -> float:
+        cal = [r for r in self._rate if r > 0.0]
+        return min(cal) if cal else 0.0
+
+    def rate(self, g: int) -> float:
+        return self._rate[g] if self._rate[g] > 0.0 else self.global_rate
+
+    def observe(self, g: int, obs: float):
+        if not self._seen[g]:
+            self._seen[g] = True
+            return
+        if obs <= 0.0:
+            return
+        r = self._rate[g]
+        self._rate[g] = (obs if r == 0.0
+                         else (1 - self.ALPHA) * r + self.ALPHA * obs)
+
+    def note_resolve(self, g: int):
+        self.consec[g] = 0
+
+    def note_expiry(self, g: int) -> bool:
+        """True when this expiry crosses the quarantine threshold — the
+        caller quarantines the group. Already-quarantined groups never
+        re-trip."""
+        if g in self.quarantined:
+            return False
+        self.consec[g] += 1
+        return self.consec[g] >= self.quarantine_after
+
+    def quarantine(self, g: int):
+        self.quarantined.add(g)
+
+
+@dataclass
+class _Flight:
+    """One in-flight dispatch attempt on a device group — a single block
+    (async) or a window chunk (streaming). Multiple flights for the same
+    work = a speculative twin pair. ``sup`` is the group-level injection
+    verdict for this dispatch (0 healthy / wall-clock gate / inf dead),
+    applied at the completion-observation seam like ``is_hung``."""
+    sig: object                            # completion scalar/vector
+    out: object                            # BlockOutcome | {coord: outcome}
+    td: float                              # dispatch wall time
+    group: int
+    sup: float = 0.0
+    tasks: Optional[List[BlockTask]] = None  # streaming chunk members
+
+
+def _maybe_degrade_topology(ctx: PhaseContext, health: _GroupHealth):
+    """Graceful topology degradation, checked after every quarantine:
+    fewer healthy groups than ``FaultPolicy.min_groups`` (or none at all)
+    flushes the checkpoint, then continues on the survivors or raises
+    ``TopologyDegradedError`` per ``FaultPolicy.on_group_fault``."""
+    pol = ctx.policy
+    survivors = health.healthy()
+    if len(survivors) >= pol.min_groups:
+        return
+    if ctx.ckpt is not None:
+        ctx.ckpt.flush()
+    if pol.on_group_fault == "continue" and survivors:
+        return
+    dead = sorted(health.quarantined)
+    raise TopologyDegradedError(
+        f"{len(survivors)} healthy device group(s) left (quarantined: "
+        f"{dead}), below min_groups={pol.min_groups} "
+        f"(on_group_fault={pol.on_group_fault!r}; checkpoint flushed)",
+        dead_groups=dead)
+
+
 class AsyncExecutor(Executor):
     """Dependency-driven overlapped schedule riding JAX async dispatch.
 
@@ -1007,19 +1259,31 @@ class AsyncExecutor(Executor):
         supports it — and holding ONE block's planes at a time instead of a
         whole stacked bucket is itself the larger live-footprint cut
         (``bench_roofline --gibbs-peak`` measures both);
-      * with >1 device, dispatches round-robin over the topology's
-        device GROUPS: per-group streams, so ready blocks genuinely
-        overlap across groups with zero inter-group collectives (priors
-        device_put to the target group are the phase-boundary O(K²)
-        summaries — the paper's whole budget); a group of >1 devices runs
-        the block's chain 'data'-sharded (``distributed.run_gibbs_group``,
-        intra-group collectives only).
+      * with >1 device, ready blocks are assigned to the LEAST-LOADED
+        healthy device group (per-group streams, zero inter-group
+        collectives; priors device_put to the target group are the
+        phase-boundary O(K²) summaries — the paper's whole budget); a
+        group of >1 devices runs the block's chain 'data'-sharded
+        (``distributed.run_gibbs_group``, intra-group collectives only).
+        Each group holds at most ``depth`` blocks in flight; the rest of
+        its share stays STAGED (assigned but undispatched), which is what
+        makes the elastic layer possible: an idle group STEALS the
+        highest-priority staged block from the most-loaded group, a group
+        whose dispatches expire ``quarantine_after`` consecutive times is
+        QUARANTINED (staged share re-queued, in-flight blocks rebalanced
+        onto healthy groups under the same keys), and a straggling
+        dispatch past ``speculate_at ×`` the group's own rate estimate is
+        SPECULATIVELY twinned on an idle group — resolution commits the
+        deterministic canonical-group winner and cancels the twin, so
+        results stay bitwise identical to the fault-free run. With ONE
+        group all of this is inert and dispatch is unbounded (legacy
+        behavior).
 
-    ``record_trace=True`` appends ("dispatch"|"resolve", coord) events to
-    ``self.trace`` in real order; the stress tests use it to assert no
-    block ever dispatches before its dependencies resolved.
-    ``_is_resolved`` is the completion-detection seam tests override to
-    fake arbitrary completion orders.
+    ``record_trace=True`` appends (event, coord, group) events to
+    ``self.trace`` in real order (see ``Executor`` for the schema); the
+    stress tests use it to assert no block ever dispatches before its
+    dependencies resolved. ``_is_resolved`` is the completion-detection
+    seam tests override to fake arbitrary completion orders.
 
     ``priority=True`` (default) pops the ready queue critical-path-first:
     ready blocks are ordered by their bottom-level (estimated cost + the
@@ -1032,7 +1296,8 @@ class AsyncExecutor(Executor):
 
     def __init__(self, donate: bool = True, block_mesh=None,
                  record_trace: bool = False, priority: bool = True,
-                 topology: Optional[Topology] = None, comm: str = "gather"):
+                 topology: Optional[Topology] = None, comm: str = "gather",
+                 depth: int = 2):
         super().__init__(record_trace=record_trace)
         if topology is None:
             # legacy spellings: a 1-D 'block' mesh (or None = all local
@@ -1042,11 +1307,14 @@ class AsyncExecutor(Executor):
             raise ValueError("pass block_mesh OR topology, not both")
         else:
             topology = Topology.from_spec(topology)
+        if int(depth) < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
         self.topology = topology
         self.comm = comm
         self.donate = donate
         self.devices = topology.devices
         self.priority = priority
+        self.depth = int(depth)    # per-group in-flight cap (multi-group)
         self._n_dispatched = 0
 
     def run_phase(self, ctx, phase, tasks):
@@ -1062,74 +1330,63 @@ class AsyncExecutor(Executor):
         super()._reset_run_state()
         self._n_dispatched = 0
 
-    def _await_progress(self, ctx, inflight, deadline):
-        """Deadline-aware wait for the dispatch loop: poll EVERY in-flight
-        completion scalar with an adaptive sleep until at least one
-        resolves or blows its watchdog deadline. Returns
-        ``(resolved, expired)`` coords. This replaces the legacy
-        block-on-oldest fallback, which deadlocked forever when the oldest
-        in-flight block was the one that died (its scalar never becomes
-        ready); ``watchdog=False`` restores that legacy behavior."""
-        if not ctx.policy.watchdog:
-            oldest = next(iter(inflight))
-            jax.block_until_ready(inflight[oldest][0])
-            return [oldest], []
-        sleep = 5e-5
-        while True:
-            resolved = [c for c, (sig, _, _) in inflight.items()
-                        if not ctx.is_hung(c) and self._is_resolved(c, sig)]
-            if resolved:
-                return resolved, []
-            now = time.time()
-            expired = [c for c, (_, _, td) in inflight.items()
-                       if now - td > deadline(c)]
-            if expired:
-                return [], expired
-            time.sleep(sleep)
-            sleep = min(sleep * 2, 2e-3)
-
     def run_graph(self, ctx, graph, verbose: bool = False):
         self._reset_run_state()
         tasks, phase_of, waiting, succ, ready = _dep_state(
             ctx, graph, self.priority)
         est = _block_cost_estimates(ctx, tasks)
-        rate = [0.0]          # steady-state seconds per est cost unit
-        rate_skip = [True]    # first resolve's span includes compile
-        inflight: Dict[Coord, Tuple] = {}   # coord -> (signal, outcome, t_d)
+        pol = ctx.policy
+        G = max(1, self.topology.block)
+        health = _GroupHealth(G, pol.quarantine_after)
+        elastic = G > 1    # one group: nowhere to rebalance/steal/twin
+        cap = self.depth if elastic else None   # per-group in-flight cap
+        # per-group staged share (assigned, undispatched — the steal pool)
+        staged = [_ReadyQueue(ready._prio) for _ in range(G)]
+        flights: Dict[Coord, List[_Flight]] = {}  # >1 = speculative twins
         outcomes: Dict[Coord, BlockOutcome] = {}
         spans: Dict[Coord, Tuple[float, float]] = {}
         first_d: Dict[str, float] = {}
         last_r: Dict[str, float] = {}
         remaining = {ph: len(ts) for ph, ts in graph}
-        pol = ctx.policy
         t0 = time.time()
 
-        def deadline(c):
-            # watchdog deadline: generous floor + slack × the calibrated
-            # cost model. rate is the FASTEST observed seconds/cost — a
-            # steady-state estimate robust to compile- and queue-inflated
-            # spans (the run's first resolve is excluded entirely); 0
-            # until then, leaving early blocks the floor alone. A false
+        def n_inflight(g):
+            return sum(1 for fl in flights.values()
+                       for f in fl if f.group == g)
+
+        def n_assigned(g):
+            return len(staged[g]) + n_inflight(g)
+
+        def pick_group():
+            return min(health.healthy(), key=lambda g: (n_assigned(g), g))
+
+        def deadline(c, f):
+            # per-group watchdog deadline: generous floor + slack × the
+            # group's OWN calibrated rate (EWMA seconds/cost; cold groups
+            # inherit the fastest calibrated rate, 0 until any group
+            # calibrates — early blocks get the floor alone). A false
             # expiry is benign: re-dispatch reuses attempt-0 keys, so a
             # slow-but-alive block still resolves bitwise-identically.
-            return pol.timeout_floor_s + pol.timeout_slack * rate[0] * est[c]
+            return (pol.timeout_floor_s
+                    + pol.timeout_slack * health.rate(f.group) * est[c])
 
-        def retire(c, out, td, kind=None):
-            self._record("resolve", c)
+        def flight_ready(c, f):
+            if ctx.is_hung(c):
+                return False
+            if f.sup and time.time() < f.sup:
+                return False
+            return self._is_resolved(c, f.sig)
+
+        def retire(c, out, td, kind=None, group=None):
+            self._record("resolve", c, group)
             out = _commit_guard(ctx, tasks[c], out, kind=kind)
             tr = time.time()
             if not out.seconds:
                 out.seconds = tr - td
-            if kind is None:
-                # the run's first resolve spans the executable compile —
-                # folding it into the rate would inflate every later
-                # deadline by orders of magnitude (a cold-start hang then
-                # waits out minutes instead of the floor)
-                if rate_skip[0]:
-                    rate_skip[0] = False
-                else:
-                    obs = out.seconds / est[c]
-                    rate[0] = obs if not rate[0] else min(rate[0], obs)
+            if kind is None and group is not None:
+                # per-group EWMA rate; the group's first resolve (compile
+                # span) is dropped inside observe()
+                health.observe(group, out.seconds / est[c])
             spans[c] = (td - t0, tr - t0)
             outcomes[c] = out
             ctx.note_resolved(tasks[c], out)
@@ -1148,57 +1405,213 @@ class AsyncExecutor(Executor):
                 if waiting[s] == 0:
                     ready.push(s)
 
-        while ready or inflight:
-            while ready:
-                c = ready.pop()
-                self._record("dispatch", c)
-                td = time.time()
-                first_d.setdefault(phase_of[c], td - t0)
-                try:
-                    signal, out = self._dispatch(ctx, tasks[c])
-                except _DISPATCH_ERRORS:
-                    retire(c, None, td, kind="dispatch")
+        def dispatch_on(c, g, event):
+            """Dispatch block ``c`` on group ``g``. Returns False when the
+            dispatch failed (already healed through the retire path)."""
+            self._record(event, c, g)
+            td = time.time()
+            first_d.setdefault(phase_of[c], td - t0)
+            ordinal = ctx.next_group_ordinal(g)
+            sup = ctx.group_suppressed_until(g, ordinal, td)
+            try:
+                sig, out = self._dispatch(ctx, tasks[c], group=g)
+            except _DISPATCH_ERRORS:
+                retire(c, None, td, kind="dispatch", group=g)
+                return False
+            flights.setdefault(c, []).append(
+                _Flight(sig=sig, out=out, td=td, group=g, sup=sup))
+            return True
+
+        def quarantine_group(g, trigger):
+            """Drain group ``g``: no future dispatch targets it, its
+            staged share returns to the global ready queue, and its
+            in-flight blocks rebalance onto healthy groups under the SAME
+            keys (kind="group" — no block retry budget is consumed)."""
+            health.quarantine(g)
+            self._record("quarantine", trigger, g)
+            self.n_quarantined += 1
+            ctx.record_fault(trigger, "group", "quarantined")
+            _maybe_degrade_topology(ctx, health)      # may raise (ckpt
+            while staged[g]:                          # already flushed)
+                ready.push(staged[g].pop())
+            for c2 in list(flights):
+                fl = flights.get(c2, [])
+                mine = [f for f in fl if f.group == g]
+                if not mine:
                     continue
-                inflight[c] = (signal, out, td)
-            if not inflight:
+                keep = [f for f in fl if f.group != g]
+                if keep:
+                    # its healthy twin flies on: this side just cancels
+                    for f in mine:
+                        self._record("cancel", c2, g)
+                        self.n_cancels += 1
+                    flights[c2] = keep
+                    continue
+                flights.pop(c2)
+                self._record("expire", c2, g)
+                ctx.record_fault(c2, "group", "rebalanced")
+                dispatch_on(c2, pick_group(), "redispatch")
+
+        def handle_expiries(now):
+            """Watchdog sweep: expire overdue flights, count consecutive
+            expiries toward quarantine, re-dispatch or terminally retire.
+            Returns True when any state changed."""
+            changed = False
+            for c in list(flights):
+                fl = flights.get(c)
+                if fl is None:
+                    continue
+                dead = [f for f in fl if now - f.td > deadline(c, f)]
+                if not dead:
+                    continue
+                changed = True
+                live = [f for f in fl if f not in dead]
+                if live:
+                    # the twin flies on — the expired side only cancels
+                    flights[c] = live
+                    for f in dead:
+                        self._record("cancel", c, f.group)
+                        self.n_cancels += 1
+                        if elastic and health.note_expiry(f.group):
+                            quarantine_group(f.group, c)
+                    continue
+                flights.pop(c)
+                self._record("expire", c, dead[0].group)
+                for f in dead[1:]:
+                    self._record("cancel", c, f.group)
+                    self.n_cancels += 1
+                for f in dead:
+                    if elastic and health.note_expiry(f.group):
+                        quarantine_group(f.group, c)
+                if ctx.cur_attempt(c) < pol.max_retries:
+                    ctx.record_fault(c, "timeout", "redispatched")
+                    ctx.attempts[c] = ctx.cur_attempt(c) + 1
+                    dispatch_on(c, pick_group(), "redispatch")
+                else:
+                    retire(c, None, dead[0].td, kind="timeout",
+                           group=dead[0].group)
+            return changed
+
+        def maybe_speculate(now):
+            """Straggler hedge: a sole flight past ``speculate_at ×`` its
+            group's calibrated deadline model is twinned on an idle
+            healthy group with the SAME attempt-0 key."""
+            if not elastic or pol.speculate_at <= 0.0:
+                return
+            for c in list(flights):
+                fl = flights.get(c)
+                if fl is None or len(fl) != 1:
+                    continue
+                f = fl[0]
+                r = health.rate(f.group)
+                if r <= 0.0 or now - f.td <= pol.speculate_at * r * est[c]:
+                    continue
+                idle = [g for g in health.healthy()
+                        if g != f.group and not staged[g]
+                        and (cap is None or n_inflight(g) < cap)]
+                if not idle:
+                    continue
+                g2 = min(idle, key=lambda g: (n_assigned(g), g))
+                td = time.time()
+                ordinal = ctx.next_group_ordinal(g2)
+                sup = ctx.group_suppressed_until(g2, ordinal, td)
+                try:
+                    sig, out = self._dispatch(ctx, tasks[c], group=g2)
+                except _DISPATCH_ERRORS:
+                    continue    # the primary still flies; skip the twin
+                self._record("speculate", c, g2)
+                self.n_speculations += 1
+                fl.append(_Flight(sig=sig, out=out, td=td, group=g2,
+                                  sup=sup))
+
+        def await_progress():
+            """Adaptive-sleep poll until a flight resolves or the watchdog
+            changes state (expiry/quarantine). ``watchdog=False`` restores
+            the legacy block-on-oldest fallback, which deadlocks if the
+            oldest in-flight block died — keep it on."""
+            if not pol.watchdog:
+                c0 = min(flights, key=lambda c: flights[c][0].td)
+                jax.block_until_ready(flights[c0][0].sig)
+                return
+            sleep = 5e-5
+            while flights:
+                if any(flight_ready(c, f) for c, fl in flights.items()
+                       for f in fl):
+                    return
+                now = time.time()
+                if handle_expiries(now):
+                    return
+                maybe_speculate(now)
+                time.sleep(sleep)
+                sleep = min(sleep * 2, 2e-3)
+
+        while ready or any(staged) or flights:
+            # assign fresh ready blocks to the least-loaded healthy group
+            while ready:
+                staged[pick_group()].push(ready.pop())
+            progress = False
+            for g in health.healthy():
+                while staged[g] and (cap is None or n_inflight(g) < cap):
+                    dispatch_on(staged[g].pop(), g, "dispatch")
+                    progress = True
+            if elastic and not progress:
+                # work stealing: an idle healthy group takes the highest-
+                # priority STAGED block from the most-loaded group
+                for g in health.healthy():
+                    if staged[g] or (cap is not None
+                                     and n_inflight(g) >= cap):
+                        continue
+                    victims = [h for h in health.healthy()
+                               if h != g and staged[h]]
+                    if not victims:
+                        continue
+                    v = max(victims, key=lambda h: (n_assigned(h), -h))
+                    c = staged[v].pop()
+                    self._record("steal", c, g)
+                    self.n_steals += 1
+                    dispatch_on(c, g, "dispatch")
+                    progress = True
+            if progress or not flights:
                 continue
-            resolved = [c for c, (sig, _, _) in inflight.items()
-                        if not ctx.is_hung(c) and self._is_resolved(c, sig)]
-            if not resolved:
-                resolved, expired = self._await_progress(ctx, inflight,
-                                                         deadline)
-                for c in expired:
-                    # watchdog timeout: cancel (drop the in-flight handles
-                    # — the device queue drains them in the background),
-                    # then re-dispatch on the next device group with the
-                    # SAME key: a slow-but-alive block re-resolves to
-                    # bitwise-identical numbers
-                    _, _, td = inflight.pop(c)
-                    self._record("expire", c)
-                    if ctx.cur_attempt(c) < pol.max_retries:
-                        ctx.record_fault(c, "timeout", "redispatched")
-                        ctx.attempts[c] = ctx.cur_attempt(c) + 1
-                        td2 = time.time()
-                        try:
-                            sig2, out2 = self._dispatch(ctx, tasks[c])
-                            self._record("redispatch", c)
-                            inflight[c] = (sig2, out2, td2)
-                        except _DISPATCH_ERRORS:
-                            retire(c, None, td2, kind="dispatch")
-                    else:
-                        retire(c, None, td, kind="timeout")
+            await_progress()
+            resolved = [c for c, fl in flights.items()
+                        if any(flight_ready(c, f) for f in fl)]
             for c in resolved:
-                signal, out, td = inflight.pop(c)
-                retire(c, out, td)
+                fl = flights.pop(c, None)
+                if fl is None:
+                    continue
+                rd = [f for f in fl if flight_ready(c, f)]
+                if not rd:
+                    flights[c] = fl
+                    continue
+                # deterministic winner: canonical group order among the
+                # READY flights — twins share the attempt-0 key so either
+                # outcome is bitwise the fault-free numbers, and the
+                # canonical rule keeps the committed handles/trace
+                # independent of wall-clock completion order
+                win = min(rd, key=lambda f: f.group)
+                for f in fl:
+                    if f is not win:
+                        self._record("cancel", c, f.group)
+                        self.n_cancels += 1
+                # the store may hold a losing twin's handles (written at
+                # its dispatch) — successors must consume the winner's
+                ctx.U_posts[c] = win.out.U_post
+                ctx.V_posts[c] = win.out.V_post
+                health.note_resolve(win.group)
+                retire(c, win.out, win.td, group=win.group)
         # per-phase envelopes: first dispatch → last resolve. Phases
         # overlap, so these may sum to MORE than the wall time.
         phase_times = {ph: last_r[ph] - first_d[ph] for ph in first_d}
         return outcomes, phase_times, spans
 
-    def _dispatch(self, ctx: PhaseContext, task: BlockTask):
+    def _dispatch(self, ctx: PhaseContext, task: BlockTask,
+                  group: Optional[int] = None):
         """Dispatch one block's jitted chain without waiting for anything:
         inputs may still be computing (JAX chains the dataflow) and no
-        output is synced. Returns (completion scalar, device outcome)."""
+        output is synced. ``group`` is the scheduler-chosen target device
+        group (None = legacy round-robin). Returns (completion scalar,
+        device outcome)."""
         ctx.check_dispatch(task.coord)
         blk = ctx.part.block(task.i, task.j)
         s = ctx.shapes[task.phase]
@@ -1209,7 +1622,8 @@ class AsyncExecutor(Executor):
         n_obs = int(tmask.sum())
         key = ctx.keys[task.i, task.j]
         topo = self.topology
-        g = self._n_dispatched % topo.block
+        g = (self._n_dispatched % topo.block) if group is None \
+            else int(group)
         if topo.n_devices > 1:
             # per-GROUP streams: the block's padded planes plus the O(K²)
             # prior summaries move to the target group — the latter IS the
@@ -1512,6 +1926,9 @@ class StreamingExecutor(Executor):
                 prio, lambda c: self._group_key(ctx, ts[c], shapes)))
         self.window_shapes = shapes
         G = self.topology.block
+        pol = ctx.policy
+        health = _GroupHealth(G, pol.quarantine_after)
+        elastic = G > 1    # one group: nowhere to rebalance/steal/twin
         if verbose:
             n_buckets = len({id(s) for s in shapes.values()})
             print(f"[pp:{self.name}] window={self.window} depth={self.depth} "
@@ -1520,11 +1937,12 @@ class StreamingExecutor(Executor):
                   f"device(s)", flush=True)
 
         # one W-bounded donated window PER DEVICE GROUP: each group runs
-        # its own stream of chunks (own prefetch slot + own in-flight list)
+        # its own stream of chunks (own prefetch slot + its share of the
+        # in-flight chunk flights, capped at ``depth``)
         staged: List[Optional[_StagedChunk]] = [None] * G
-        inflight: List[List[Tuple[List[BlockTask], jax.Array,
-                                  Dict[Coord, BlockOutcome], float]]] = \
-            [[] for _ in range(G)]
+        flights: Dict[int, _Flight] = {}    # flight id -> chunk flight
+        twin: Dict[int, int] = {}           # speculative twin links (both ways)
+        fid_next = [0]
         outcomes: Dict[Coord, BlockOutcome] = {}
         spans: Dict[Coord, Tuple[float, float]] = {}
         first_d: Dict[str, float] = {}
@@ -1532,31 +1950,39 @@ class StreamingExecutor(Executor):
         remaining = {ph: len(ts) for ph, ts in graph}
         t0 = time.time()
 
+        def n_inflight(g):
+            return sum(1 for f in flights.values() if f.group == g)
+
         def note_peak():
-            live = self.window * (sum(len(f) for f in inflight)
+            live = self.window * (len(flights)
                                   + sum(st is not None for st in staged))
             self.peak_window_blocks = max(self.peak_window_blocks, live)
 
         est = _block_cost_estimates(ctx, tasks)
-        rate = [0.0]          # steady-state seconds per est cost unit
-        rate_skip = [True]    # first chunk's span includes compile
-        pol = ctx.policy
 
-        def chunk_deadline(ts_):
-            # same watchdog model as the async executor, over the chunk's
-            # total estimated cost (one executable runs all its members)
-            cost = sum(est[t.coord] for t in ts_)
-            return pol.timeout_floor_s + pol.timeout_slack * rate[0] * cost
+        def chunk_cost(ts_):
+            return sum(est[t.coord] for t in ts_)
 
-        def retire(t, out, td, tr_, per, kind=None):
+        def deadline(f):
+            # per-group watchdog deadline over the chunk's total estimated
+            # cost (one executable runs all its members); the group's OWN
+            # EWMA rate, cold groups inherit the fastest calibrated one
+            return (pol.timeout_floor_s + pol.timeout_slack
+                    * health.rate(f.group) * chunk_cost(f.tasks))
+
+        def flight_ready(f):
+            if any(ctx.is_hung(t.coord) for t in f.tasks):
+                return False
+            if f.sup and time.time() < f.sup:
+                return False
+            return self._is_resolved(f.tasks[0].coord, f.sig)
+
+        def retire(t, out, td, tr_, per, kind=None, group=None):
             c = t.coord
-            self._record("resolve", c)
+            self._record("resolve", c, group)
             out = _commit_guard(ctx, tasks[c], out, kind=kind)
             if not out.seconds:
                 out.seconds = per
-            if per and not rate_skip[0] and kind is None:
-                obs = per / est[c]
-                rate[0] = obs if not rate[0] else min(rate[0], obs)
             spans[c] = (td - t0, tr_ - t0)
             outcomes[c] = out
             ctx.note_resolved(tasks[c], out)
@@ -1576,6 +2002,28 @@ class StreamingExecutor(Executor):
                 if waiting[s2] == 0:
                     ready.push(s2)
 
+        def launch(ch: _StagedChunk, event: str) -> int:
+            """Dispatch a staged chunk on its group; returns the flight
+            id. The chunk's dispatch consumes one group ordinal (the
+            group-level injection unit)."""
+            g = ch.group
+            td = time.time()
+            for t in ch.tasks:
+                self._record(event, t.coord, g)
+                first_d.setdefault(phase_of[t.coord], td - t0)
+            ordinal = ctx.next_group_ordinal(g)
+            sup = ctx.group_suppressed_until(g, ordinal, td)
+            sig, outs = self._dispatch(ctx, ch)
+            fid = fid_next[0]
+            fid_next[0] += 1
+            flights[fid] = _Flight(sig=sig, out=outs, td=td, group=g,
+                                   sup=sup, tasks=ch.tasks)
+            note_peak()
+            return fid
+
+        def least_loaded():
+            return min(health.healthy(), key=lambda g: (n_inflight(g), g))
+
         def stage_next(g) -> Optional[_StagedChunk]:
             """Pop + stage the group's next chunk, healing dispatch-failure
             injections at chunk formation (the flagged block never joins
@@ -1588,121 +2036,229 @@ class StreamingExecutor(Executor):
                         ctx.check_dispatch(t.coord)
                         good.append(t)
                     except _DISPATCH_ERRORS:
-                        self._record("dispatch", t.coord)
+                        self._record("dispatch", t.coord, g)
                         now = time.time()
                         first_d.setdefault(phase_of[t.coord], now - t0)
                         retire(t, None, now, time.time(), 0.0,
-                               kind="dispatch")
+                               kind="dispatch", group=g)
                 if good:
                     return self._stage(ctx, good, shapes, group=g)
             return None
 
-        while (ready or any(st is not None for st in staged)
-               or any(inflight)):
-            dispatched = False
-            for g in range(G):
+        def quarantine_group(g, trigger):
+            """Drain group ``g``: its staged window buffers are RELEASED
+            (the chunk's blocks return to the ready queue, dropping the
+            device leaves), and its in-flight chunks re-stage on healthy
+            groups under the same keys (kind="group" — no block retry
+            budget consumed)."""
+            health.quarantine(g)
+            self._record("quarantine", trigger, g)
+            self.n_quarantined += 1
+            ctx.record_fault(trigger, "group", "quarantined")
+            _maybe_degrade_topology(ctx, health)      # may raise (ckpt
+            if staged[g] is not None:                 # already flushed)
+                for t in staged[g].tasks:
+                    ready.push(t.coord)
+                staged[g] = None
+            for fid in [i for i, f in flights.items() if f.group == g]:
+                f = flights.pop(fid)
+                tw = twin.pop(fid, None)
+                if tw is not None:
+                    # its healthy twin flies on: this side just cancels
+                    twin.pop(tw, None)
+                    for t in f.tasks:
+                        self._record("cancel", t.coord, g)
+                    self.n_cancels += len(f.tasks)
+                    continue
+                for t in f.tasks:
+                    self._record("expire", t.coord, g)
+                    ctx.record_fault(t.coord, "group", "rebalanced")
+                st2 = self._stage(ctx, f.tasks, shapes,
+                                  group=least_loaded())
+                launch(st2, "redispatch")
+
+        def handle_expiries(now):
+            """Watchdog sweep over the chunk flights; True on any state
+            change (expiry, quarantine, redispatch, terminal retire)."""
+            changed = False
+            for fid in list(flights):
+                f = flights.get(fid)
+                if f is None or now - f.td <= deadline(f):
+                    continue
+                changed = True
+                flights.pop(fid)
+                tw = twin.pop(fid, None)
+                if tw is not None and tw in flights:
+                    # the twin flies on — the expired side only cancels
+                    twin.pop(tw, None)
+                    for t in f.tasks:
+                        self._record("cancel", t.coord, f.group)
+                    self.n_cancels += len(f.tasks)
+                    if elastic and health.note_expiry(f.group):
+                        quarantine_group(f.group, f.tasks[0].coord)
+                    continue
+                for t in f.tasks:
+                    self._record("expire", t.coord, f.group)
+                if elastic and health.note_expiry(f.group):
+                    quarantine_group(f.group, f.tasks[0].coord)
+                if all(ctx.cur_attempt(t.coord) < pol.max_retries
+                       for t in f.tasks):
+                    # re-stage on the least-loaded healthy group with the
+                    # same keys — a slow-but-alive chunk re-resolves to
+                    # bitwise-identical numbers
+                    for t in f.tasks:
+                        ctx.record_fault(t.coord, "timeout", "redispatched")
+                        ctx.attempts[t.coord] = ctx.cur_attempt(t.coord) + 1
+                    st2 = self._stage(ctx, f.tasks, shapes,
+                                      group=least_loaded())
+                    launch(st2, "redispatch")
+                else:
+                    for t in f.tasks:
+                        retire(t, None, f.td, now, 0.0, kind="timeout",
+                               group=f.group)
+            return changed
+
+        def maybe_speculate(now):
+            """Straggler hedge: an untwinned chunk past ``speculate_at ×``
+            its group's calibrated deadline model re-stages on an idle
+            healthy group with the SAME keys."""
+            if not elastic or pol.speculate_at <= 0.0:
+                return
+            for fid in list(flights):
+                f = flights.get(fid)
+                if f is None or fid in twin:
+                    continue
+                r = health.rate(f.group)
+                if (r <= 0.0 or now - f.td
+                        <= pol.speculate_at * r * chunk_cost(f.tasks)):
+                    continue
+                idle = [g for g in health.healthy()
+                        if g != f.group and staged[g] is None
+                        and n_inflight(g) < self.depth]
+                if not idle:
+                    continue
+                g2 = min(idle, key=lambda g: (n_inflight(g), g))
+                for t in f.tasks:
+                    self._record("speculate", t.coord, g2)
+                self.n_speculations += len(f.tasks)
+                try:
+                    st2 = self._stage(ctx, f.tasks, shapes, group=g2)
+                    td = time.time()
+                    ordinal = ctx.next_group_ordinal(g2)
+                    sup = ctx.group_suppressed_until(g2, ordinal, td)
+                    sig, outs = self._dispatch(ctx, st2)
+                except _DISPATCH_ERRORS:
+                    for t in f.tasks:
+                        self._record("cancel", t.coord, g2)
+                    self.n_cancels += len(f.tasks)
+                    continue    # the primary still flies; skip the twin
+                fid2 = fid_next[0]
+                fid_next[0] += 1
+                flights[fid2] = _Flight(sig=sig, out=outs, td=td, group=g2,
+                                        sup=sup, tasks=f.tasks)
+                twin[fid] = fid2
+                twin[fid2] = fid
+                note_peak()
+
+        def await_flights():
+            """Adaptive poll until a chunk resolves or the watchdog
+            changes state; ``watchdog=False`` restores the legacy
+            block-on-oldest-chunk fallback."""
+            if not pol.watchdog:
+                f0 = min(flights.values(), key=lambda f: f.td)
+                jax.block_until_ready(f0.sig)
+                return
+            sleep = 5e-5
+            while flights:
+                if any(flight_ready(f) for f in flights.values()):
+                    return
+                now = time.time()
+                if handle_expiries(now):
+                    return
+                maybe_speculate(now)
+                time.sleep(sleep)
+                sleep = min(sleep * 2, 2e-3)
+
+        while (ready or any(st is not None for st in staged) or flights):
+            progress = False
+            for g in health.healthy():
+                # fair staging: every idle group stages ONE chunk before
+                # any group prefetches a second — a greedy first group
+                # would starve the rest of the mesh whenever the DAG
+                # releases blocks a few at a time
                 if staged[g] is None and ready:
                     staged[g] = stage_next(g)
                     note_peak()
-                if staged[g] is not None and len(inflight[g]) < self.depth:
+            for g in health.healthy():
+                if staged[g] is not None and n_inflight(g) < self.depth:
                     ch, staged[g] = staged[g], None
-                    for t in ch.tasks:
-                        self._record("dispatch", t.coord)
-                    td = time.time()
-                    signal, outs = self._dispatch(ctx, ch)
-                    inflight[g].append((ch.tasks, signal, outs, td))
-                    for t in ch.tasks:
-                        first_d.setdefault(phase_of[t.coord], td - t0)
+                    launch(ch, "dispatch")
                     # per-stream double-buffered prefetch: the group's NEXT
                     # chunk's H2D transfer overlaps this chunk's compute
                     if ready:
                         staged[g] = stage_next(g)
-                    note_peak()
-                    dispatched = True
-            if dispatched:
-                continue
-            if not any(inflight):
-                continue
-            # every group's window is full (or nothing stageable): retire
-            idxs = [(g, i) for g in range(G)
-                    for i, (ts_, sig, _, _) in enumerate(inflight[g])
-                    if not any(ctx.is_hung(t.coord) for t in ts_)
-                    and self._is_resolved(ts_[0].coord, sig)]
-            if not idxs:
-                idxs, expired = self._await_chunks(ctx, inflight,
-                                                   chunk_deadline)
-                for g, i in sorted(expired, reverse=True):
-                    # watchdog timeout: drop the chunk's in-flight handles
-                    # and re-stage it on the NEXT device group with the
-                    # same keys — a slow-but-alive chunk re-resolves to
-                    # bitwise-identical numbers; exhausted budgets
-                    # degrade/raise per policy
-                    chunk_tasks, sig, outs, td = inflight[g].pop(i)
-                    for t in chunk_tasks:
-                        self._record("expire", t.coord)
-                    if all(ctx.cur_attempt(t.coord) < pol.max_retries
-                           for t in chunk_tasks):
-                        for t in chunk_tasks:
-                            ctx.record_fault(t.coord, "timeout",
-                                             "redispatched")
-                            ctx.attempts[t.coord] = \
-                                ctx.cur_attempt(t.coord) + 1
-                        g2 = (g + 1) % G
-                        st2 = self._stage(ctx, chunk_tasks, shapes,
-                                          group=g2)
-                        td2 = time.time()
-                        sig2, outs2 = self._dispatch(ctx, st2)
-                        for t in chunk_tasks:
-                            self._record("redispatch", t.coord)
-                        inflight[g2].append((chunk_tasks, sig2, outs2, td2))
                         note_peak()
-                    else:
-                        now = time.time()
-                        for t in chunk_tasks:
-                            retire(t, None, td, now, 0.0, kind="timeout")
-            for g, i in sorted(idxs, reverse=True):
-                chunk_tasks, sig, outs, td = inflight[g].pop(i)
+                    progress = True
+            if elastic and not progress:
+                # work stealing: an idle healthy group re-stages the
+                # staged chunk of the most-loaded group onto itself
+                for g in health.healthy():
+                    if (staged[g] is not None or ready
+                            or n_inflight(g) >= self.depth):
+                        continue
+                    victims = [h for h in health.healthy()
+                               if h != g and staged[h] is not None]
+                    if not victims:
+                        continue
+                    v = max(victims, key=lambda h: (n_inflight(h), -h))
+                    ch, staged[v] = staged[v], None
+                    for t in ch.tasks:
+                        self._record("steal", t.coord, g)
+                    self.n_steals += len(ch.tasks)
+                    st2 = self._stage(ctx, ch.tasks, shapes, group=g)
+                    launch(st2, "dispatch")
+                    progress = True
+            if progress or not flights:
+                continue
+            await_flights()
+            for fid in [i for i, f in flights.items() if flight_ready(f)]:
+                f = flights.get(fid)
+                if f is None:       # its twin already committed this work
+                    continue
+                tw = twin.pop(fid, None)
+                if tw is not None and tw in flights:
+                    twin.pop(tw, None)
+                    # deterministic winner: canonical group order among
+                    # the READY sides (twins share keys, so either is the
+                    # fault-free bitwise result)
+                    cand = [x for x in (fid, tw)
+                            if flights.get(x) is not None
+                            and flight_ready(flights[x])]
+                    win_id = min(cand, key=lambda x: flights[x].group)
+                    lose_id = tw if win_id == fid else fid
+                    loser = flights.pop(lose_id)
+                    for t in loser.tasks:
+                        self._record("cancel", t.coord, loser.group)
+                    self.n_cancels += len(loser.tasks)
+                    f = flights.pop(win_id)
+                    # successors must consume the winner's dataflow, not
+                    # whichever twin wrote the store last
+                    for t in f.tasks:
+                        ctx.U_posts[t.coord] = f.out[t.coord].U_post
+                        ctx.V_posts[t.coord] = f.out[t.coord].V_post
+                else:
+                    flights.pop(fid)
                 tr_ = time.time()
                 # one executable ran the whole chunk: split its wall evenly
                 # across members (mirrors StackedExecutor's bucket split)
-                per = (tr_ - td) / len(chunk_tasks)
-                for t in chunk_tasks:
-                    retire(t, outs[t.coord], td, tr_, per)
-                # first chunk's span includes the window executable's
-                # compile — excluded from the rate (see AsyncExecutor)
-                rate_skip[0] = False
+                per = (tr_ - f.td) / len(f.tasks)
+                health.observe(f.group, (tr_ - f.td) / chunk_cost(f.tasks))
+                health.note_resolve(f.group)
+                for t in f.tasks:
+                    retire(t, f.out[t.coord], f.td, tr_, per,
+                           group=f.group)
         phase_times = {ph: last_r[ph] - first_d[ph] for ph in first_d}
         return outcomes, phase_times, spans
-
-    def _await_chunks(self, ctx, inflight, deadline):
-        """Streaming twin of ``AsyncExecutor._await_progress``: adaptive
-        poll over every group's in-flight chunks until one resolves or
-        exceeds its watchdog deadline; returns (resolved, expired) (g, i)
-        index pairs. ``watchdog=False`` restores the legacy
-        block-on-oldest-chunk fallback."""
-        G = len(inflight)
-        if not ctx.policy.watchdog:
-            g0, i0 = min(
-                ((g, i) for g in range(G) for i in range(len(inflight[g]))),
-                key=lambda gi: inflight[gi[0]][gi[1]][3])
-            jax.block_until_ready(inflight[g0][i0][1])
-            return [(g0, i0)], []
-        sleep = 5e-5
-        while True:
-            idxs = [(g, i) for g in range(G)
-                    for i, (ts_, sig, _, _) in enumerate(inflight[g])
-                    if not any(ctx.is_hung(t.coord) for t in ts_)
-                    and self._is_resolved(ts_[0].coord, sig)]
-            if idxs:
-                return idxs, []
-            now = time.time()
-            expired = [(g, i) for g in range(G)
-                       for i, (ts_, _, _, td) in enumerate(inflight[g])
-                       if now - td > deadline(ts_)]
-            if expired:
-                return [], expired
-            time.sleep(sleep)
-            sleep = min(sleep * 2, 2e-3)
 
 
 EXECUTORS: Dict[str, type] = {
@@ -1918,4 +2474,9 @@ def run_phase_graph(key, part: Partition, cfg: BMF.BMFConfig, test: COO,
                        phase_times_s=phase_times, n_test=n_test,
                        block_times_s=block_times, executor=executor.name,
                        block_spans_s=spans, faults=list(ctx.faults),
-                       resumed_blocks=len(ctx.resumed))
+                       resumed_blocks=len(ctx.resumed),
+                       group_stats=dict(
+                           n_quarantined=executor.n_quarantined,
+                           n_steals=executor.n_steals,
+                           n_speculations=executor.n_speculations,
+                           n_cancels=executor.n_cancels))

@@ -67,6 +67,10 @@ class PPResult:
     faults: list = field(default_factory=list)
     # blocks restored from a resume_from checkpoint (not re-run)
     resumed_blocks: int = 0
+    # elastic group-fault-domain counters from the executor (engine
+    # events: quarantine / steal / speculate / cancel). All-zero for
+    # barrier executors and single-group async/streaming runs.
+    group_stats: Dict[str, int] = field(default_factory=dict)
 
     @property
     def n_retries(self) -> int:

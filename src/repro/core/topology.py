@@ -167,6 +167,24 @@ class Topology:
         grid = np.asarray(self.group(g), dtype=object).reshape(1, self.data)
         return Mesh(grid, (BLOCK_AXIS, DATA_AXIS))
 
+    def without_groups(self, dead) -> "Topology":
+        """The surviving sub-topology after dropping device groups
+        ``dead`` (e.g. ``TopologyDegradedError.dead_groups``) — same
+        ``data`` width, the remaining groups in canonical order. Block
+        posteriors are placement-independent, so a run checkpointed
+        before the degradation resumes bitwise-identically on the
+        survivor topology."""
+        dead = {int(g) for g in dead}
+        bad = dead - set(range(self.block))
+        if bad:
+            raise ValueError(f"unknown group(s) {sorted(bad)} "
+                             f"(topology has {self.block} group(s))")
+        alive = [g for g in range(self.block) if g not in dead]
+        if not alive:
+            raise ValueError("cannot drop every device group")
+        devs = tuple(d for g in alive for d in self.group(g))
+        return Topology(block=len(alive), data=self.data, devices=devs)
+
     def describe(self) -> str:
         return (f"topology {self.block}x{self.data} "
                 f"({self.block} group(s) x {self.data} device(s))")

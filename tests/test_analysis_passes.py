@@ -401,6 +401,88 @@ def test_happens_before_fires_on_unresolved_block():
     assert any("never resolved" in v.message for v in vs)
 
 
+def test_happens_before_group_events_clean():
+    """The full elastic vocabulary in legal order: a steal of a staged
+    block, a speculate/cancel twin pair, and a quarantine after expiry —
+    all on (event, coord, group) entries — stays quiet."""
+    trace = [("dispatch", A, 0), ("resolve", A, 0),
+             ("steal", B, 1), ("dispatch", B, 1),       # staged -> stolen
+             ("speculate", B, 0),                       # straggler hedge
+             ("cancel", B, 0),                          # loser side
+             ("resolve", B, 1),
+             ("dispatch", C, 1), ("expire", C, 1),
+             ("quarantine", C, 1),                      # group 1 drained
+             ("redispatch", C, 0), ("resolve", C, 0)]
+    art = REG.TraceArtifact(label="elastic-ok", trace=trace, deps=DEPS)
+    assert not violations_of(art, "happens-before")
+
+
+def test_happens_before_fires_on_dispatch_to_quarantined_group():
+    trace = [("dispatch", A, 0), ("expire", A, 0), ("quarantine", A, 0),
+             ("redispatch", A, 1), ("resolve", A, 1),
+             ("dispatch", B, 0),                        # group 0 is dead
+             ("resolve", B, 0)]
+    vs = violations_of(
+        REG.TraceArtifact(label="necro", trace=trace, deps={A: [], B: [A]}),
+        "happens-before")
+    assert any("quarantined group 0" in v.message for v in vs)
+    # ...and so does routing the watchdog redispatch back to it
+    back = [("dispatch", A, 0), ("expire", A, 0), ("quarantine", A, 0),
+            ("redispatch", A, 0), ("resolve", A, 0)]
+    vs = violations_of(
+        REG.TraceArtifact(label="necro2", trace=back, deps={A: []}),
+        "happens-before")
+    assert any("quarantined group 0" in v.message for v in vs)
+
+
+def test_happens_before_speculative_twin_protocol():
+    # a resolve with the twin pair still open fires
+    open_twin = [("dispatch", A, 0), ("speculate", A, 1),
+                 ("resolve", A, 0)]
+    vs = violations_of(
+        REG.TraceArtifact(label="twin-open", trace=open_twin, deps={A: []}),
+        "happens-before")
+    assert any("open speculative twin" in v.message for v in vs)
+    # a cancel with no speculate behind it fires
+    rogue_cancel = [("dispatch", A, 0), ("cancel", A, 0),
+                    ("redispatch", A, 1), ("resolve", A, 1)]
+    vs = violations_of(
+        REG.TraceArtifact(label="rogue-cancel", trace=rogue_cancel,
+                          deps={A: []}),
+        "happens-before")
+    assert any("without an open speculative twin" in v.message for v in vs)
+    # speculating a block that is not in flight fires
+    cold = [("dispatch", A, 0), ("resolve", A, 0), ("speculate", A, 1),
+            ("cancel", A, 1)]
+    vs = violations_of(
+        REG.TraceArtifact(label="cold-spec", trace=cold, deps={A: []}),
+        "happens-before")
+    assert any("speculated while not in flight" in v.message for v in vs)
+    # a run ending with both twins live fires
+    dangling = [("dispatch", A, 0), ("speculate", A, 1)]
+    vs = violations_of(
+        REG.TraceArtifact(label="dangling", trace=dangling, deps={A: []}),
+        "happens-before")
+    assert any("uncollapsed speculative twin" in v.message for v in vs)
+
+
+def test_happens_before_fires_on_steal_of_inflight_block():
+    trace = [("dispatch", A, 0), ("steal", A, 1), ("resolve", A, 0)]
+    vs = violations_of(
+        REG.TraceArtifact(label="hot-steal", trace=trace, deps={A: []}),
+        "happens-before")
+    assert any("stolen while in flight" in v.message for v in vs)
+
+
+def test_happens_before_fires_on_double_quarantine():
+    trace = [("dispatch", A, 0), ("expire", A, 0), ("quarantine", A, 0),
+             ("quarantine", A, 0), ("redispatch", A, 1), ("resolve", A, 1)]
+    vs = violations_of(
+        REG.TraceArtifact(label="dbl-q", trace=trace, deps={A: []}),
+        "happens-before")
+    assert any("quarantined twice" in v.message for v in vs)
+
+
 def test_window_occupancy():
     over = [("dispatch", A), ("dispatch", B), ("dispatch", C),
             ("resolve", A), ("resolve", B), ("resolve", C)]

@@ -147,7 +147,7 @@ def test_bitwise_deterministic_aggregation(conf_run, results, name):
 def _assert_trace_dep_safe(trace, part):
     graph = {t.coord: t for _, ts in ENG.build_phase_graph(part) for t in ts}
     dispatched, resolved = set(), set()
-    for ev, c in trace:
+    for ev, c, *_ in trace:
         if ev == "dispatch":
             assert set(graph[c].deps) <= resolved, \
                 f"{c} dispatched before deps {graph[c].deps} resolved"
@@ -253,7 +253,7 @@ COMPOSED_SCRIPT = textwrap.dedent("""
             "rmse_rerun": res2.rmse,
             "per_block_max_diff": float(np.abs(
                 res.per_block_rmse - ref.per_block_rmse).max()),
-            "trace": [[e, list(c)] for e, c in ex.trace],
+            "trace": [[t[0], list(t[1])] + list(t[2:]) for t in ex.trace],
             "n_test": res.n_test,
         }
     print(json.dumps(out))
@@ -294,6 +294,6 @@ def test_composed_2d_rmse_parity(composed_runs, name):
 @pytest.mark.parametrize("name", COMPOSED)
 def test_composed_2d_trace_dep_safe(composed_runs, conf_run, name):
     part, _, _, _, _ = conf_run
-    trace = [(e, tuple(c)) for e, c in
+    trace = [(t[0], tuple(t[1]), *t[2:]) for t in
              composed_runs["execs"][name]["trace"]]
     _assert_trace_dep_safe(trace, part)

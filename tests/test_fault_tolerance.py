@@ -76,7 +76,7 @@ def serial_healed(conf_run):
 def _assert_trace_dep_safe(trace, part):
     graph = {t.coord: t for _, ts in ENG.build_phase_graph(part) for t in ts}
     dispatched, resolved = set(), set()
-    for ev, c in trace:
+    for ev, c, *_ in trace:
         if ev == "dispatch":
             assert set(graph[c].deps) <= resolved, \
                 f"{c} dispatched before deps {graph[c].deps} resolved"
@@ -274,7 +274,7 @@ def test_resume_skips_restored_blocks(conf_run, tmp_path):
                 for p in d.glob("block_*.npz")}
     ex = _make("serial", record_trace=True)
     PP.run_pp(key, part, cfg, test, executor=ex, resume_from=d)
-    ran = {c for ev, c in ex.trace if ev == "dispatch"}
+    ran = {c for ev, c, *_ in ex.trace if ev == "dispatch"}
     assert not (ran & restored)             # restored blocks never re-run
     assert ran | restored == {t.coord for _, ts in
                               ENG.build_phase_graph(part) for t in ts}
@@ -325,6 +325,308 @@ def test_resume_mismatch_rejected(conf_run, tmp_path):
     with pytest.raises(ValueError, match="resume_from"):
         PP.run_pp(key, partition(train2, 2, 2), cfg, test,
                   executor="serial", resume_from=d)    # different grid
+
+
+# ---------------------------------------------------------------------------
+# elastic group fault domain: quarantine, work stealing, speculation,
+# graceful degradation (faked multi-device mesh; see the chaos CI job)
+# ---------------------------------------------------------------------------
+
+
+GROUP_EXECUTORS = ["async", "streaming"]
+
+needs_two = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="group fault domain needs >= 2 devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+
+
+def _grouped(name, permute=False, **kw):
+    """A 2-group (block=2, data=1) executor on the first two devices;
+    ``permute=True`` reverses the physical device order — logical group
+    indices (and the canonical-winner rule) are unchanged, so results
+    must stay bitwise identical."""
+    from repro.core.topology import Topology
+    devs = tuple(jax.devices()[:2])
+    if permute:
+        devs = devs[::-1]
+    topo = Topology(block=2, data=1, devices=devs)
+    if name == "streaming":
+        kw.setdefault("window", 2)
+        return ENG.StreamingExecutor(topology=topo, **kw)
+    return ENG.AsyncExecutor(topology=topo, **kw)
+
+
+@pytest.fixture(scope="module")
+def grouped_clean(conf_run):
+    """Fault-free 2-group reference runs. Also warms every executable on
+    BOTH physical devices (both permutations): executables cache per
+    device, and the rate estimator drops only each group's FIRST resolve
+    — a mid-run compile on the permuted topology would otherwise inflate
+    a group's EWMA rate, stalling the speculation threshold and blowing
+    tight watchdog floors."""
+    if len(jax.devices()) < 2:
+        pytest.skip("group fault domain needs >= 2 devices")
+    part, cfg, test, key, _ = conf_run
+    out = {}
+    for name in GROUP_EXECUTORS:
+        out[name] = PP.run_pp(key, part, cfg, test, executor=_grouped(name))
+        PP.run_pp(key, part, cfg, test,
+                  executor=_grouped(name, permute=True))
+    return out
+
+
+def _assert_group_trace_clean(ex, part, label):
+    """The extended happens-before pass over the real trace: no dispatch
+    to a quarantined group, twins collapse via cancel, steals hit staged
+    blocks only."""
+    from repro.analysis import registry as REG
+    deps = {t.coord: list(t.deps)
+            for _, ts in ENG.build_phase_graph(part) for t in ts}
+    vs = REG.analyze(REG.TraceArtifact(label=label, trace=ex.trace,
+                                       deps=deps))
+    assert not vs, [str(v) for v in vs]
+
+
+def test_group_health_rate_estimator():
+    """Satellite: per-group EWMA rates replace PR 6's single global
+    fastest-rate; each group drops its first (compile-span) resolve and
+    cold groups inherit the fastest calibrated rate."""
+    h = ENG._GroupHealth(3, quarantine_after=2)
+    assert h.rate(0) == 0.0                  # nothing calibrated yet
+    h.observe(0, 5.0)                        # first resolve: compile span
+    assert h.rate(0) == 0.0
+    h.observe(0, 1.0)
+    assert h.rate(0) == 1.0
+    h.observe(0, 2.0)                        # EWMA, alpha 0.4
+    assert abs(h.rate(0) - (0.6 * 1.0 + 0.4 * 2.0)) < 1e-12
+    # a cold group inherits the fastest calibrated rate, not zero —
+    # and keeps its OWN rate once calibrated, however slow
+    h.observe(1, 9.9)                        # dropped (group 1's compile)
+    assert h.rate(1) == h.rate(0)
+    h.observe(1, 3.0)
+    assert h.rate(1) == 3.0
+    assert h.rate(2) == h.global_rate == h.rate(0)
+    # consecutive-expiry counter: any resolve resets it; a drained
+    # group never re-trips
+    assert not h.note_expiry(0)
+    h.note_resolve(0)
+    assert not h.note_expiry(0)
+    assert h.note_expiry(0)
+    h.quarantine(0)
+    assert h.healthy() == [1, 2]
+    assert not h.note_expiry(0)
+
+
+def test_group_fault_policy_validation():
+    with pytest.raises(ValueError, match="on_group_fault"):
+        ENG.FaultPolicy(on_group_fault="shrug")
+    with pytest.raises(ValueError, match="quarantine_after"):
+        ENG.FaultPolicy(quarantine_after=0)
+    with pytest.raises(ValueError, match="min_groups"):
+        ENG.FaultPolicy(min_groups=0)
+    with pytest.raises(ValueError, match="speculate_at"):
+        ENG.FaultPolicy(speculate_at=-1.0)
+    with pytest.raises(ValueError, match="depth"):
+        ENG.AsyncExecutor(depth=0)
+    plan = ENG.FaultPlan(group_dead_at={1: 2},
+                         group_slow_at={0: (1, 2.5)})
+    assert not plan.group_dead(1, 1) and plan.group_dead(1, 2)
+    assert not plan.group_dead(0, 0)
+    assert plan.group_slow_s(0, 0) == 0.0
+    assert plan.group_slow_s(0, 1) == 2.5
+    assert plan.group_slow_s(1, 5) == 0.0
+
+
+def test_topology_without_groups():
+    """Survivor sub-topology construction (the resume path after
+    ``TopologyDegradedError``)."""
+    from repro.core.topology import Topology
+    devs = tuple(range(8))        # device identity is opaque to the math
+    t = Topology(block=4, data=2, devices=devs)
+    s = t.without_groups((1, 3))
+    assert (s.block, s.data) == (2, 2)
+    assert s.devices == t.group(0) + t.group(2)
+    assert t.without_groups(()) == t
+    with pytest.raises(ValueError, match="unknown group"):
+        t.without_groups((4,))
+    with pytest.raises(ValueError, match="every device group"):
+        t.without_groups((0, 1, 2, 3))
+
+
+@needs_two
+@pytest.mark.parametrize("name", GROUP_EXECUTORS)
+def test_group_dead_quarantine_heals_bitwise(conf_run, grouped_clean, name):
+    """A group that dies mid-run expires ``quarantine_after`` consecutive
+    times and is quarantined; its staged share and in-flight blocks
+    rebalance onto the survivor under the same keys, so the healed run
+    is bitwise identical to the fault-free 2-group run."""
+    part, cfg, test, key, _ = conf_run
+    clean = grouped_clean[name]
+    pol = ENG.FaultPolicy(timeout_floor_s=1.0, timeout_slack=0.0,
+                          quarantine_after=2, max_retries=5)
+    ex = _grouped(name, record_trace=True)
+    res = PP.run_pp(key, part, cfg, test, executor=ex,
+                    fault_plan=ENG.FaultPlan(group_dead_at={1: 0}),
+                    fault_policy=pol)
+    assert res.group_stats["n_quarantined"] == 1
+    assert ("group", "quarantined") in {(f.kind, f.action)
+                                        for f in res.faults}
+    assert res.rmse == clean.rmse
+    np.testing.assert_array_equal(np.asarray(res.U_agg.eta),
+                                  np.asarray(clean.U_agg.eta))
+    np.testing.assert_array_equal(np.asarray(res.V_agg.Lambda),
+                                  np.asarray(clean.V_agg.Lambda))
+    _assert_group_trace_clean(ex, part, f"{name}-group-dead")
+
+
+@needs_two
+@pytest.mark.parametrize("name", GROUP_EXECUTORS)
+def test_group_dead_min_groups_breach_raises(conf_run, grouped_clean, name,
+                                             tmp_path):
+    """Quarantine below ``min_groups`` flushes a checkpoint and raises
+    ``TopologyDegradedError`` naming the dead groups — and the flushed
+    directory resumes cleanly on a healthy topology."""
+    part, cfg, test, key, _ = conf_run
+    pol = ENG.FaultPolicy(timeout_floor_s=1.0, timeout_slack=0.0,
+                          quarantine_after=1, min_groups=2, max_retries=5)
+    d = tmp_path / "ckpt"
+    with pytest.raises(ENG.TopologyDegradedError, match="group"):
+        PP.run_pp(key, part, cfg, test, executor=_grouped(name),
+                  fault_plan=ENG.FaultPlan(group_dead_at={1: 0}),
+                  fault_policy=pol, checkpoint_dir=d)
+    dead = None
+    try:
+        PP.run_pp(key, part, cfg, test, executor=_grouped(name),
+                  fault_plan=ENG.FaultPlan(group_dead_at={1: 0}),
+                  fault_policy=pol)
+    except ENG.TopologyDegradedError as e:
+        dead = e.dead_groups
+    assert dead == (1,)
+    assert (d / "meta.json").exists()
+    # resume on the survivor sub-topology named by the error
+    from repro.core.topology import Topology
+    survivor = Topology(block=2, data=1,
+                        devices=tuple(jax.devices()[:2])).without_groups(dead)
+    assert survivor.block == 1 and survivor.devices[0] == jax.devices()[0]
+    ex2 = (ENG.StreamingExecutor(window=2, topology=survivor)
+           if name == "streaming" else ENG.AsyncExecutor(topology=survivor))
+    res = PP.run_pp(key, part, cfg, test, executor=ex2, resume_from=d)
+    assert res.rmse == grouped_clean[name].rmse
+
+
+@needs_two
+@pytest.mark.parametrize("name", GROUP_EXECUTORS)
+def test_group_dead_continue_on_survivors(conf_run, grouped_clean, name):
+    """``on_group_fault='continue'`` keeps the run alive below
+    ``min_groups``: the survivors finish the graph bitwise-identically."""
+    part, cfg, test, key, _ = conf_run
+    pol = ENG.FaultPolicy(timeout_floor_s=1.0, timeout_slack=0.0,
+                          quarantine_after=1, min_groups=2,
+                          on_group_fault="continue", max_retries=5)
+    res = PP.run_pp(key, part, cfg, test, executor=_grouped(name),
+                    fault_plan=ENG.FaultPlan(group_dead_at={1: 0}),
+                    fault_policy=pol)
+    assert res.group_stats["n_quarantined"] == 1
+    assert res.rmse == grouped_clean[name].rmse
+
+
+@needs_two
+@pytest.mark.parametrize("name", GROUP_EXECUTORS)
+def test_group_slow_speculative_winner_deterministic(conf_run,
+                                                     grouped_clean, name):
+    """A straggling group's dispatches are twinned on the idle group
+    with the same attempt-0 key; resolution commits the canonical-group
+    winner, so rerunning with the PHYSICAL device order permuted (same
+    logical groups) commits bitwise-identical numbers."""
+    part, cfg, test, key, _ = conf_run
+    clean = grouped_clean[name]
+    pol = ENG.FaultPolicy(timeout_floor_s=60.0, timeout_slack=0.0,
+                          speculate_at=2.0)
+    plan = ENG.FaultPlan(group_slow_at={1: (0, 1.5)})
+    for permute in (False, True):
+        ex = _grouped(name, permute=permute, record_trace=True)
+        res = PP.run_pp(key, part, cfg, test, executor=ex,
+                        fault_plan=plan, fault_policy=pol)
+        assert res.group_stats["n_speculations"] >= 1, res.group_stats
+        assert res.group_stats["n_cancels"] >= 1, res.group_stats
+        assert res.rmse == clean.rmse
+        np.testing.assert_array_equal(np.asarray(res.U_agg.eta),
+                                      np.asarray(clean.U_agg.eta))
+        np.testing.assert_array_equal(np.asarray(res.V_agg.Lambda),
+                                      np.asarray(clean.V_agg.Lambda))
+        _assert_group_trace_clean(ex, part,
+                                  f"{name}-speculate-permute{permute}")
+
+
+@needs_two
+@pytest.mark.parametrize("name", GROUP_EXECUTORS)
+def test_group_steal_resolves_exactly_once(conf_run, grouped_clean, name):
+    """With ``depth=1`` (and window=1 for streaming — single-block
+    chunks, so the straggler's prefetch slot holds stealable work) the
+    groups hold staged shares; an idle group steals from the most-loaded
+    one. Every block still resolves exactly once and the numbers stay
+    bitwise."""
+    import collections
+    part, cfg, test, key, _ = conf_run
+    kw = {"window": 1} if name == "streaming" else {}
+    # like-for-like fault-free reference (window=1 chunks recompile, so
+    # this also warms them before the faulted run)
+    clean = (PP.run_pp(key, part, cfg, test, executor=_grouped(name, **kw))
+             if kw else grouped_clean[name])
+    pol = ENG.FaultPolicy(timeout_floor_s=60.0, timeout_slack=0.0)
+    ex = _grouped(name, record_trace=True, depth=1, **kw)
+    res = PP.run_pp(key, part, cfg, test, executor=ex,
+                    fault_plan=ENG.FaultPlan(group_slow_at={1: (0, 1.0)}),
+                    fault_policy=pol)
+    assert res.group_stats["n_steals"] >= 1, res.group_stats
+    resolves = collections.Counter(c for ev, c, *_ in ex.trace
+                                   if ev == "resolve")
+    graph = {t.coord for _, ts in ENG.build_phase_graph(part) for t in ts}
+    assert set(resolves) == graph
+    assert set(resolves.values()) == {1}     # exactly once, stolen or not
+    assert res.rmse == clean.rmse
+    np.testing.assert_array_equal(np.asarray(res.U_agg.eta),
+                                  np.asarray(clean.U_agg.eta))
+    _assert_group_trace_clean(ex, part, f"{name}-steal")
+
+
+@pytest.mark.skipif(len(jax.devices()) < 4,
+                    reason="topology switch needs 4 devices")
+def test_resume_across_topology_switch(conf_run, tmp_path):
+    """Checkpoint meta records run IDENTITY only, not placement: a run
+    checkpointed under a 4x1 topology resumes under 2x1 bitwise (same
+    per-block math), and a complete 4x1 directory restores wholesale
+    under 2x2 data-sharded groups."""
+    from repro.core.topology import Topology
+    part, cfg, test, key, _ = conf_run
+    clean21 = PP.run_pp(key, part, cfg, test,
+                        executor=ENG.AsyncExecutor(topology=Topology(2, 1)))
+    d = tmp_path / "ckpt41"
+    with pytest.raises(ENG.BlockFaultError):
+        PP.run_pp(key, part, cfg, test,
+                  executor=ENG.AsyncExecutor(topology=Topology(4, 1)),
+                  checkpoint_dir=d,
+                  fault_plan=ENG.FaultPlan(fail_dispatch_at={(1, 2): 99}),
+                  max_retries=0, on_fault="raise")
+    n_saved = len(list(d.glob("block_*.npz")))
+    assert 0 < n_saved < part.I * part.J     # genuinely mid-graph
+    res = PP.run_pp(key, part, cfg, test,
+                    executor=ENG.AsyncExecutor(topology=Topology(2, 1)),
+                    resume_from=d)
+    assert res.resumed_blocks == n_saved
+    assert res.rmse == clean21.rmse          # bitwise across the switch
+    np.testing.assert_array_equal(np.asarray(res.U_agg.eta),
+                                  np.asarray(clean21.U_agg.eta))
+    full = tmp_path / "full41"
+    ref41 = PP.run_pp(key, part, cfg, test,
+                      executor=ENG.AsyncExecutor(topology=Topology(4, 1)),
+                      checkpoint_dir=full)
+    res22 = PP.run_pp(key, part, cfg, test,
+                      executor=ENG.AsyncExecutor(topology=Topology(2, 2)),
+                      resume_from=full)
+    assert res22.resumed_blocks == part.I * part.J
+    assert res22.rmse == ref41.rmse          # nothing recomputed
 
 
 # ---------------------------------------------------------------------------

@@ -304,7 +304,7 @@ def test_async_completion_order_stress(mini_3x3, seed):
     graph = {t.coord: t for _, ts in ENG.build_phase_graph(part) for t in ts}
     resolved = set()
     dispatched = set()
-    for ev, c in ex.trace:
+    for ev, c, *_ in ex.trace:
         if ev == "dispatch":
             assert set(graph[c].deps) <= resolved, \
                 f"{c} dispatched before deps {graph[c].deps} resolved"
@@ -474,7 +474,8 @@ def test_async_priority_dispatch_order(mini_3x3):
     est = {c: float(part.block(*c).coo.nnz + 1) for c in graph}
     prio = ENG.critical_path_priority(graph, est)
     b_coords = [c for c in graph if graph[c].phase in ("b_row", "b_col")]
-    order = [c for ev, c in ex.trace if ev == "dispatch" and c in b_coords]
+    order = [c for ev, c, *_ in ex.trace
+             if ev == "dispatch" and c in b_coords]
     # phase b becomes ready all at once (single dep on (0,0)), so its
     # dispatch order is exactly the priority order
     assert order == sorted(b_coords, key=lambda c: -prio[c])
