@@ -62,9 +62,6 @@ samples) REPLACES its record instead of duplicating it (``merge_runs``).
 from __future__ import annotations
 
 import argparse
-import json
-from pathlib import Path
-
 import jax
 import numpy as np
 
@@ -74,6 +71,7 @@ from repro.core.partition import partition, suggest_grid
 from repro.data import synthetic as SYN
 from repro.data.sparse import COO, apply_permutation, train_test_split
 
+from benchmarks import common as COMMON
 from benchmarks.common import emit, gibbs_live_peak
 
 # a run record's config identity: re-running the same config replaces its
@@ -95,28 +93,13 @@ def _run_key(rec: dict) -> tuple:
 
 
 def merge_runs(doc, run_rec: dict) -> dict:
-    """Idempotently merge one run record into the ``{runs: [...]}`` schema:
-    an existing record with the same config key (RUN_KEY) is REPLACED, any
-    other record is kept, and the PR-2 single-run layout (top-level
-    ``records``) migrates transparently. Pure function of (previous doc or
-    None, new record) — unit-tested over a temp file in
-    tests/test_bench_json.py."""
-    runs = []
-    if doc:
-        runs = doc.get("runs", [doc] if doc.get("records") else [])
-        runs = [{k: v for k, v in r.items() if k != "benchmark"}
-                for r in runs]
-    runs = [r for r in runs if _run_key(r) != _run_key(run_rec)]
-    runs.append(run_rec)
-    return {"benchmark": "pp_engine", "runs": runs}
+    """This bench's binding of ``benchmarks.common.merge_runs`` (kept as a
+    public name — tests and tooling import it from here)."""
+    return COMMON.merge_runs(doc, run_rec, _run_key, "pp_engine")
 
 
 def merge_json_out(path, run_rec: dict) -> dict:
-    out = Path(path)
-    doc = json.loads(out.read_text()) if out.exists() else None
-    merged = merge_runs(doc, run_rec)
-    out.write_text(json.dumps(merged, indent=2))
-    return merged
+    return COMMON.merge_json_out(path, run_rec, _run_key, "pp_engine")
 
 
 def make_skewed(p: SYN.DatasetPreset, I: int, J: int, skew: float,

@@ -1,0 +1,155 @@
+"""Serving-path benchmark: batched top-K latency/QPS over a live store.
+
+Trains one PP run, builds the device-resident ``PosteriorStore``, then
+drives the ``MicroBatchRouter`` closed-loop at a sweep of batch sizes for
+BOTH scoring modes (exact posterior-mean ranking and per-request Thompson
+draws): each config submits ``--iters`` full batches and reports
+per-request p50/p99 latency (inclusive of the scoring dispatch — the
+router stamps tickets after the device result is host-visible) and QPS.
+The batch executable is warmed before timing, so the numbers isolate
+serving, not compilation.
+
+With ``--json-out`` each (mode, batch) config merge-appends one run
+record into the ``{runs: [...]}`` schema idempotently (re-running a
+config REPLACES its record — ``benchmarks.common.merge_runs``, covered
+in tests/test_bench_json.py).
+
+  PYTHONPATH=src:. python benchmarks/bench_serving.py \
+      --dataset movielens --blocks 4 --samples 20 \
+      --batches 1 8 32 --json-out BENCH_serving.json
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core import bmf as BMF
+from repro.core import pp as PP
+from repro.core.partition import partition, suggest_grid
+from repro.data import synthetic as SYN
+from repro.data.sparse import train_test_split
+from repro.launch.bmf_serve import build_requests
+from repro.serving import MicroBatchRouter, PosteriorStore
+from repro.serving.scoring import MODES
+
+from benchmarks import common as COMMON
+from benchmarks.common import emit
+
+# a run record's config identity (one record per mode x batch size)
+RUN_KEY = ("dataset", "grid", "K", "samples", "slots", "mode", "batch")
+
+
+def _run_key(rec: dict) -> tuple:
+    return tuple(tuple(v) if isinstance(v, list) else v
+                 for v in (rec.get(f) for f in RUN_KEY))
+
+
+def merge_runs(doc, run_rec: dict) -> dict:
+    """This bench's binding of ``benchmarks.common.merge_runs`` (public
+    name — tests and tooling import it from here)."""
+    return COMMON.merge_runs(doc, run_rec, _run_key, "serving")
+
+
+def merge_json_out(path, run_rec: dict) -> dict:
+    return COMMON.merge_json_out(path, run_rec, _run_key, "serving")
+
+
+def bench_config(store, reqs, mode: str, batch: int, k: int, max_seen: int,
+                 iters: int, seed: int) -> dict:
+    """Closed-loop: submit ``batch`` requests back to back (the router
+    auto-dispatches at the full batch), ``iters`` times."""
+    router = MicroBatchRouter(store, k=k, mode=mode, latency_budget_s=0.0,
+                              max_batch=batch, max_seen=max_seen, seed=seed)
+    # warm the batch executable
+    for r in reqs[:batch]:
+        router.submit(r)
+    router.flush()
+    router.latencies_s.clear()
+    router.dispatches.clear()
+
+    t0 = time.time()
+    for it in range(iters):
+        lo = (it * batch) % max(1, len(reqs) - batch)
+        for r in reqs[lo:lo + batch]:
+            router.submit(r)
+        router.flush()           # tail (short final slice) dispatches too
+    wall = time.time() - t0
+
+    lat = np.asarray(router.latencies_s)
+    return {
+        "mode": mode, "batch": batch,
+        "n_requests": int(len(lat)),
+        "n_dispatches": len(router.dispatches),
+        "wall_s": round(wall, 4),
+        "qps": round(len(lat) / max(wall, 1e-9), 1),
+        "p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 4),
+        "p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 4),
+        "plan": [list(s) for s in router.plan_signatures],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="movielens",
+                    choices=list(SYN.PRESETS))
+    ap.add_argument("--blocks", type=int, default=4)
+    ap.add_argument("--samples", type=int, default=20)
+    ap.add_argument("--k", type=int, default=0, help="0 = preset K (cap 16)")
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--topk", type=int, default=10)
+    ap.add_argument("--batches", type=int, nargs="+", default=[1, 8, 32])
+    ap.add_argument("--modes", nargs="+", default=list(MODES),
+                    choices=list(MODES))
+    ap.add_argument("--iters", type=int, default=30,
+                    help="timed batches per (mode, batch) config")
+    ap.add_argument("--max-seen", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+
+    coo, p = SYN.generate(args.dataset, seed=args.seed)
+    train, test = train_test_split(coo, 0.1, seed=args.seed + 1)
+    K = args.k or min(p.K, 16)
+    cfg = BMF.BMFConfig(K=K, n_samples=args.samples,
+                        burnin=args.samples // 3)
+    I, J = suggest_grid(train.n_rows, train.n_cols, args.blocks)
+    part = partition(train, I, J)
+    print(f"dataset={args.dataset} N={train.n_rows} M={train.n_cols} "
+          f"grid={I}x{J} K={K}")
+
+    res = PP.run_pp(jax.random.key(args.seed), part, cfg, test,
+                    executor="stacked")
+    store = PosteriorStore.from_pp_result(
+        res, jax.random.key(args.seed + 2), n_slots=args.slots)
+    jax.block_until_ready(store)
+    print(f"trained RMSE={res.rmse:.4f}; store {store.n_users}x"
+          f"{store.n_items} K={store.K} slots={store.n_slots}")
+
+    n_reqs = max(args.batches) * 4
+    reqs = build_requests(train, n_reqs, args.max_seen, args.seed + 4)
+
+    base = {"dataset": args.dataset, "grid": [I, J], "K": K,
+            "samples": args.samples, "slots": args.slots,
+            "topk": args.topk, "rmse": round(res.rmse, 4)}
+    for mode in args.modes:
+        for batch in args.batches:
+            rec = dict(base)
+            rec.update(bench_config(store, reqs, mode, batch, args.topk,
+                                    args.max_seen, args.iters,
+                                    args.seed + 5))
+            emit(f"serving/{mode}/b{batch}", rec["p50_ms"] / 1e3,
+                 f"qps={rec['qps']}")
+            print(f"  {mode:9s} batch={batch:3d}  "
+                  f"p50={rec['p50_ms']:.2f}ms p99={rec['p99_ms']:.2f}ms "
+                  f"QPS={rec['qps']:.0f} ({rec['n_dispatches']} dispatches)")
+            if args.json_out:
+                merge_json_out(args.json_out, rec)
+    if args.json_out:
+        print("->", args.json_out)
+
+
+if __name__ == "__main__":
+    main()

@@ -7,8 +7,39 @@ metric (RMSE, speedup, bytes, ...).
 from __future__ import annotations
 
 import contextlib
+import json
 import time
+from pathlib import Path
 from typing import Callable
+
+
+def merge_runs(doc, run_rec: dict, key_fn: Callable[[dict], tuple],
+               benchmark: str) -> dict:
+    """Idempotently merge one run record into the ``{runs: [...]}`` schema:
+    an existing record with the same config key (``key_fn``) is REPLACED,
+    any other record is kept, and the legacy single-run layout (top-level
+    ``records``) migrates transparently. Pure function of (previous doc or
+    None, new record) — each bench wraps it with its own key/benchmark
+    name (``bench_pp_engine.merge_runs``, ``bench_serving.merge_runs``)
+    and the wrappers are unit-tested over temp files in
+    tests/test_bench_json.py."""
+    runs = []
+    if doc:
+        runs = doc.get("runs", [doc] if doc.get("records") else [])
+        runs = [{k: v for k, v in r.items() if k != "benchmark"}
+                for r in runs]
+    runs = [r for r in runs if key_fn(r) != key_fn(run_rec)]
+    runs.append(run_rec)
+    return {"benchmark": benchmark, "runs": runs}
+
+
+def merge_json_out(path, run_rec: dict, key_fn: Callable[[dict], tuple],
+                   benchmark: str) -> dict:
+    out = Path(path)
+    doc = json.loads(out.read_text()) if out.exists() else None
+    merged = merge_runs(doc, run_rec, key_fn, benchmark)
+    out.write_text(json.dumps(merged, indent=2))
+    return merged
 
 
 def timed(fn: Callable, *args, repeats: int = 1):

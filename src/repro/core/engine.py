@@ -2479,4 +2479,6 @@ def run_phase_graph(key, part: Partition, cfg: BMF.BMFConfig, test: COO,
                            n_quarantined=executor.n_quarantined,
                            n_steals=executor.n_steals,
                            n_speculations=executor.n_speculations,
-                           n_cancels=executor.n_cancels))
+                           n_cancels=executor.n_cancels),
+                       row_perm=part.row_perm, col_perm=part.col_perm,
+                       tau=cfg.tau, K=cfg.K)

@@ -71,6 +71,16 @@ class PPResult:
     # events: quarantine / steal / speculate / cancel). All-zero for
     # barrier executors and single-group async/streaming runs.
     group_stats: Dict[str, int] = field(default_factory=dict)
+    # serving-export seam (repro.serving.PosteriorStore.from_pp_result):
+    # U_agg/V_agg live in PERMUTED row/col space, so the result carries the
+    # original->permuted maps plus the chain config the serve-time fold-in
+    # conditional needs (rating precision tau, latent dim K). A PPResult is
+    # thereby a self-contained servable artifact — no Partition or
+    # BMFConfig needed at store-build time.
+    row_perm: Optional[np.ndarray] = None
+    col_perm: Optional[np.ndarray] = None
+    tau: Optional[float] = None
+    K: Optional[int] = None
 
     @property
     def n_retries(self) -> int:

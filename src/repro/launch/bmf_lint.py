@@ -34,6 +34,13 @@ the composed --topo pair on a faked multi-device host), this lints:
   * the phase graph itself (cycles/unreachable/dangling deps) and the
     partition+coalesce executable-shape plan (recompilation budget).
 
+It also lints the SERVING path (executor-independent, once per run): the
+``serving.scoring.score_topk`` jaxpr for both modes, traced through
+``trace_scoring`` at serving dims against ``scoring_budget`` — a dense
+all-users x all-items (N, M) score matrix or a host callback inside the
+scoring executable is a violation — plus the ``MicroBatchRouter`` bucket
+plan (recompilation budget).
+
 Emits a machine-readable JSON report (one violation object per breach,
 with fix-hint text) and exits non-zero on any violation — the CI
 lint-invariants job gates on that.
@@ -65,6 +72,13 @@ OUT = Path(__file__).resolve().parents[3] / "benchmarks" / "bmf_lint_report.json
 # block-dim budget by >2x
 LINT_DIMS = dict(n_rows=64, n_cols=48, m_rows=16, m_cols=24, n_test=64)
 K = 8
+
+# serving-path lint dims: a dense (n_users, n_items) f32 score matrix
+# (1 MiB here) clears scoring_budget (512 KiB) while every legitimate
+# buffer — store precisions, resident sample slots, per-batch gathered
+# slots — fits
+SERVE_DIMS = dict(n_users=1024, n_items=256, K=8, batch=32, n_seen=16,
+                  n_fold=4, n_slots=8, k=10)
 
 
 def _chain_artifacts(label, tchain, *, comm, allowed_groups, budget):
@@ -194,6 +208,46 @@ def plan_signatures(name, part, test, cfg):
     return sorted((tag, s.astuple()) for tag, s in shapes.items())
 
 
+def serving_artifacts():
+    """The serving path's lintable surface: one scoring jaxpr per mode at
+    SERVE_DIMS (materialization budget = ``scoring_budget``, plus the
+    dtype-promotion and host-callback passes for free) and the router's
+    coalesced executable-shape plan."""
+    from repro.serving import router as ROUTE
+    from repro.serving import scoring as SCORE
+    d = SERVE_DIMS
+    budget = SCORE.scoring_budget(d["n_users"], d["n_items"], d["K"],
+                                  d["batch"], d["n_slots"])
+    arts = []
+    for mode in SCORE.MODES:
+        ts = SCORE.trace_scoring(d["n_users"], d["n_items"], d["K"],
+                                 d["batch"], d["n_seen"], d["n_fold"],
+                                 d["n_slots"], k=d["k"], mode=mode)
+        arts.append(LINT.JaxprArtifact(
+            label=f"serving/score_topk[{mode}]/jaxpr",
+            jaxpr=ts.traced.jaxpr, bytes_budget=budget))
+    store = SCORE.abstract_store(d["n_users"], d["n_items"], d["K"],
+                                 d["n_slots"])
+    router = ROUTE.MicroBatchRouter(store, k=d["k"],
+                                    max_batch=d["batch"])
+    arts.append(LINT.PlanArtifact(label="serving/router/plan",
+                                  signatures=router.plan_signatures))
+    return arts
+
+
+def lint_serving():
+    arts = serving_artifacts()
+    violations = []
+    for a in arts:
+        violations += LINT.analyze(a)
+    return {
+        "executor": "serving",
+        "topology": [1, 1],
+        "artifacts": [a.label for a in arts],
+        "violations": [v.as_dict() for v in violations],
+    }, violations
+
+
 def lint_executor(name, topo, part, cfg, test, key):
     arts = static_artifacts(name, topo, cfg)
     arts += behavioral_artifacts(name, topo, part, cfg, test, key)
@@ -253,6 +307,11 @@ def main(argv=None):
             print(f"[bmf_lint] {name}@{topo.block}x{topo.data}: "
                   f"{len(rec['artifacts'])} artifact(s), "
                   f"{len(vs)} violation(s)")
+    rec, vs = lint_serving()
+    runs.append(rec)
+    all_violations += vs
+    print(f"[bmf_lint] serving: {len(rec['artifacts'])} artifact(s), "
+          f"{len(vs)} violation(s)")
 
     report = {
         "executors": names,

@@ -1,0 +1,28 @@
+"""Posterior serving layer — the trained PPResult as a live artifact.
+
+Training (core.pp / core.engine) ends with aggregated per-row Gaussian
+posteriors in natural parameters; this package is the other half of the
+ROADMAP's "millions of users" story: keep those posteriors DEVICE-resident
+and answer batched top-K recommendation requests from them, exploiting the
+uncertainty the paper trains for (Thompson sampling over posterior draws)
+alongside exact posterior-mean ranking.
+
+  store    — ``PosteriorStore``: U/V moment summaries + S item-factor
+             posterior sample slots, built from any executor's
+             ``PPResult`` in one jitted gather (no host round-trip).
+  scoring  — the jitted batched scoring path: gather → fold-in
+             conditional → ``U_u @ V_meanᵀ`` (or per-request posterior
+             draw) → seen-item masking → ``lax.top_k``; plus the
+             ``trace_scoring`` lowering hook and ``scoring_budget`` the
+             static analyzer lints against.
+  router   — ``MicroBatchRouter``: coalesces requests under a latency
+             budget into fixed shape-bucketed batches
+             (``partition.coalesce_shapes`` over padded request shapes,
+             ONE executable per bucket) and dispatches to scoring
+             workers.
+"""
+from repro.serving.store import PosteriorStore               # noqa: F401
+from repro.serving.scoring import (                          # noqa: F401
+    RequestBatch, score_topk, scoring_budget, trace_scoring)
+from repro.serving.router import (                           # noqa: F401
+    MicroBatchRouter, Request, ScoringWorker)

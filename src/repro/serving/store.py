@@ -1,0 +1,130 @@
+"""Device-resident posterior store — a trained ``PPResult`` made servable.
+
+``run_pp``'s aggregated posteriors live in PERMUTED row/col space (the
+load-balancing permutation the partition applied); a store is those same
+natural parameters gathered back to ORIGINAL user/item ids, plus the
+derived moment summaries scoring needs (posterior means) and ``n_slots``
+item-factor posterior samples for Thompson scoring. The whole build is ONE
+jitted executable over the result's device arrays — the posteriors never
+round-trip through the host (only the permutation index vectors are
+shipped up, they are host numpy to begin with).
+
+Layout (all jax arrays, original id space):
+
+  U         RowGaussians (N, K) / (N, K, K)   user posterior, natural params
+  V         RowGaussians (M, K) / (M, K, K)   item posterior
+  U_mean    (N, K)      Λ⁻¹η via jittered Cholesky (matches the scoring path)
+  V_mean    (M, K)
+  V_samples (S, M, K)   slot s = one joint posterior draw of ALL item rows
+  tau       ()          rating precision the fold-in conditional reuses
+
+A Thompson request pairs a fresh user-factor draw with ONE slot (a
+coherent item-matrix sample), so item-side uncertainty enters scoring
+without per-request (M, K, K) sampling work.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import posterior as POST
+from repro.core.posterior import RowGaussians
+
+
+def _project_pd(Lambda: jnp.ndarray, rel_floor: float = 1e-4) -> jnp.ndarray:
+    """Project per-row precisions onto the PD cone.
+
+    The divide-away aggregation subtracts multiply-counted priors from
+    SAMPLE-ESTIMATED per-block precisions; for weakly observed rows the
+    estimation noise makes the difference indefinite (short chains: up to
+    ~40% of rows), which would NaN every Cholesky in the serving path.
+    Serving's sanitization: symmetrize, then clamp each eigenvalue to its
+    MAGNITUDE (floored at rel_floor x the row's largest magnitude) — the
+    information scale of a flipped direction is preserved and the per-row
+    condition number is bounded by 1/rel_floor, so posterior draws stay
+    sane instead of exploding along noise directions."""
+    sym = (Lambda + jnp.swapaxes(Lambda, -1, -2)) / 2
+    ev, Q = jnp.linalg.eigh(sym)
+    mag = jnp.abs(ev)
+    floor = jnp.maximum(rel_floor * jnp.max(mag, axis=-1, keepdims=True),
+                        1e-6)
+    return jnp.einsum("...ik,...k,...jk->...ij", Q, jnp.maximum(mag, floor),
+                      Q)
+
+
+def _posterior_mean(g: RowGaussians, jitter: float) -> jnp.ndarray:
+    """μ = (Λ + jitter·I)⁻¹ η via Cholesky — the SAME factor+solve the
+    scoring path and ``sample_rows_noise`` use, so store means and scores
+    computed from raw natural params agree bitwise."""
+    K = g.eta.shape[-1]
+    chol = jnp.linalg.cholesky(g.Lambda + jitter * jnp.eye(K))
+    return jax.scipy.linalg.cho_solve((chol, True), g.eta[..., None])[..., 0]
+
+
+class PosteriorStore(NamedTuple):
+    U: RowGaussians            # (N, K) / (N, K, K), original user ids
+    V: RowGaussians            # (M, K) / (M, K, K), original item ids
+    U_mean: jnp.ndarray        # (N, K)
+    V_mean: jnp.ndarray        # (M, K)
+    V_samples: jnp.ndarray     # (S, M, K)
+    tau: jnp.ndarray           # () f32
+
+    @property
+    def n_users(self) -> int:
+        return self.U_mean.shape[0]
+
+    @property
+    def n_items(self) -> int:
+        return self.V_mean.shape[0]
+
+    @property
+    def K(self) -> int:
+        return self.V_mean.shape[-1]
+
+    @property
+    def n_slots(self) -> int:
+        return self.V_samples.shape[0]
+
+    @classmethod
+    def from_pp_result(cls, res, key=None, n_slots: int = 8,
+                       jitter: float = 1e-6) -> "PosteriorStore":
+        """Build a store from any executor's ``PPResult``.
+
+        The result must carry the serving seam (``row_perm``/``col_perm``/
+        ``tau`` — populated by ``engine.run_phase_graph`` since the store
+        existed); ``key`` seeds the item-slot posterior draws."""
+        if res.row_perm is None or res.col_perm is None or res.tau is None:
+            raise ValueError(
+                "PPResult lacks the serving export seam (row_perm/col_perm/"
+                "tau are None) — re-run training with the current engine; "
+                "pre-seam checkpointed results cannot be served")
+        if key is None:
+            key = jax.random.key(0)
+        return _build_store(res.U_agg, res.V_agg,
+                            jnp.asarray(res.row_perm, jnp.int32),
+                            jnp.asarray(res.col_perm, jnp.int32),
+                            jnp.asarray(res.tau, jnp.float32), key,
+                            n_slots=int(n_slots), jitter=float(jitter))
+
+
+@partial(jax.jit, static_argnames=("n_slots", "jitter"))
+def _build_store(U_agg: RowGaussians, V_agg: RowGaussians, row_perm,
+                 col_perm, tau, key, n_slots: int,
+                 jitter: float) -> PosteriorStore:
+    # perm maps original id -> permuted position, so the ORIGINAL-space
+    # posteriors are one device gather per factor side; precisions are
+    # PD-projected so every downstream Cholesky is well-defined
+    U = RowGaussians(eta=U_agg.eta[row_perm],
+                     Lambda=_project_pd(U_agg.Lambda[row_perm]))
+    V = RowGaussians(eta=V_agg.eta[col_perm],
+                     Lambda=_project_pd(V_agg.Lambda[col_perm]))
+    slot_keys = jax.random.split(key, n_slots)
+    V_samples = jax.vmap(
+        lambda kk: POST.sample_rows(kk, V, jitter=jitter))(slot_keys)
+    return PosteriorStore(U=U, V=V,
+                          U_mean=_posterior_mean(U, jitter),
+                          V_mean=_posterior_mean(V, jitter),
+                          V_samples=V_samples, tau=tau)

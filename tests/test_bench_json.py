@@ -1,6 +1,8 @@
-"""bench_pp_engine --json-out merge semantics: idempotent merge-append
-into the {runs: [...]} schema (re-running a config replaces its record),
-including migration of the PR-2 single-run layout."""
+"""--json-out merge semantics: idempotent merge-append into the
+{runs: [...]} schema (re-running a config replaces its record), including
+migration of the PR-2 single-run layout. Both benches bind the shared
+``benchmarks.common.merge_runs`` — bench_pp_engine keyed per training
+config, bench_serving keyed per (mode, batch) serving config."""
 import json
 import sys
 from pathlib import Path
@@ -11,6 +13,7 @@ ROOT = Path(__file__).resolve().parents[1]
 sys.path.insert(0, str(ROOT))
 
 bench = pytest.importorskip("benchmarks.bench_pp_engine")
+bench_srv = pytest.importorskip("benchmarks.bench_serving")
 
 
 def _rec(dataset="movielens", grid_kind="balanced", grid=(8, 2), K=10,
@@ -64,3 +67,58 @@ def test_merge_runs_pure_function_roundtrip():
     assert len(doc2["runs"]) == 1
     assert doc2["runs"][0]["records"][0]["wall_s"] == 3.0
     assert bench._run_key(doc2["runs"][0]) == bench._run_key(_rec())
+
+
+# ---------------------------------------------------------------------------
+# bench_serving: same machinery, serving-config identity (mode x batch)
+# ---------------------------------------------------------------------------
+
+
+def _srec(dataset="movielens", grid=(4, 1), K=10, samples=20, slots=8,
+          mode="mean", batch=8, p50=0.5, qps=1000.0):
+    return {"dataset": dataset, "grid": list(grid), "K": K,
+            "samples": samples, "slots": slots, "mode": mode,
+            "batch": batch, "p50_ms": p50, "qps": qps}
+
+
+def test_serving_merge_same_config_replaces(tmp_path):
+    out = tmp_path / "bench.json"
+    bench_srv.merge_json_out(out, _srec(p50=0.5))
+    bench_srv.merge_json_out(out, _srec(p50=0.3))   # same config, re-run
+    doc = json.loads(out.read_text())
+    assert doc["benchmark"] == "serving"
+    assert len(doc["runs"]) == 1
+    assert doc["runs"][0]["p50_ms"] == 0.3
+
+
+def test_serving_merge_mode_batch_sweep_coexists(tmp_path):
+    out = tmp_path / "bench.json"
+    for mode in ("mean", "thompson"):
+        for batch in (1, 8, 32):
+            bench_srv.merge_json_out(out, _srec(mode=mode, batch=batch))
+    doc = json.loads(out.read_text())
+    assert len(doc["runs"]) == 6
+    bench_srv.merge_json_out(out, _srec(mode="thompson", batch=8, qps=77.0))
+    doc = json.loads(out.read_text())
+    assert len(doc["runs"]) == 6                    # replaced, not appended
+    hit = [r for r in doc["runs"]
+           if r["mode"] == "thompson" and r["batch"] == 8]
+    assert len(hit) == 1 and hit[0]["qps"] == 77.0
+    assert all("benchmark" not in r for r in doc["runs"])
+
+
+def test_committed_serving_artifact_matches_merge_schema():
+    """The checked-in BENCH_serving.json must be a fixpoint of the merge:
+    re-merging any of its own records changes nothing."""
+    path = ROOT / "BENCH_serving.json"
+    doc = json.loads(path.read_text())
+    assert doc["benchmark"] == "serving"
+    keys = [bench_srv._run_key(r) for r in doc["runs"]]
+    assert len(keys) == len(set(keys))              # config identity unique
+    modes = {r["mode"] for r in doc["runs"]}
+    batches = {r["batch"] for r in doc["runs"]}
+    assert modes == {"mean", "thompson"} and len(batches) >= 3
+    merged = doc
+    for r in doc["runs"]:
+        merged = bench_srv.merge_runs(merged, dict(r))
+    assert merged == doc
