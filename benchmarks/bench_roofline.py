@@ -204,6 +204,30 @@ def run_gibbs_peak(datasets, samples: int = 10, blocks: int = 4,
                       f"xla effective peak={ma['effective_peak_mb']:.2f}MB "
                       f"(alias {ma['alias_mb']:.2f}MB)")
 
+        # the one-kernel sweep lowered into the SAME per-block chain the
+        # async executor dispatches: the (B, K, K)/(B, K) sufficient-stats
+        # round-trip disappears from XLA's temp assignment (the Λ/η
+        # accumulators live only inside the striped map body / VMEM)
+        for dt in ("fp32", "bf16"):
+            cfg_f = cfg._replace(sweep_fused=True, sweep_dtype=dt)
+            for donate in (False, True):
+                ma = _xla_chain_peak(buckets[tag], n_tag, cfg_f,
+                                     stacked=False, donate=donate,
+                                     has_priors=(tag != "a"))
+                kind = f"fused_sweep_{dt}"
+                rec = {"dataset": d, "kind": kind, "bucket": tag,
+                       "n_blocks": n_tag, "donate": donate,
+                       "sweep_dtype": dt, **ma}
+                rows.append(rec)
+                emit(f"gibbs_xla_peak/{d}/{kind}/donate={int(donate)}",
+                     0.0,
+                     f"effective_peak_mb={ma['effective_peak_mb']:.2f};"
+                     f"alias_mb={ma['alias_mb']:.2f};"
+                     f"temp_mb={ma['temp_mb']:.2f}")
+                print(f"  {d} {kind:14s} donate={int(donate)} "
+                      f"xla effective peak={ma['effective_peak_mb']:.2f}MB "
+                      f"(temp {ma['temp_mb']:.2f}MB)")
+
         for ex_name, make in (
                 ("stacked", ENG.StackedExecutor),
                 ("async", ENG.AsyncExecutor),

@@ -52,34 +52,39 @@ def path_name(use_kernel: bool) -> str:
     return "fused_pallas" if jax.default_backend() == "tpu" else "striped_xla"
 
 
-def run(dataset: str, n_probe: int = 8, use_kernel: bool = False):
+def run(dataset: str, n_probe: int = 8, use_kernel: bool = False,
+        sweep_fused: bool = False, sweep_dtype: str = "fp32"):
     coo, p = SYN.generate(dataset, seed=51)
     train, _ = train_test_split(coo, 0.1, seed=52)
     csr_r = coo_to_padded_csr(train)
     csr_c = coo_to_padded_csr(train.transpose())
     K = min(p.K, 16)
     cfg = BMF.BMFConfig(K=K, n_samples=n_probe, burnin=0,
-                        use_kernel=use_kernel)
+                        use_kernel=use_kernel, sweep_fused=sweep_fused,
+                        sweep_dtype=sweep_dtype)
     dummy = np.zeros(1, np.int32)
     # warmup + compile (synced so no warmup tail leaks into the timed region)
     jax.block_until_ready(
         GIBBS.run_gibbs(jax.random.key(0), csr_r, csr_c, dummy, dummy,
-                        BMF.BMFConfig(K=K, n_samples=1, burnin=0,
-                                      use_kernel=use_kernel)))
+                        cfg._replace(n_samples=1)))
     t0 = time.time()
     jax.block_until_ready(
         GIBBS.run_gibbs(jax.random.key(0), csr_r, csr_c, dummy, dummy, cfg).U)
     dt = (time.time() - t0) / n_probe
     rows_per_s = (train.n_rows + train.n_cols) / dt
     ratings_per_s = 2 * train.nnz / dt   # each rating visited in both factors
-    path = path_name(use_kernel)
-    emit(f"table1_throughput/{dataset}/{path}", dt,
+    path = "fused_sweep" if sweep_fused else path_name(use_kernel)
+    tag = f"{path}/{sweep_dtype}" if sweep_fused else path
+    emit(f"table1_throughput/{dataset}/{tag}", dt,
          f"rows_per_s={rows_per_s:.0f};ratings_per_s={ratings_per_s:.0f};K={K}")
-    return {"dataset": dataset, "path": path, "use_kernel": use_kernel,
-            "sec_per_sweep": dt, "rows_per_s": rows_per_s,
-            "ratings_per_s": ratings_per_s, "K": K, "nnz": train.nnz,
-            "n_rows": train.n_rows, "n_cols": train.n_cols,
-            "max_nnz_row": csr_r.max_nnz, "backend": jax.default_backend()}
+    rec = {"dataset": dataset, "path": path, "use_kernel": use_kernel,
+           "sec_per_sweep": dt, "rows_per_s": rows_per_s,
+           "ratings_per_s": ratings_per_s, "K": K, "nnz": train.nnz,
+           "n_rows": train.n_rows, "n_cols": train.n_cols,
+           "max_nnz_row": csr_r.max_nnz, "backend": jax.default_backend()}
+    if sweep_fused:
+        rec["sweep_dtype"] = sweep_dtype
+    return rec
 
 
 def run_distributed(dataset: str, n_probe: int, use_kernel: bool,
@@ -133,10 +138,12 @@ def run_distributed(dataset: str, n_probe: int, use_kernel: bool,
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--datasets", nargs="+", default=["movielens", "amazon"])
-    ap.add_argument("--use-kernel", choices=["on", "off", "both"],
+    ap.add_argument("--use-kernel", choices=["on", "off", "both", "fused"],
                     default="both",
                     help="fused zero-materialization path, XLA-gather "
-                         "baseline, or both for a side-by-side")
+                         "baseline, or both for a side-by-side; 'fused' "
+                         "measures ONLY the one-kernel Gibbs sweep "
+                         "(kernels/bmf_sweep, fp32 + bf16 rows)")
     ap.add_argument("--distributed", action="store_true",
                     help="also measure the shard_map'd sweep, psum and "
                          "scatter-V variants crossed with the kernel paths")
@@ -146,12 +153,19 @@ def main():
     args = ap.parse_args()
     recs = []
     for d in args.datasets:
-        for uk in KERNEL_PATHS[args.use_kernel]:
+        for uk in KERNEL_PATHS.get(args.use_kernel, []):
             recs.append(run(d, n_probe=args.n_probe, use_kernel=uk))
             if args.distributed:
                 for sv in (False, True):
                     recs.append(run_distributed(d, n_probe=args.n_probe,
                                                 use_kernel=uk, scatter_v=sv))
+        # the one-kernel sweep rides along with 'both' (artifact
+        # regeneration keeps every hot path side by side) and is the sole
+        # subject of 'fused' (the CI smoke): fp32 and bf16 rows each
+        if args.use_kernel in ("both", "fused"):
+            for dt in ("fp32", "bf16"):
+                recs.append(run(d, n_probe=args.n_probe,
+                                sweep_fused=True, sweep_dtype=dt))
     if args.json_out:
         payload = {"benchmark": "table1_throughput",
                    "backend": jax.default_backend(),

@@ -62,8 +62,12 @@ register(Pass(
 
 
 # fp32-required linear-algebra primitives: the Cholesky factor/solve path
-# of the posterior update loses PD-ness in half precision
-_FP32_REQUIRED = ("cholesky", "triangular_solve")
+# of the posterior update loses PD-ness in half precision.  ``sqrt`` is
+# the in-register Cholesky diagonal of the fused sweep kernel
+# (kernels/bmf_sweep hand-rolls the factorization, so no cholesky
+# primitive appears in its jaxpr — the diagonal sqrt is the operand the
+# mixed-precision mode must keep f32)
+_FP32_REQUIRED = ("cholesky", "triangular_solve", "sqrt")
 _LOW_PRECISION = ("bfloat16", "float16")
 
 
@@ -104,8 +108,8 @@ def _dtype_promotion(art: JaxprArtifact) -> List[Violation]:
 
 register(Pass(
     "dtype-promotion", "jaxpr",
-    "no silent f64 upcast; Cholesky/triangular-solve operands are never "
-    "bf16/f16",
+    "no silent f64 upcast; Cholesky/triangular-solve/sqrt operands are "
+    "never bf16/f16",
     _dtype_promotion))
 
 

@@ -35,6 +35,14 @@ class BMFConfig(NamedTuple):
     # phases b/c, justified by the informative propagated priors.
     # None = paper-faithful (same n_samples everywhere).
     phase_bc_samples: Optional[int] = None
+    # one-kernel Gibbs sweep (kernels/bmf_sweep): the whole factor step —
+    # gather, Λ/η accumulate, Cholesky, triangular solves, noise add — as a
+    # single pass (Pallas on TPU, bitwise-identical striped XLA elsewhere).
+    # sweep_dtype: 'fp32', or 'bf16' for the mixed-precision mode (bf16
+    # gather/accumulate, f32 factorization) gated by the conformance
+    # suite's RMSE-parity check.
+    sweep_fused: bool = False
+    sweep_dtype: str = "fp32"
 
 
 def sufficient_stats(csr: PaddedCSR, other: jnp.ndarray, tau: float,

@@ -419,15 +419,24 @@ def _sharded_u_sampler(cfg: BMF.BMFConfig, N: int, N_pad: int,
             _pad_rows_to(u_prior.eta, N_pad), lo, N_loc, 0)
         pr_lam = jax.lax.dynamic_slice_in_dim(
             _pad_rows_to(u_prior.Lambda, N_pad), lo, N_loc, 0)
-        Lam_c, eta_c = BMF.sufficient_stats(csr_loc, V, cfg.tau,
-                                            cfg.use_kernel)
-        cond = RowGaussians(eta=pr_eta + eta_c, Lambda=pr_lam + Lam_c)
         # the reference draw: sample_rows(ku, cond_full) pulls
         # normal(ku, (N, K)) — replicate it and slice this shard's rows
         # (padded rows get zero noise; their samples are never read)
         z = _pad_rows_to(jax.random.normal(ku, (N, K), jnp.float32), N_pad)
         z_loc = jax.lax.dynamic_slice_in_dim(z, lo, N_loc, 0)
-        U_loc = POST.sample_rows_noise(cond, z_loc)
+        if cfg.sweep_fused:
+            # one-kernel sweep on the local row shard: the per-row math is
+            # row-local and the noise slice is the reference stream, so the
+            # gathered factor matches the single-device fused step exactly
+            from repro.kernels.bmf_sweep import ops as SWEEP
+            U_loc = SWEEP.fused_sweep(
+                z_loc, csr_loc.idx, csr_loc.val, csr_loc.mask,
+                pr_eta, pr_lam, V, cfg.tau, dtype=cfg.sweep_dtype)
+        else:
+            Lam_c, eta_c = BMF.sufficient_stats(csr_loc, V, cfg.tau,
+                                                cfg.use_kernel)
+            cond = RowGaussians(eta=pr_eta + eta_c, Lambda=pr_lam + Lam_c)
+            U_loc = POST.sample_rows_noise(cond, z_loc)
         U_full = jax.lax.all_gather(U_loc, DATA_AXIS, tiled=True)
         return U_full[:N]
 
@@ -439,7 +448,13 @@ def _sharded_v_sampler(cfg: BMF.BMFConfig, D: int, D_pad: int, N_pad: int,
     """V-step over the 'data' axis from per-shard transposed planes:
     partial item stats reduced by psum ('psum' — ref [16] Fig. 2,
     replicated sampling under a shared key) or psum_scatter + local
-    sampling + all_gather ('scatter' — §Perf H6 half-ring-bytes)."""
+    sampling + all_gather ('scatter' — §Perf H6 half-ring-bytes).
+
+    This step stays UNFUSED under ``cfg.sweep_fused``: the psum/scatter
+    collective splits the Λ/η accumulate from the sample across devices,
+    which is exactly the fusion boundary the one-kernel sweep removes on
+    a single device — there is no single pass to fuse here (documented in
+    kernels/bmf_precision/README.md)."""
     K = cfg.K
     N_loc = N_pad // n_shards
     D_loc = D_pad // n_shards

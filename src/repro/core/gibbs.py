@@ -61,9 +61,22 @@ def chain_health(*trees) -> jnp.ndarray:
 def _summarize(sum_, outer, cnt, ridge=1e-4):
     mean = sum_ / cnt
     cov = outer / cnt - jnp.einsum("nk,nl->nkl", mean, mean)
+    K = mean.shape[-1]
+    # The ridge keeps the moment estimate PD for the Cholesky below, but an
+    # ABSOLUTE 1e-4 is meaningless against the row's scale: a near-singular
+    # row whose variances sit at 1e4 gets a 1e-8-relative nudge (still
+    # numerically indefinite), while a 1e-6-scale row gets drowned.  Scale
+    # it by the row's largest diagonal — the same eigenvalue-magnitude
+    # rationale as the serving store's PD projection — floored at the old
+    # absolute value so O(1)-scale rows (every existing chain) are
+    # bit-for-bit unchanged.
+    mag = jnp.max(jnp.abs(jnp.diagonal(cov, axis1=-2, axis2=-1)),
+                  axis=-1, keepdims=True)
+    row_ridge = ridge * jnp.maximum(mag, 1.0)                    # (N, 1)
+    cov = cov + row_ridge[..., None] * jnp.eye(K, dtype=cov.dtype)
     # Cholesky factor/solve: O(K³/3) per row + triangular solves, no
-    # explicit inverse (the ridge keeps the moment estimate PD)
-    return POST.from_moments_cov(mean, cov, ridge=ridge)
+    # explicit inverse
+    return POST.from_moments_cov(mean, cov, ridge=0.0)
 
 
 def _run_gibbs_dispatch(key, csr_rows_arrs, csr_cols_arrs, test_rows,
@@ -284,12 +297,23 @@ def _run_gibbs_impl(key, csr_rows, csr_cols, test_rows, test_cols, cfg,
     D = csr_cols.n_rows if n_cols is None else n_cols
     K = cfg.K
     nw = POST.default_nw(K)
+    if cfg.sweep_fused:
+        # one-kernel sweep: the whole factor step in a single pass (Pallas
+        # on TPU, the bitwise-identical striped-XLA fallback elsewhere).
+        # The noise stream matches sample_factor's draw exactly, so this is
+        # a pure execution-strategy switch for every executor that leaves
+        # these seams at their defaults.
+        from repro.kernels.bmf_sweep import ops as SWEEP
+        default_sampler = lambda k, csr, other, prior: \
+            SWEEP.sample_factor_fused(k, csr, other, cfg.tau, prior,
+                                      dtype=cfg.sweep_dtype)
+    else:
+        default_sampler = lambda k, csr, other, prior: BMF.sample_factor(
+            k, csr, other, cfg.tau, prior, cfg.use_kernel)
     if u_sampler is None:
-        u_sampler = lambda k, csr, other, prior: BMF.sample_factor(
-            k, csr, other, cfg.tau, prior, cfg.use_kernel)
+        u_sampler = default_sampler
     if v_sampler is None:
-        v_sampler = lambda k, csr, other, prior: BMF.sample_factor(
-            k, csr, other, cfg.tau, prior, cfg.use_kernel)
+        v_sampler = default_sampler
 
     acc0 = GibbsAccumulators(
         pred_sum=jnp.zeros_like(test_rows, dtype=jnp.float32),

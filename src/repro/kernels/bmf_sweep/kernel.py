@@ -1,0 +1,277 @@
+"""Pallas TPU kernel: ONE-pass fused Gibbs sweep for a BMF factor step.
+
+kernels/bmf_precision fused the gather + Λ/η accumulation but still returned
+the (N, K, K)/(N, K) sufficient stats to HBM, where XLA ran the Cholesky
+solve and the noise draw as separate kernels — three HBM round-trips per
+factor step.  This kernel chains the whole per-row conditional
+
+    gather v_d rows → Λ/η accumulate → small-K Cholesky → two triangular
+    solves + noise add   (u = Λ⁻¹η + L⁻ᵀ z, the ``sample_rows_noise`` split)
+
+inside one pallas_call: the (TN, K, K) precision block lives ONLY in VMEM
+scratch, and the single HBM-resident output is the sampled factor block
+(TN, K).  The grid, scalar-prefetched CSR planes, DMA row pump, and
+nnz-aware tile skip are bmf_precision's exactly (imported constants);
+what is new is the ``m == last`` epilogue that factors and samples in
+registers instead of writing Λ/η out.
+
+Small-K linear algebra without dynamic lane indexing: TPU vector layouts
+forbid addressing individual lanes, so the Cholesky and the triangular
+solves are written as fori_loops over columns where every "element access"
+is a masked broadcasted-iota reduction and every "element write" is a
+masked add into a zero lane.  That costs O(K) vector ops per column —
+O(K²) total per row on top of the O(K³) multiply work — which is cheap
+for the K ≤ 32 regime this kernel targets (ops.py falls back above it).
+
+Noise contract: the caller supplies z = normal(key, (N, K)) — the SAME
+draw ``posterior.sample_rows`` makes — so the chain's random stream is
+bitwise-preserved no matter which path (kernel / fallback / legacy
+unfused) executes the sweep.
+
+Mixed precision: the gather scratch and the Λ accumulate run in the
+factor's dtype (bf16 in mixed mode) with f32 MXU accumulation
+(``preferred_element_type``); the Λ/η scratches, priors, Cholesky, and
+solves are f32 ALWAYS — bf16 never reaches the factorization (the
+bmf_lint dtype pass proves this over the lowered jaxpr).
+
+Bitwise parity with the off-TPU fallback is BY CONSTRUCTION: ref.py runs
+``accum_tile``/``sample_tile`` — the same helpers below — over the same
+padded planes in the same M-tile order, so interpret-mode Pallas and the
+striped-XLA fallback agree bit-for-bit (tests/test_sweep_kernel.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.bmf_precision.kernel import DMA_LOOKAHEAD, LANES, TM, TN
+
+__all__ = ["accum_tile", "sample_tile", "chol_tile", "solve_lower_tile",
+           "solve_upper_tile", "fused_sweep_padded",
+           "TN", "TM", "LANES", "DMA_LOOKAHEAD"]
+
+
+# ---------------------------------------------------------------------------
+# Shared tile math — called by BOTH the Pallas kernel body and the striped
+# XLA fallback (ref.py).  Everything here is per-row batched (leading axis B)
+# with no cross-row reductions, so results are independent of how rows are
+# batched into tiles — the property the bitwise parity tests rely on.
+# ---------------------------------------------------------------------------
+
+
+def accum_tile(lam, eta, v, w, r, tau):
+    """Fold one M-tile of gathered factor rows into the (Λ, η) accumulators.
+
+    lam (B, K, K) f32, eta (B, K) f32; v (B, tm, K) in the gather dtype
+    (f32 or bf16); w/r (B, tm) f32 mask/value planes.  The Λ matmul runs on
+    the gather dtype with f32 accumulation — the mixed-precision contract."""
+    vm = v * w.astype(v.dtype)[..., None]
+    lam = lam + tau * jax.lax.dot_general(
+        vm, v, (((1,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+    eta = eta + tau * jnp.einsum(
+        "nm,nmk->nk", r * w, v, preferred_element_type=jnp.float32)
+    return lam, eta
+
+
+def _kk_iota(K, dtype=jnp.float32):
+    rows = jax.lax.broadcasted_iota(jnp.int32, (K, K), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (K, K), 1)
+    return rows, cols
+
+
+def chol_tile(A):
+    """Batched left-looking Cholesky of (B, K, K) SPD tiles.
+
+    Column j of L needs only columns < j — which are the only nonzeros of
+    the running factor — so the cross-term Σ_{p<j} L[i,p]·L[j,p] is the
+    FULL-K contraction against row j (zeros beyond p<j contribute exactly
+    nothing).  Element reads/writes are masked-iota reductions/adds: no
+    dynamic lane indexing anywhere."""
+    B, K, _ = A.shape
+    rows, cols = _kk_iota(K)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, K), 1)
+
+    def col(j, L):
+        colsel = (cols == j).astype(A.dtype)            # one-hot column j
+        rowsel = (rows == j).astype(A.dtype)            # one-hot row j
+        a_col = jnp.sum(A * colsel[None], axis=2)       # (B, K) = A[:, :, j]
+        l_row = jnp.sum(L * rowsel[None], axis=1)       # (B, K) = L[:, j, :]
+        # s_i = Σ_p L[i, p] · L[j, p]; at i = j this is Σ L[j, p]²
+        s = jax.lax.dot_general(L, l_row,
+                                (((2,), (1,)), ((0,), (0,))))
+        a_jj = jnp.sum(a_col * (lane == j).astype(A.dtype), axis=1)
+        sq = jnp.sum(l_row * l_row, axis=1)
+        ljj = jnp.sqrt(a_jj - sq)                       # (B,)
+        below = (lane > j).astype(A.dtype)              # strictly-lower mask
+        at_j = (lane == j).astype(A.dtype)
+        newcol = (a_col - s) / ljj[:, None] * below + ljj[:, None] * at_j
+        return L + newcol[:, :, None] * colsel[None]    # write column j
+
+    return jax.lax.fori_loop(0, K, col, jnp.zeros_like(A))
+
+
+def solve_lower_tile(L, b):
+    """Forward substitution y = L⁻¹ b for (B, K, K) lower tiles."""
+    B, K = b.shape
+    rows, _ = _kk_iota(K)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, K), 1)
+
+    def step(j, y):
+        rowsel = (rows == j).astype(L.dtype)
+        l_row = jnp.sum(L * rowsel[None], axis=1)       # (B, K) = L[:, j, :]
+        s = jnp.sum(l_row * y, axis=1)                  # y zeroed for p ≥ j
+        at_j = (lane == j).astype(L.dtype)
+        bj = jnp.sum(b * at_j, axis=1)
+        ljj = jnp.sum(l_row * at_j, axis=1)
+        return y + ((bj - s) / ljj)[:, None] * at_j
+
+    return jax.lax.fori_loop(0, K, step, jnp.zeros_like(b))
+
+
+def solve_upper_tile(L, b):
+    """Backward substitution x = L⁻ᵀ b (solve against the TRANSPOSE of the
+    lower factor — the covariance half of the ``sample_rows_noise`` split)."""
+    B, K = b.shape
+    _, cols = _kk_iota(K)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, K), 1)
+
+    def step(t, x):
+        j = K - 1 - t
+        colsel = (cols == j).astype(L.dtype)
+        l_col = jnp.sum(L * colsel[None], axis=2)       # (B, K) = L[:, :, j]
+        s = jnp.sum(l_col * x, axis=1)                  # x zeroed for p ≤ j
+        at_j = (lane == j).astype(L.dtype)
+        bj = jnp.sum(b * at_j, axis=1)
+        ljj = jnp.sum(l_col * at_j, axis=1)
+        return x + ((bj - s) / ljj)[:, None] * at_j
+
+    return jax.lax.fori_loop(0, K, step, jnp.zeros_like(b))
+
+
+def sample_tile(lam, eta, prior_lam, prior_eta, z, jitter):
+    """Finish one row tile: add the prior, factor, and draw the sample.
+
+    Mirrors ``posterior.sample_rows_noise`` exactly — Λ += jitter·I,
+    μ = Λ⁻¹η via forward+backward solve, δ = L⁻ᵀ z — with the in-register
+    solvers above.  All f32: bf16 stops at the accumulate."""
+    K = eta.shape[-1]
+    rows, cols = _kk_iota(K)
+    eye = (rows == cols).astype(jnp.float32)
+    A = lam + prior_lam + jitter * eye[None]
+    b = eta + prior_eta
+    L = chol_tile(A)
+    mu = solve_upper_tile(L, solve_lower_tile(L, b))
+    delta = solve_upper_tile(L, z)
+    return mu + delta
+
+
+# ---------------------------------------------------------------------------
+# The Pallas kernel
+# ---------------------------------------------------------------------------
+
+
+def _sweep_kernel(idx_ref, ntiles_ref, val_ref, mask_ref, peta_ref, plam_ref,
+                  z_ref, other_ref, u_ref, lam_ref, eta_ref, vg_ref, sem, *,
+                  tau: float, tm: int, jitter: float):
+    n = pl.program_id(0)
+    m = pl.program_id(1)
+
+    @pl.when(m == 0)
+    def _init():
+        lam_ref[...] = jnp.zeros_like(lam_ref)
+        eta_ref[...] = jnp.zeros_like(eta_ref)
+        u_ref[...] = jnp.zeros_like(u_ref)
+
+    @pl.when(m < ntiles_ref[n])
+    def _accumulate():
+        G = TN * tm
+
+        def row_copy(s):
+            # slot s of this tile gathers factor row idx[r, c]
+            r = n * TN + s // tm
+            c = m * tm + s % tm
+            row = idx_ref[r, c]
+            return pltpu.make_async_copy(other_ref.at[pl.ds(row, 1)],
+                                         vg_ref.at[pl.ds(s, 1)], sem)
+
+        def warmup(s, carry):
+            row_copy(s).start()
+            return carry
+
+        jax.lax.fori_loop(0, DMA_LOOKAHEAD, warmup, None)
+
+        def pump(s, carry):
+            @pl.when(s + DMA_LOOKAHEAD < G)
+            def _():
+                row_copy(s + DMA_LOOKAHEAD).start()
+            row_copy(s).wait()
+            return carry
+
+        jax.lax.fori_loop(0, G, pump, None)
+
+        v = vg_ref[...].reshape(TN, tm, -1)             # gather dtype
+        lam, eta = accum_tile(lam_ref[...], eta_ref[...], v,
+                              mask_ref[...], val_ref[...], tau)
+        lam_ref[...] = lam
+        eta_ref[...] = eta
+
+    @pl.when(m == pl.num_programs(1) - 1)
+    def _solve_and_sample():
+        # epilogue: Λ/η never leave VMEM — prior add, in-register Cholesky,
+        # triangular solves, and the noise add all happen here, and the only
+        # HBM write of the whole factor step is this (TN, K) sample block
+        u_ref[...] = sample_tile(lam_ref[...], eta_ref[...], plam_ref[...],
+                                 peta_ref[...], z_ref[...], jitter)
+
+
+def fused_sweep_padded(idx, ntiles, val, mask, prior_eta, prior_lam, z,
+                       other, tau: float, *, tm: int = TM,
+                       jitter: float = 1e-6, interpret: bool = False):
+    """idx/val/mask: (N, M) with N % TN == 0, M % tm == 0; ntiles: (N/TN,)
+    live-M-tile counts; prior_eta/z: (N, K), prior_lam: (N, K, K) f32 with
+    pad lanes carrying an identity diagonal; other: (D, K), HBM-resident.
+    Returns the sampled factor U (N, K) — no (N, K, K) HBM intermediate."""
+    N, M = idx.shape
+    D, K = other.shape
+    assert N % TN == 0 and M % tm == 0, (N, M, tm)
+    grid = (N // TN, M // tm)
+
+    def live_block(n, m, idx_ref, ntiles_ref):
+        # skipped steps re-point at the tile's last live block: the pipeline
+        # sees the same block index and elides the copy entirely
+        return (n, jnp.minimum(m, jnp.maximum(ntiles_ref[n], 1) - 1))
+
+    def row_block(n, m, *_):
+        return (n, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TN, tm), live_block),             # val
+            pl.BlockSpec((TN, tm), live_block),             # mask
+            pl.BlockSpec((TN, K), row_block),               # prior eta
+            pl.BlockSpec((TN, K, K), lambda n, m, *_: (n, 0, 0)),
+            pl.BlockSpec((TN, K), row_block),               # noise z
+            pl.BlockSpec(memory_space=pltpu.ANY),           # other: HBM
+        ],
+        out_specs=pl.BlockSpec((TN, K), row_block),
+        scratch_shapes=[
+            pltpu.VMEM((TN, K, K), jnp.float32),            # Λ accumulator
+            pltpu.VMEM((TN, K), jnp.float32),               # η accumulator
+            pltpu.VMEM((TN * tm, K), other.dtype),          # gathered rows
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    kernel = functools.partial(_sweep_kernel, tau=tau, tm=tm, jitter=jitter)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N, K), jnp.float32),
+        interpret=interpret,
+    )(idx, ntiles, val, mask, prior_eta, prior_lam, z, other)

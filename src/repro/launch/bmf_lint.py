@@ -41,6 +41,12 @@ all-users x all-items (N, M) score matrix or a host callback inside the
 scoring executable is a violation — plus the ``MicroBatchRouter`` bucket
 plan (recompilation budget).
 
+And the one-kernel SWEEP path (executor-independent, once per run): the
+``kernels.bmf_sweep`` factor-step jaxpr and the ``sweep_fused`` chain
+executable, fp32 and bf16, against the block materialization budget; the
+dtype pass proves bf16 never reaches a cholesky/triangular_solve/sqrt
+operand in the mixed-precision lowering.
+
 Emits a machine-readable JSON report (one violation object per breach,
 with fix-hint text) and exits non-zero on any violation — the CI
 lint-invariants job gates on that.
@@ -248,6 +254,48 @@ def lint_serving():
     }, violations
 
 
+def sweep_artifacts(cfg):
+    """The one-kernel Gibbs sweep's lintable surface (executor-independent,
+    both precision modes): the op-level factor-step jaxpr through
+    ``bmf_sweep.ops.trace_sweep`` (materialization budget = the SAME block
+    budget the chains get — the fused path's striped gather tiles and
+    padded planes must fit where the legacy path's did), plus the full
+    chain executable with ``sweep_fused`` on through ``gibbs.trace_chain``.
+    The dtype pass over the bf16 lowerings proves the mixed-precision
+    contract: bf16 never reaches a cholesky/triangular_solve/sqrt operand
+    (the sqrt IS the in-register Cholesky diagonal — the kernel hand-rolls
+    the factorization, so no cholesky primitive appears)."""
+    from repro.kernels.bmf_sweep import ops as SWEEP
+    d = LINT_DIMS
+    n, c, mr, mc, nt = (d["n_rows"], d["n_cols"], d["m_rows"], d["m_cols"],
+                        d["n_test"])
+    b1 = LINT.jaxpr_passes.materialization_budget(n, c, mr, mc, cfg.K)
+    arts = []
+    for dt in SWEEP.SWEEP_DTYPES:
+        ts = SWEEP.trace_sweep(cfg.K, n, mr, c, dtype=dt)
+        arts.append(LINT.JaxprArtifact(
+            label=f"sweep/factor_step[{dt}]/jaxpr",
+            jaxpr=ts.traced.jaxpr, bytes_budget=b1))
+        cfg_f = cfg._replace(sweep_fused=True, sweep_dtype=dt)
+        tc = GIBBS.trace_chain(cfg_f, n, c, mr, mc, nt)
+        arts += _chain_artifacts(f"sweep/chain[{dt}]", tc, comm=None,
+                                 allowed_groups=None, budget=b1)
+    return arts
+
+
+def lint_sweep(cfg):
+    arts = sweep_artifacts(cfg)
+    violations = []
+    for a in arts:
+        violations += LINT.analyze(a)
+    return {
+        "executor": "sweep",
+        "topology": [1, 1],
+        "artifacts": [a.label for a in arts],
+        "violations": [v.as_dict() for v in violations],
+    }, violations
+
+
 def lint_executor(name, topo, part, cfg, test, key):
     arts = static_artifacts(name, topo, cfg)
     arts += behavioral_artifacts(name, topo, part, cfg, test, key)
@@ -311,6 +359,11 @@ def main(argv=None):
     runs.append(rec)
     all_violations += vs
     print(f"[bmf_lint] serving: {len(rec['artifacts'])} artifact(s), "
+          f"{len(vs)} violation(s)")
+    rec, vs = lint_sweep(cfg)
+    runs.append(rec)
+    all_violations += vs
+    print(f"[bmf_lint] sweep: {len(rec['artifacts'])} artifact(s), "
           f"{len(vs)} violation(s)")
 
     report = {

@@ -69,6 +69,15 @@ def main():
                          "groups x DATA devices per group (unified "
                          "core.topology mesh)")
     ap.add_argument("--phase-bc-samples", type=int, default=0)
+    ap.add_argument("--fused-sweep", action="store_true",
+                    help="one-kernel Gibbs sweep (kernels/bmf_sweep): the "
+                         "whole factor step in one pass — Pallas on TPU, "
+                         "bitwise-identical striped XLA elsewhere")
+    ap.add_argument("--sweep-dtype", default="fp32",
+                    choices=["fp32", "bf16"],
+                    help="fused-sweep precision: bf16 runs the gather + "
+                         "precision accumulate in bf16 (f32 factorization "
+                         "always); only meaningful with --fused-sweep")
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--ckpt-dir", default="",
                     help="block-level phase-graph checkpoint directory: "
@@ -101,7 +110,9 @@ def main():
     K = args.k or min(p.K, 16)
     cfg = BMF.BMFConfig(K=K, n_samples=args.samples,
                         burnin=args.samples // 3,
-                        phase_bc_samples=args.phase_bc_samples or None)
+                        phase_bc_samples=args.phase_bc_samples or None,
+                        sweep_fused=args.fused_sweep,
+                        sweep_dtype=args.sweep_dtype)
 
     I, J = suggest_grid(train.n_rows, train.n_cols, args.blocks)
     part = partition(train, I, J)

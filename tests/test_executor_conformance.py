@@ -205,6 +205,47 @@ def test_aggregation_transfer_guard_clean(conf_run, results, name,
 
 
 # ---------------------------------------------------------------------------
+# mixed-precision fused sweep — the bf16 RMSE-parity gate
+# ---------------------------------------------------------------------------
+
+# |RMSE(bf16 fused, executor) - RMSE(fp32 fused, serial)| gate. Measured
+# drift on this fixture is ~1e-4 across every executor; the gate leaves
+# two orders of headroom while still catching a half-precision leak into
+# the factor/solve path (which blows drift past 0.1 immediately).
+BF16_RMSE_GATE = 1e-2
+
+
+@pytest.fixture(scope="module")
+def mixed_precision_ref():
+    """movielens 8x2 with the fused sweep on — big enough that per-row
+    conditionals are data-dominated (the regime where bf16 accumulation
+    error would actually surface), short chains to keep it tier-1."""
+    coo, p = SYN.generate("movielens", seed=13)
+    train, test = train_test_split(coo, 0.15, seed=14)
+    part = partition(train, 8, 2)
+    cfg = BMF.BMFConfig(K=min(p.K, 16), n_samples=5, burnin=1,
+                        sweep_fused=True, sweep_dtype="fp32")
+    key = jax.random.key(5)
+    ref = PP.run_pp(key, part, cfg, test, executor="serial")
+    return part, cfg, test, key, ref
+
+
+@pytest.mark.parametrize("name", EXECUTOR_NAMES)
+def test_bf16_fused_rmse_parity(mixed_precision_ref, name):
+    """Every registered executor must hold the bf16 fused sweep inside
+    the RMSE-parity gate against the fp32 serial reference — the
+    conformance-side proof that mixed precision stays confined to the
+    gather/accumulate half of the kernel."""
+    part, cfg, test, key, ref = mixed_precision_ref
+    res = PP.run_pp(key, part, cfg._replace(sweep_dtype="bf16"), test,
+                    executor=_make(name))
+    assert res.executor == name
+    assert res.n_test == ref.n_test > 0
+    assert abs(res.rmse - ref.rmse) < BF16_RMSE_GATE, \
+        (name, res.rmse, ref.rmse)
+
+
+# ---------------------------------------------------------------------------
 # composed (2-D topology) executor variants — faked 4-device mesh
 # ---------------------------------------------------------------------------
 
